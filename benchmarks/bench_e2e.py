@@ -1,0 +1,38 @@
+"""Fig. 31.1.6 — end-to-end measurement reproduction: the cumulative
+configuration table across calibrated TLM/DLM pairs, checked against every
+paper band."""
+from repro.core.perfmodel import PAPER_BANDS, fig6_table
+
+
+def run():
+    rows = []
+    table = fig6_table(n_tokens=4096)
+    all_ok = True
+    for r in table:
+        ok = all([
+            PAPER_BANDS["lru_speedup"][0] <= r["lru_speedup"] <= PAPER_BANDS["lru_speedup"][1],
+            PAPER_BANDS["bvq_speedup"][0] <= r["bvq_speedup"] <= PAPER_BANDS["bvq_speedup"][1],
+            PAPER_BANDS["apsd_speedup"][0] <= r["apsd_speedup"] <= PAPER_BANDS["apsd_speedup"][1],
+            PAPER_BANDS["total_speedup"][0] <= r["total_speedup"] <= PAPER_BANDS["total_speedup"][1],
+            PAPER_BANDS["tok_per_s"][0] <= r["tok_per_s"] <= PAPER_BANDS["tok_per_s"][1],
+            PAPER_BANDS["energy_savings"][0] <= r["energy_savings"] <= PAPER_BANDS["energy_savings"][1],
+        ])
+        all_ok &= ok
+        rows.append((
+            f"e2e_{r['pair']}", 0.0,
+            f"lru={r['lru_speedup']:.2f}x bvq={r['bvq_speedup']:.2f}x "
+            f"apsd={r['apsd_speedup']:.2f}x total={r['total_speedup']:.2f}x "
+            f"tok/s={r['tok_per_s']:.1f} e={r['energy_savings']:.2f}x "
+            f"mJ/tok={r['mj_per_token']:.1f} {'IN-BAND' if ok else 'OUT'}",
+        ))
+    tps = [r["tok_per_s"] for r in table]
+    tot = [r["total_speedup"] for r in table]
+    rows.append(("e2e_throughput_range", 0.0,
+                 f"{min(tps):.2f}-{max(tps):.2f} tok/s (paper: 14.08-135.69)"))
+    rows.append(("e2e_total_speedup_range", 0.0,
+                 f"{min(tot):.2f}-{max(tot):.2f}x (paper: 4.46-7.17x)"))
+    mj = next(r["mj_per_token"] for r in table if r["pair"].startswith("llama2-7b"))
+    rows.append(("e2e_llama2_7b_mj_per_token", 0.0,
+                 f"{mj:.2f} (paper: 123.41)"))
+    rows.append(("e2e_all_pairs_in_all_bands", 0.0, str(all_ok)))
+    return rows

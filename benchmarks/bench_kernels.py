@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — functional timing)
+vs pure-jnp reference; shapes from the paper's worked examples."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bvq, quantization as q
+from repro.kernels import ref
+from repro.kernels.bvq_matmul import bvq_matmul_pallas
+from repro.kernels.fwht import block_rotate_pallas
+from repro.kernels.w4a8_matmul import w4a8_matmul_pallas
+
+
+def _time(fn, iters=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.RandomState(0)
+    rows = []
+    # FWHT (LLaMA3-8B down_proj block: 14336 = 8 blocks of 28*2^6)
+    x = jnp.asarray(rng.randn(16, 14336).astype(np.float32))
+    rows.append(("fwht_pallas_14336", _time(
+        lambda: block_rotate_pallas(x, 28, 6).block_until_ready()), "m=28,k=6"))
+    rows.append(("fwht_ref_14336", _time(
+        lambda: ref.block_rotate_ref(x, 28, 6).block_until_ready()), "oracle"))
+
+    # W4A8 GEMM (decode GEMV-ish)
+    xq = jnp.asarray(rng.randint(-127, 128, (16, 4096)).astype(np.int8))
+    wq = jnp.asarray(rng.randint(-7, 8, (4096, 1024)).astype(np.int8))
+    wp = q.pack_int4(wq, axis=0)
+    sx = jnp.asarray(rng.rand(16, 1).astype(np.float32))
+    sw = jnp.asarray(rng.rand(1, 1024).astype(np.float32))
+    rows.append(("w4a8_pallas_16x4096x1024", _time(
+        lambda: w4a8_matmul_pallas(xq, wp, sx, sw).block_until_ready()), ""))
+    rows.append(("w4a8_ref_16x4096x1024", _time(
+        lambda: ref.w4a8_matmul_ref2(xq, wp, sx, sw).block_until_ready()), "oracle"))
+
+    # BVQ matmul
+    cfg = bvq.BVQConfig(vec_dim=8, codebook_size=64, block_cols=64,
+                        kmeans_iters=4, qat_steps=0)
+    w = jnp.asarray(rng.randn(1024, 512).astype(np.float32))
+    bw = bvq.bvq_compress(w, cfg, jax.random.PRNGKey(0))
+    xb = jnp.asarray(rng.randn(16, 1024).astype(np.float32))
+    rows.append(("bvq_pallas_16x1024x512", _time(
+        lambda: bvq_matmul_pallas(xb, bw).block_until_ready()), ""))
+    rows.append(("bvq_ref_16x1024x512", _time(
+        lambda: ref.bvq_matmul_ref2(xb, bw).block_until_ready()), "oracle"))
+    return rows

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (  # noqa: F401
+    AsyncCheckpointer,
+    load_checkpoint,
+    latest_step,
+    save_checkpoint,
+)

@@ -1,0 +1,265 @@
+"""APSD — Adaptive Parallel Speculative Decoding (paper Fig. 31.1.5).
+
+PEARL-style parallel draft-and-verify keeps the DLM busy *while* the TLM
+verifies: during verification of window W_i the DLM already drafts W_{i+1}
+assuming W_i is fully accepted.  With long draft lengths most of those
+speculative drafts are rejected (>90% at long DL per the paper); vanilla
+short-DL SD wastes TLM bandwidth instead.  APSD adaptively switches:
+
+  * NONPAR: short-DL sequential draft->verify (safe, low rejection);
+  * PAR:    long-DL parallel draft-and-verify.  Stay in PAR only while
+        (a) the TLM accepted ALL tokens of the previous window, and
+        (b) the TLM's newly emitted (bonus) token equals the FIRST token of
+            the concurrently drafted window (the DLM's guess for that same
+            position).
+    Otherwise the concurrent draft is discarded and APSD reverts to NONPAR.
+
+The controller is a pure state machine (``APSDPolicy``) shared by the real
+serving driver below, the WDOS discrete-event simulation
+(core/scheduler.py) and the analytic performance model (core/perfmodel.py).
+On the chip, "parallel" means the WDOS issues DLM-draft and TLM-verify
+instructions to decoupled queues; on a TPU mesh it means both steps are
+dispatched in one program against disjoint mesh slices (serving/engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.speculative import (
+    LMInterface,
+    SDConfig,
+    _probs,
+    speculative_accept_greedy,
+    speculative_sample,
+)
+
+__all__ = ["APSDConfig", "APSDPolicy", "RoundRecord", "apsd_generate", "APSDStats"]
+
+NONPAR = 0
+PAR = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class APSDConfig:
+    short_dl: int = 2  # non-parallel draft length
+    long_dl: int = 6  # parallel draft length
+    temperature: float = 0.0
+    max_tokens: int = 64
+
+
+class APSDPolicy:
+    """The paper's mode-switch rule, isolated for reuse in simulators."""
+
+    @staticmethod
+    def next_mode(mode: int, all_accepted: bool, first_match: bool) -> int:
+        if mode == NONPAR:
+            # a fully-accepted short window is evidence drafting is easy
+            return PAR if all_accepted else NONPAR
+        return PAR if (all_accepted and first_match) else NONPAR
+
+
+class RoundRecord(NamedTuple):
+    mode: int  # NONPAR / PAR
+    drafted: int  # tokens proposed by DLM this round (incl. discarded)
+    accepted: int  # draft tokens committed
+    emitted: int  # accepted + 1 (bonus/correction)
+    discarded: int  # concurrent-draft tokens thrown away
+
+
+class APSDStats(NamedTuple):
+    emitted: int
+    rounds: int
+    drafted: int
+    accepted: int
+    discarded: int
+    par_rounds: int
+    records: Tuple[RoundRecord, ...]
+
+    @property
+    def rejected_ratio(self) -> float:
+        return 1.0 - self.accepted / max(self.drafted, 1)
+
+    @property
+    def tokens_per_round(self) -> float:
+        return self.emitted / max(self.rounds, 1)
+
+
+def _draft_tokens(
+    key: Optional[jax.Array],
+    draft: LMInterface,
+    draft_params: Any,
+    d_cache: Any,
+    start_tok: jnp.ndarray,
+    n: int,
+    temperature: float,
+):
+    """DLM drafts n tokens autoregressively from start_tok."""
+    toks, qrows = [], []
+    cur = start_tok
+    for _ in range(n):
+        lg, d_cache = draft.extend(draft_params, cur.reshape(1, 1), d_cache)
+        if temperature <= 0.0:
+            nxt = jnp.argmax(lg[0, -1])
+        else:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg[0, -1] / temperature)
+        qrows.append(_probs(lg[0, -1], temperature))
+        toks.append(nxt.astype(jnp.int32))
+        cur = nxt
+    return jnp.stack(toks), jnp.stack(qrows), d_cache, key
+
+
+def _verify(
+    key: Optional[jax.Array],
+    target: LMInterface,
+    target_params: Any,
+    t_cache: Any,
+    prev_tok: jnp.ndarray,
+    draft_toks: jnp.ndarray,
+    q_rows: jnp.ndarray,
+    temperature: float,
+):
+    """TLM scores [prev_tok, drafts] in one pass; accept/rollback."""
+    l = int(draft_toks.shape[0])
+    window = jnp.concatenate([prev_tok.reshape(1), draft_toks]).reshape(1, -1)
+    vg, t_cache = target.extend(target_params, window, t_cache)
+    p_logits = vg[0]
+    if temperature <= 0.0:
+        toks, n_out, n_acc = speculative_accept_greedy(draft_toks, p_logits)
+    else:
+        key, sub = jax.random.split(key)
+        toks, n_out, n_acc = speculative_sample(
+            sub, draft_toks, _probs(p_logits, temperature), q_rows
+        )
+    n_out_i, n_acc_i = int(n_out), int(n_acc)
+    # TLM cache holds l+1 new positions; committed = n_acc + 1 but the bonus
+    # token itself is re-fed next round, so keep n_acc of the l drafts + the
+    # prev_tok position.
+    extra = l - n_acc_i
+    if extra > 0:
+        t_cache = target.rewind(t_cache, extra)
+    return toks, n_out_i, n_acc_i, t_cache, key
+
+
+def apsd_generate(
+    key: jax.Array,
+    target: LMInterface,
+    target_params: Any,
+    draft: LMInterface,
+    draft_params: Any,
+    prompt: jnp.ndarray,  # (1, S) int32
+    cfg: APSDConfig,
+) -> Tuple[jnp.ndarray, APSDStats]:
+    """Reference APSD driver (host loop, batch 1).
+
+    Lossless: emitted tokens follow the TLM distribution exactly; the policy
+    only changes *which* drafts get proposed/discarded, never acceptance.
+    """
+    assert prompt.shape[1] >= 2
+    assert cfg.long_dl >= 2, "PAR mode needs long_dl >= 2"
+    _, t_cache = target.prefill(target_params, prompt[:, :-1])
+    _, d_cache = draft.prefill(draft_params, prompt[:, :-1])
+    last_tok = prompt[0, -1].astype(jnp.int32)
+    temp = cfg.temperature
+
+    out: List[int] = []
+    records: List[RoundRecord] = []
+    mode = NONPAR
+    # pending = concurrent draft from the previous PAR round, not yet verified
+    pending: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+
+    while len(out) < cfg.max_tokens:
+        discarded = 0
+        if mode == NONPAR:
+            # ---- sequential: draft short window, then verify
+            d_toks, q_rows, d_cache, key = _draft_tokens(
+                key, draft, draft_params, d_cache, last_tok, cfg.short_dl, temp
+            )
+            toks, n_out, n_acc, t_cache, key = _verify(
+                key, target, target_params, t_cache, last_tok, d_toks, q_rows, temp
+            )
+            drafted = cfg.short_dl
+            # DLM cache holds [last_tok, d_0..d_{s-2}]; restore the invariant
+            # cache == committed[:-1] (see speculative.sd_generate).
+            if n_acc == cfg.short_dl:
+                _, d_cache = draft.extend(
+                    draft_params, d_toks[-1].reshape(1, 1), d_cache
+                )
+            elif (cfg.short_dl - 1) - n_acc > 0:
+                d_cache = draft.rewind(d_cache, (cfg.short_dl - 1) - n_acc)
+            all_acc = n_acc == cfg.short_dl
+            first_match = True  # no concurrent draft to contradict
+            pending = None
+        else:
+            # ---- parallel: verify `pending` WHILE drafting the next window.
+            # Functionally we draft first (DLM cache already sits at the tip
+            # of `pending`), then verify; on silicon the WDOS overlaps them.
+            assert pending is not None
+            p_toks, p_qrows = pending
+            tip = p_toks[-1]
+            c_toks, c_qrows, d_cache, key = _draft_tokens(
+                key, draft, draft_params, d_cache, tip, cfg.long_dl, temp
+            )
+            toks, n_out, n_acc, t_cache, key = _verify(
+                key, target, target_params, t_cache, last_tok, p_toks, p_qrows, temp
+            )
+            drafted = cfg.long_dl  # the concurrent window proposed this round
+            l_pending = int(p_toks.shape[0])
+            all_acc = n_acc == l_pending
+            bonus = toks[n_acc]  # TLM's newly emitted token
+            first_match = bool(all_acc and int(bonus) == int(c_toks[0]))
+            if first_match:
+                # concurrent draft survives: c_toks[0] is already committed
+                # (== bonus); c_toks[1:] await verification next round.
+                pending = (c_toks[1:], c_qrows[1:])
+                # DLM cache is already at the tip of c_toks — nothing to undo.
+            else:
+                # throw away the concurrent window + rejected pending drafts.
+                # DLM cache = committed + p[0..Lp-1] + c[0..L-2]; desired
+                # committed + p[:n_acc]  =>  rewind (Lp - n_acc) + (L - 1).
+                discarded = cfg.long_dl
+                rewind_n = (l_pending - n_acc) + (cfg.long_dl - 1)
+                if rewind_n > 0:
+                    d_cache = draft.rewind(d_cache, rewind_n)
+                pending = None
+
+        new = [int(t) for t in toks[:n_out]]
+        out.extend(new)
+        last_tok = jnp.asarray(new[-1], dtype=jnp.int32)
+        # a matched first-token guess is itself an accepted draft token:
+        # c_toks[0] was proposed by the DLM and committed via the match rule
+        acc_stat = n_acc + (1 if (mode == PAR and first_match) else 0)
+        records.append(
+            RoundRecord(
+                mode=mode,
+                drafted=drafted,
+                accepted=acc_stat,
+                emitted=n_out,
+                discarded=discarded,
+            )
+        )
+        new_mode = APSDPolicy.next_mode(mode, bool(all_acc), first_match)
+        if new_mode == PAR and pending is None:
+            # entering PAR from NONPAR: seed the first pending window
+            d_toks, q_rows, d_cache, key = _draft_tokens(
+                key, draft, draft_params, d_cache, last_tok, cfg.long_dl, temp
+            )
+            pending = (d_toks, q_rows)
+        mode = new_mode
+        if mode == NONPAR:
+            pending = None
+
+    stats = APSDStats(
+        emitted=sum(r.emitted for r in records),
+        rounds=len(records),
+        drafted=sum(r.drafted for r in records),
+        accepted=sum(r.accepted for r in records),
+        discarded=sum(r.discarded for r in records),
+        par_rounds=sum(1 for r in records if r.mode == PAR),
+        records=tuple(records),
+    )
+    return jnp.asarray(out[: cfg.max_tokens], dtype=jnp.int32), stats

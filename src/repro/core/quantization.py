@@ -1,0 +1,151 @@
+"""W4A8 quantization substrate (paper Figs. 31.1.2/31.1.3).
+
+The accelerator runs the target LLM (TLM) at W4A8: INT4 per-output-channel
+symmetric weights, INT8 dynamic per-token activations (absmax scaling after
+the LRU rotation removes outliers), INT32 MAC accumulation with fused FP16
+scale dequantization — the "dynamic quantizer whose scales are bypassed to
+the TFTE".  The draft LLM (DLM) additionally goes through BVQ (core/bvq.py)
+on top of INT4 QAT.
+
+All functions are jit-safe and used both by the pure-jnp reference path and
+as the oracle for kernels/w4a8_matmul.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_act_int8",
+    "quantize_weight_int",
+    "fake_quant_act",
+    "fake_quant_weight",
+    "pack_int4",
+    "unpack_int4",
+    "w4a8_matmul_ref",
+    "QuantizedLinear",
+    "quantize_linear_weights",
+    "quantized_linear_apply",
+    "sqnr_db",
+]
+
+INT8_QMAX = 127
+INT4_QMAX = 7  # symmetric [-7, 7]; keeps -8 unused so negation is closed
+
+
+def _absmax_scale(x: jnp.ndarray, axis, qmax: int) -> jnp.ndarray:
+    s = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / qmax
+    return jnp.maximum(s, 1e-8)
+
+
+def quantize_act_int8(x: jnp.ndarray, axis: int = -1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dynamic per-token symmetric INT8: returns (q int8, scale f32).
+
+    ``axis`` is the channel axis reduced for absmax (per-token scaling)."""
+    s = _absmax_scale(x.astype(jnp.float32), axis, INT8_QMAX)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -INT8_QMAX, INT8_QMAX)
+    return q.astype(jnp.int8), s.astype(jnp.float32)
+
+
+def quantize_weight_int(
+    w: jnp.ndarray, bits: int = 4, axis: int = 0
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel symmetric INT<bits> weight quantization.
+
+    ``axis`` is the *input* (reduction) dim; scales broadcast per out-channel.
+    Returns (q int8-storage, scale f32)."""
+    qmax = (1 << (bits - 1)) - 1
+    s = _absmax_scale(w.astype(jnp.float32), axis, qmax)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -qmax, qmax)
+    return q.astype(jnp.int8), s.astype(jnp.float32)
+
+
+def fake_quant_act(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Straight-through-estimator INT8 fake-quant (QAT)."""
+    s = _absmax_scale(jax.lax.stop_gradient(x), axis, INT8_QMAX)
+    q = jnp.clip(jnp.round(x / s), -INT8_QMAX, INT8_QMAX) * s
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fake_quant_weight(w: jnp.ndarray, bits: int = 4, axis: int = 0) -> jnp.ndarray:
+    """Straight-through-estimator INT<bits> fake-quant (QAT)."""
+    qmax = (1 << (bits - 1)) - 1
+    s = _absmax_scale(jax.lax.stop_gradient(w), axis, qmax)
+    q = jnp.clip(jnp.round(w / s), -qmax, qmax) * s
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def pack_int4(q: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Pack int4 values (int8 storage, [-8, 7]) pairwise into int8 along
+    ``axis``: element 2i -> low nibble, 2i+1 -> high nibble."""
+    assert q.shape[axis] % 2 == 0
+    lo = jax.lax.slice_in_dim(q, 0, q.shape[axis], stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(q, 1, q.shape[axis], stride=2, axis=axis)
+    return ((hi.astype(jnp.int32) << 4) | (lo.astype(jnp.int32) & 0xF)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Inverse of pack_int4 (sign-extends nibbles)."""
+    p = packed.astype(jnp.int32)
+    lo = (p << 28) >> 28  # sign-extend low nibble
+    hi = p >> 4  # arithmetic shift sign-extends high nibble
+    ax = axis % packed.ndim
+    stacked = jnp.stack([lo, hi], axis=ax + 1)  # interleave: 2i=lo, 2i+1=hi
+    shape = list(packed.shape)
+    shape[ax] *= 2
+    return stacked.reshape(shape).astype(jnp.int8)
+
+
+def w4a8_matmul_ref(
+    xq: jnp.ndarray,
+    sx: jnp.ndarray,
+    wq: jnp.ndarray,
+    sw: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference W4A8 GEMM: y = (xq int8 @ wq int4) * sx * sw, INT32 accum.
+
+    xq: (..., K) int8, sx: (..., 1) f32, wq: (K, N) int8-storage int4 values,
+    sw: (1, N) f32.  Returns f32 (..., N)."""
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32),
+        wq.astype(jnp.int32),
+        (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * sx * sw.reshape(1, -1)
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Offline-quantized linear layer (TLM W4A8 serving path).
+
+    ``wq`` stores int4 values in int8; ``packed`` optionally holds the
+    nibble-packed form consumed by the Pallas kernel."""
+
+    wq: jnp.ndarray  # (K, N) int8 storage of int4
+    sw: jnp.ndarray  # (1, N) f32
+    bits: int = 4
+
+
+def quantize_linear_weights(w: jnp.ndarray, bits: int = 4) -> QuantizedLinear:
+    wq, sw = quantize_weight_int(w, bits=bits, axis=0)
+    return QuantizedLinear(wq=wq, sw=sw.reshape(1, -1), bits=bits)
+
+
+def quantized_linear_apply(x: jnp.ndarray, ql: QuantizedLinear) -> jnp.ndarray:
+    """Dynamic-A8 x static-W4 linear: quantize x per token, INT GEMM, dequant."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, sx = quantize_act_int8(x2)
+    y = w4a8_matmul_ref(xq, sx, ql.wq, ql.sw)
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def sqnr_db(ref: jnp.ndarray, approx: jnp.ndarray) -> jnp.ndarray:
+    """Signal-to-quantization-noise ratio in dB."""
+    num = jnp.sum(ref.astype(jnp.float32) ** 2)
+    den = jnp.sum((ref.astype(jnp.float32) - approx.astype(jnp.float32)) ** 2) + 1e-12
+    return 10.0 * jnp.log10(num / den)

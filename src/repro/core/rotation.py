@@ -1,0 +1,372 @@
+"""Local Rotation Unit (LRU) — decomposed FWHT rotation for outlier-free
+low-bit quantization (paper Fig. 31.1.3).
+
+A global Hadamard rotation over channel dim ``n`` suppresses activation
+outliers (QuaRot/SpinQuant) but needs an FWHT of depth ``log2(n/m)`` plus a
+dense npot Hadamard GEMM; for n ~ 14336 that deep array is 4.37x the area of
+the paper's 4K INT8 MAC array.  The LRU limits FWHT depth to <= 6 and
+*approximates* the global rotation with two stages of overlapped local block
+rotations.  Every scheme here composes orthonormal block rotations, so the
+overall R is exactly orthogonal — computational invariance
+``(x R)(R^T W) == x W`` holds exactly; only the outlier-*mixing* radius is
+approximate.
+
+Schemes (RotationPlan.kind):
+
+  "exact":     n == m * 2**k with k <= 6 and small m — one block spans the
+               whole dim, no approximation needed (e.g. 896 = 28 * 2**5).
+  "tiled":     B = m * 2**k divides n.  Stage 1 applies kron(I_{n/B}, H_B)
+               ("upper"); stage 2 rolls channels by B/2 and applies the same
+               block-diagonal rotation ("lower"), coupling adjacent blocks —
+               the overlapped upper/lower decomposition of the deep FWHT.
+  "two_block": B >= ceil(n/2); stage 1 rotates channels [0, B), stage 2
+               rotates [n-B, n); the 2B-n overlap couples the halves.  Used
+               when no small-m block divides n.
+
+Each block rotation H_B = kron(H_m, H_{2^k}) is applied as a depth-k FWHT
+(the paper's RFA, reconfigurable 2^1..2^6 butterflies) followed by a +-1
+H_m accumulate (the paper's HAU, "MAC-free"); on TPU the +-1 accumulate maps
+onto the MXU and the FWHT onto a Pallas VMEM kernel (kernels/fwht.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard
+
+__all__ = [
+    "RotationPlan",
+    "plan_rotation",
+    "search_mk",
+    "block_hadamard",
+    "rotation_matrix",
+    "local_rotate",
+    "local_rotate_transpose",
+    "rotate_weight_in",
+    "fwht_jnp",
+    "rotation_cost",
+    "global_rotation_cost",
+    "kurtosis",
+]
+
+MAX_DEPTH = 6  # paper: RFA supports 2^1..2^6 FWHT
+MAX_NPOT = 64  # largest H_m the HAU accumulates in one pass
+
+
+@dataclasses.dataclass(frozen=True)
+class RotationPlan:
+    """How the LRU rotates a channel dimension ``n`` (see module docstring)."""
+
+    n: int
+    m: int  # npot Hadamard order (HAU factor)
+    k: int  # FWHT depth (RFA factor); block B = m * 2**k
+    kind: str  # "exact" | "tiled" | "two_block"
+
+    @property
+    def block(self) -> int:
+        return self.m * (1 << self.k)
+
+    @property
+    def num_blocks(self) -> int:
+        if self.kind == "exact":
+            return 1
+        if self.kind == "tiled":
+            return self.n // self.block
+        return 2
+
+    @property
+    def stages(self) -> int:
+        return 1 if self.kind == "exact" else 2
+
+
+def _stage_cost_per_channel(m: int, k: int) -> float:
+    """Add-ops per channel of one block-rotation stage: k butterfly levels
+    plus an m-wide +-1 accumulate (the paper's HAU is MAC-free; adds only)."""
+    return float(k + m)
+
+
+def _odd_part(n: int) -> int:
+    while n % 2 == 0:
+        n //= 2
+    return n
+
+
+def search_mk(
+    n: int,
+    max_depth: int = MAX_DEPTH,
+    max_npot: int = MAX_NPOT,
+    min_block: int = 512,
+) -> Tuple[int, int, str]:
+    """Find the (m, k, kind) realizing the LRU rotation of dim ``n``.
+
+    Preference order (paper Fig. 31.1.3):
+      1. "exact" — n == m * 2**k, k <= max_depth, m <= max_npot: a single
+         block spans the dim, no approximation (e.g. 896 = 28 * 2**5).
+      2. "tiled", npot-faithful — m is the smallest constructible Hadamard
+         order containing odd(n) (the paper's pre-computed npot matrix,
+         e.g. m=28 for 14336 = 2**9 * 28), k maximal <= max_depth.
+      3. "tiled", generic — cheapest (k + m adds/channel) block B = m * 2**k
+         dividing n with B >= min(min_block, largest feasible B); mixing
+         radius is traded against array area exactly as the paper's search.
+      4. "two_block" — two overlapped end-aligned blocks >= n/2 (dims where
+         no small block divides n).
+    """
+    # 1) exact
+    best: Optional[Tuple[float, int, int]] = None
+    for k in range(max_depth, -1, -1):
+        if n % (1 << k) == 0:
+            m = n >> k
+            if m <= max_npot and hadamard.is_available_order(m):
+                c = _stage_cost_per_channel(m, k)
+                if best is None or c < best[0]:
+                    best = (c, m, k)
+    if best is not None:
+        return best[1], best[2], "exact"
+    # 2) tiled with the natural npot factor
+    odd = _odd_part(n)
+    if odd > 1:
+        m = odd
+        while m <= max_npot and not hadamard.is_available_order(m):
+            m *= 2
+        if m <= max_npot:
+            k = max_depth
+            while k > 0 and (m * (1 << k) >= n or n % (m * (1 << k)) != 0):
+                k -= 1
+            b = m * (1 << k)
+            if 64 <= b < n and n % b == 0:
+                return m, k, "tiled"
+    # 3) tiled generic: min cost subject to a mixing-radius floor
+    cands = []
+    for m in hadamard.available_orders(max_npot):
+        for k in range(max_depth + 1):
+            b = m * (1 << k)
+            if 64 <= b < n and n % b == 0:
+                cands.append((b, _stage_cost_per_channel(m, k), m, k))
+    if cands:
+        floor = min(min_block, max(c[0] for c in cands))
+        cands = [c for c in cands if c[0] >= floor]
+        cands.sort(key=lambda c: (c[1], -c[0]))
+        b, _, m, k = cands[0]
+        return m, k, "tiled"
+    # 4) two overlapped end blocks
+    half = (n + 1) // 2
+    best2: Optional[Tuple[float, int, int]] = None
+    for m in hadamard.available_orders(1024):
+        for k in range(max_depth + 1):
+            b = m * (1 << k)
+            if half <= b < n:
+                c = _stage_cost_per_channel(m, k)
+                if best2 is None or c < best2[0]:
+                    best2 = (c, m, k)
+    if best2 is None:
+        raise ValueError(f"no LRU (m,k) decomposition found for n={n}")
+    return best2[1], best2[2], "two_block"
+
+
+@functools.lru_cache(maxsize=None)
+def plan_rotation(n: int, max_depth: int = MAX_DEPTH, max_npot: int = MAX_NPOT) -> RotationPlan:
+    m, k, kind = search_mk(n, max_depth, max_npot)
+    return RotationPlan(n=n, m=m, k=k, kind=kind)
+
+
+def rotation_cost(plan: RotationPlan) -> float:
+    """Total add-ops of the LRU rotation over all stages (per token) —
+    energy/latency proxy."""
+    per_ch = _stage_cost_per_channel(plan.m, plan.k)
+    if plan.kind == "exact":
+        return plan.n * per_ch
+    if plan.kind == "tiled":
+        return 2 * plan.n * per_ch
+    return 2 * plan.block * per_ch
+
+
+def rotation_area(plan: RotationPlan) -> float:
+    """Hardware-area proxy (adder count) of the LRU: ONE block-wide array
+    (RFA butterflies + HAU +-1 accumulate) reused across blocks and across
+    the two stages — this reuse is where the paper's 92.7% saving lives."""
+    return plan.block * _stage_cost_per_channel(plan.m, plan.k)
+
+
+def global_rotation_area(n: int) -> float:
+    """Area proxy of the baseline *global* rotation array: a full-width
+    depth-log2(n/m) FWHT cascaded with the dense npot H_m stage (the paper's
+    "4.37x the area of a 4K INT8 MAC array").  The npot factor is the
+    smallest multiple-of-4 Hadamard order containing odd(n) — matrices of
+    every such order <= 668 exist in Sloane's library [15]."""
+    odd = _odd_part(n)
+    if odd == 1:
+        m = 1
+    else:
+        m = odd if odd % 4 == 0 else odd * (4 if odd % 2 else 2)
+        while m % 4 != 0:
+            m *= 2
+    k = int(math.log2(n // m))
+    return n * _stage_cost_per_channel(m, k)
+
+
+def global_rotation_cost(n: int) -> float:
+    """Op-count per token of the global rotation (one full-dim stage)."""
+    return global_rotation_area(n)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference matrices (tests / small dims only)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def block_hadamard(m: int, k: int) -> np.ndarray:
+    """Orthonormal H_B = kron(H_m, H_{2^k}) / sqrt(B), B = m * 2**k."""
+    hm = hadamard.hadamard_matrix(m).astype(np.float64)
+    h2 = hadamard.hadamard_matrix(1 << k).astype(np.float64)
+    hb = np.kron(hm, h2)
+    b = m * (1 << k)
+    return (hb / math.sqrt(b)).astype(np.float64)
+
+
+@functools.lru_cache(maxsize=None)
+def rotation_matrix(n: int, max_depth: int = MAX_DEPTH, max_npot: int = MAX_NPOT) -> np.ndarray:
+    """Dense n x n orthogonal matrix of the full LRU rotation (reference).
+
+    Row-vector convention: y = x @ R.
+    """
+    plan = plan_rotation(n, max_depth, max_npot)
+    hb = block_hadamard(plan.m, plan.k)
+    b = plan.block
+    if plan.kind == "exact":
+        return hb
+    if plan.kind == "tiled":
+        nb = plan.num_blocks
+        stage1 = np.kron(np.eye(nb), hb)
+        shift = b // 2
+        perm = np.roll(np.eye(plan.n), -shift, axis=1)  # x @ perm rolls left
+        stage2 = perm @ np.kron(np.eye(nb), hb) @ perm.T
+        return stage1 @ stage2
+    up = np.eye(plan.n)
+    up[:b, :b] = hb
+    lo = np.eye(plan.n)
+    lo[plan.n - b :, plan.n - b :] = hb
+    return up @ lo
+
+
+# ---------------------------------------------------------------------------
+# JAX application (row-vector convention: y = x @ R)
+# ---------------------------------------------------------------------------
+
+
+def _fwht_sylvester(x: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """kron(I_m, H_{2^depth}) applied along the last axis (butterflies)."""
+    n = x.shape[-1]
+    assert n % (1 << depth) == 0
+    m = n >> depth
+    lead = x.shape[:-1]
+    y = x.reshape(*lead, m, 1 << depth)
+    h = 1
+    size = 1 << depth
+    while h < size:
+        y = y.reshape(*lead, m, size // (2 * h), 2, h)
+        a = y[..., 0, :] + y[..., 1, :]
+        b = y[..., 0, :] - y[..., 1, :]
+        y = jnp.stack([a, b], axis=-2)
+        h *= 2
+    return y.reshape(*lead, n)
+
+
+def fwht_jnp(x: jnp.ndarray, depth: Optional[int] = None) -> jnp.ndarray:
+    """Unnormalized FWHT along the last axis (Sylvester order).
+
+    With ``depth`` given, the last axis must be ``m * 2**depth`` and the
+    transform acts within each contiguous 2**depth group, i.e. the
+    kron(I_m, H_{2^depth}) factor.
+    """
+    n = x.shape[-1]
+    if depth is None:
+        depth = n.bit_length() - 1
+        assert 1 << depth == n, "full FWHT needs power-of-two length"
+    return _fwht_sylvester(x, depth)
+
+
+def _apply_blocks(x: jnp.ndarray, m: int, k: int, transpose: bool = False) -> jnp.ndarray:
+    """y = x @ kron(I_nb, H_B / sqrt(B)) along the last axis, B = m * 2**k.
+
+    The FWHT (RFA) handles the 2^k factor; a +-1 H_m matmul (HAU / MXU on
+    TPU) handles the npot factor.  kron index convention within a block:
+    i = a * 2^k + r — H_m mixes ``a`` (stride 2^k), H_{2^k} mixes ``r``.
+    """
+    b = m * (1 << k)
+    n = x.shape[-1]
+    assert n % b == 0
+    nb = n // b
+    lead = x.shape[:-1]
+    y = _fwht_sylvester(x, k)  # kron(I, H_{2^k}); Sylvester H is symmetric
+    hm = jnp.asarray(hadamard.hadamard_matrix(m).astype(np.float32), dtype=x.dtype)
+    if transpose:
+        hm = hm.T
+    y = y.reshape(*lead, nb, m, 1 << k)
+    # y[g, b, r] <- sum_a y[g, a, r] * H_m[a, b]
+    y = jnp.einsum("...gar,ab->...gbr", y, hm)
+    y = y.reshape(*lead, n)
+    return y * jnp.asarray(1.0 / math.sqrt(b), dtype=x.dtype)
+
+
+def local_rotate(x: jnp.ndarray, plan: RotationPlan) -> jnp.ndarray:
+    """y = x @ R along the last axis (the LRU's 1- or 2-stage rotation)."""
+    n, b = plan.n, plan.block
+    assert x.shape[-1] == n, (x.shape, n)
+    if plan.kind == "exact":
+        return _apply_blocks(x, plan.m, plan.k)
+    if plan.kind == "tiled":
+        y = _apply_blocks(x, plan.m, plan.k)  # stage 1 "upper"
+        shift = b // 2
+        y = jnp.roll(y, -shift, axis=-1)  # stage 2 "lower", offset by B/2
+        y = _apply_blocks(y, plan.m, plan.k)
+        return jnp.roll(y, shift, axis=-1)
+    # two_block
+    upper = _apply_blocks(x[..., :b], plan.m, plan.k)
+    x = jnp.concatenate([upper, x[..., b:]], axis=-1)
+    lower = _apply_blocks(x[..., n - b :], plan.m, plan.k)
+    return jnp.concatenate([x[..., : n - b], lower], axis=-1)
+
+
+def local_rotate_transpose(x: jnp.ndarray, plan: RotationPlan) -> jnp.ndarray:
+    """y = x @ R^T (inverse rotation; R orthogonal)."""
+    n, b = plan.n, plan.block
+    assert x.shape[-1] == n
+    if plan.kind == "exact":
+        return _apply_blocks(x, plan.m, plan.k, transpose=True)
+    if plan.kind == "tiled":
+        # R = S1 @ P^T S2 P  =>  R^T = P^T S2^T P @ S1^T
+        shift = b // 2
+        y = jnp.roll(x, -shift, axis=-1)
+        y = _apply_blocks(y, plan.m, plan.k, transpose=True)
+        y = jnp.roll(y, shift, axis=-1)
+        return _apply_blocks(y, plan.m, plan.k, transpose=True)
+    # two_block: R = U @ L  =>  R^T = L^T @ U^T — undo lower first
+    lower = _apply_blocks(x[..., n - b :], plan.m, plan.k, transpose=True)
+    x = jnp.concatenate([x[..., : n - b], lower], axis=-1)
+    upper = _apply_blocks(x[..., :b], plan.m, plan.k, transpose=True)
+    return jnp.concatenate([upper, x[..., b:]], axis=-1)
+
+
+def rotate_weight_in(w: jnp.ndarray, plan: RotationPlan) -> jnp.ndarray:
+    """Fold R into a weight along its *input* dim (axis 0 of (in, out)):
+    (x @ R) @ (R^T w) == x @ w.  Done offline; invariance is exact."""
+    assert w.shape[0] == plan.n
+    # R^T w == (w^T R)^T — reuse the row-vector apply on w^T
+    return local_rotate(w.T, plan).T
+
+
+def kurtosis(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Pearson kurtosis — outlier metric (3 = Gaussian)."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    d = x - mu
+    m2 = jnp.mean(d**2, axis=axis, keepdims=True)
+    m4 = jnp.mean(d**4, axis=axis, keepdims=True)
+    return jnp.squeeze(m4 / (m2**2 + 1e-12), axis=axis)

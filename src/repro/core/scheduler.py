@@ -1,0 +1,167 @@
+"""WDOS — Workload-Decoupled Out-of-order Scheduler (paper Fig. 31.1.5).
+
+The chip decouples APSD work into 4 parallel instruction queues — inter-chip
+transceiver (XCVR), compute (COMPUTE), ReRAM load (RERAM) and external memory
+access (EMAC).  Each queue issues ITS OWN instructions in order, but the
+queues run concurrently; an instruction issues only when all its parents
+(possibly in other queues) have completed — the "synchronous counter matrix"
+of intra-queue decoders + inter-queue synchronizers.  The result is
+out-of-order execution *across* queues with dependency-aware synchronization,
+which is what lets DLM drafting (RERAM + COMPUTE) overlap TLM verification
+(EMAC + COMPUTE) inside one chip.
+
+This module is a discrete-event simulator of that scheduler.  It is used by
+core/perfmodel.py to price SD / PEARL / APSD rounds and reproduces the
+paper's utilization claims; the same DAG-building helpers drive the
+benchmarks (benchmarks/bench_apsd.py).
+
+On the TPU re-host the WDOS *idea* becomes: draft and verify dispatched in a
+single XLA program on disjoint mesh slices so their compute/collectives
+overlap (launch/serve.py); the simulator stays as the faithful model of the
+silicon behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Queue",
+    "Instr",
+    "Schedule",
+    "wdos_schedule",
+    "inorder_schedule",
+    "layer_pipeline_instrs",
+]
+
+
+class Queue(enum.IntEnum):
+    XCVR = 0  # inter-chip transceiver
+    COMPUTE = 1  # TFTE / NLPU / LRU
+    RERAM = 2  # ReRAM load interface (DLM codebooks)
+    EMAC = 3  # external memory access controller (TLM weights)
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    uid: int
+    queue: Queue
+    duration: float
+    deps: Tuple[int, ...] = ()
+    tag: str = ""
+
+
+@dataclasses.dataclass
+class Schedule:
+    makespan: float
+    start: Dict[int, float]
+    finish: Dict[int, float]
+    busy: Dict[Queue, float]
+
+    def utilization(self, q: Queue) -> float:
+        return self.busy.get(q, 0.0) / self.makespan if self.makespan > 0 else 0.0
+
+
+def wdos_schedule(instrs: Sequence[Instr]) -> Schedule:
+    """Simulate the 4-queue dependency-aware scheduler.
+
+    Per-queue FIFO issue; cross-queue out-of-order; an instruction starts at
+    max(queue free time, parents' finish).  Raises on dependency deadlock
+    (cyclic or cross-queue head-of-line cycles)."""
+    by_queue: Dict[Queue, List[Instr]] = {q: [] for q in Queue}
+    for ins in instrs:
+        by_queue[ins.queue].append(ins)
+    heads = {q: 0 for q in Queue}
+    qfree = {q: 0.0 for q in Queue}
+    start: Dict[int, float] = {}
+    finish: Dict[int, float] = {}
+    busy = {q: 0.0 for q in Queue}
+    remaining = len(instrs)
+    while remaining > 0:
+        progressed = False
+        for q in Queue:
+            lst = by_queue[q]
+            while heads[q] < len(lst):
+                ins = lst[heads[q]]
+                if not all(d in finish for d in ins.deps):
+                    break
+                s = max(qfree[q], max((finish[d] for d in ins.deps), default=0.0))
+                start[ins.uid] = s
+                finish[ins.uid] = s + ins.duration
+                qfree[q] = finish[ins.uid]
+                busy[q] += ins.duration
+                heads[q] += 1
+                remaining -= 1
+                progressed = True
+        if not progressed:
+            raise RuntimeError("WDOS deadlock: unsatisfiable dependency order")
+    makespan = max(finish.values(), default=0.0)
+    return Schedule(makespan=makespan, start=start, finish=finish, busy=busy)
+
+
+def inorder_schedule(instrs: Sequence[Instr]) -> Schedule:
+    """Baseline: one in-order queue (no workload decoupling) — every
+    instruction serializes.  This is the no-WDOS reference."""
+    t = 0.0
+    start: Dict[int, float] = {}
+    finish: Dict[int, float] = {}
+    busy = {q: 0.0 for q in Queue}
+    for ins in instrs:
+        start[ins.uid] = t
+        t += ins.duration
+        finish[ins.uid] = t
+        busy[ins.queue] += ins.duration
+    return Schedule(makespan=t, start=start, finish=finish, busy=busy)
+
+
+class _Builder:
+    """Monotonic uid allocator for DAG construction."""
+
+    def __init__(self) -> None:
+        self._uid = 0
+        self.instrs: List[Instr] = []
+
+    def add(
+        self,
+        queue: Queue,
+        duration: float,
+        deps: Iterable[int] = (),
+        tag: str = "",
+    ) -> int:
+        uid = self._uid
+        self._uid += 1
+        self.instrs.append(
+            Instr(uid=uid, queue=queue, duration=duration, deps=tuple(deps), tag=tag)
+        )
+        return uid
+
+
+def layer_pipeline_instrs(
+    builder: _Builder,
+    n_layers: int,
+    load_queue: Queue,
+    load_time: float,
+    compute_time: float,
+    entry_deps: Iterable[int] = (),
+    tag: str = "",
+) -> Tuple[List[int], int]:
+    """Per-layer load->compute pipeline: compute_i depends on load_i and
+    compute_{i-1}; loads prefetch ahead (FIFO within the load queue).
+
+    Returns (all uids, final compute uid)."""
+    uids: List[int] = []
+    prev_compute: Optional[int] = None
+    entry = tuple(entry_deps)
+    for i in range(n_layers):
+        ld = builder.add(load_queue, load_time, entry if i == 0 else (), f"{tag}.load{i}")
+        deps = [ld] + ([prev_compute] if prev_compute is not None else list(entry))
+        cp = builder.add(Queue.COMPUTE, compute_time, deps, f"{tag}.comp{i}")
+        uids.extend([ld, cp])
+        prev_compute = cp
+    assert prev_compute is not None
+    return uids, prev_compute
+
+
+def new_builder() -> _Builder:
+    return _Builder()

@@ -1,0 +1,222 @@
+"""Speculative decoding (SD) — lossless draft-and-verify (paper Fig. 31.1.1).
+
+A small draft LM (DLM) autoregressively proposes ``draft_len`` tokens; the
+large target LM (TLM) scores all of them in ONE forward pass; modified
+rejection sampling (Leviathan et al.) accepts a prefix and emits one extra
+token, so the output distribution is *exactly* the TLM's.  This module is the
+algorithmic core shared by the serving path (serving/), the APSD controller
+(core/apsd.py) and the performance model (core/perfmodel.py).
+
+Model-agnostic: models enter through ``LMInterface`` (prefill / extend /
+decode callables over functional KV caches with an explicit length index, so
+"rolling back" rejected tokens is just resetting the length — no copies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SDConfig",
+    "LMInterface",
+    "speculative_sample",
+    "speculative_accept_greedy",
+    "sd_generate",
+    "SDStats",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SDConfig:
+    draft_len: int = 4
+    temperature: float = 1.0  # 0 => greedy (deterministic accept rule)
+    max_tokens: int = 64
+
+
+class LMInterface(NamedTuple):
+    """Functional LM handle used by every SD driver.
+
+    prefill(params, tokens (B,S))            -> (logits (B,S,V), cache)
+    extend(params, tokens (B,L), cache)      -> (logits (B,L,V), cache)
+        scores L tokens in one forward (the TLM verify pass); cache length
+        advances by L.
+    rewind(cache, n)                         -> cache with n tokens dropped
+    """
+
+    prefill: Callable[..., Tuple[jnp.ndarray, Any]]
+    extend: Callable[..., Tuple[jnp.ndarray, Any]]
+    rewind: Callable[[Any, int], Any]
+
+
+class SDStats(NamedTuple):
+    emitted: jnp.ndarray  # total tokens emitted
+    rounds: jnp.ndarray  # number of draft/verify rounds
+    drafted: jnp.ndarray  # total draft tokens proposed
+    accepted: jnp.ndarray  # total draft tokens accepted
+
+    @property
+    def acceptance_rate(self):
+        return self.accepted / jnp.maximum(self.drafted, 1)
+
+    @property
+    def rejection_rate(self):
+        return 1.0 - self.acceptance_rate
+
+    @property
+    def tokens_per_round(self):
+        return self.emitted / jnp.maximum(self.rounds, 1)
+
+
+def _first_reject(accept: jnp.ndarray) -> jnp.ndarray:
+    """Length of the all-accepted prefix of a boolean vector."""
+    return jnp.sum(jnp.cumprod(accept.astype(jnp.int32)))
+
+
+def speculative_sample(
+    key: jax.Array,
+    draft_tokens: jnp.ndarray,  # (L,) int32, sampled from q
+    p_probs: jnp.ndarray,  # (L+1, V) target distribution at each position
+    q_probs: jnp.ndarray,  # (L, V) draft distribution at each position
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Lossless speculative rejection sampling for one draft window.
+
+    Returns (out_tokens (L+1,) padded with -1, n_out in [1, L+1],
+    n_accepted in [0, L]).  The emitted sequence is distributed exactly as
+    autoregressive sampling from p.
+    """
+    l, v = q_probs.shape
+    k_u, k_res = jax.random.split(key)
+    idx = jnp.arange(l)
+    p_i = p_probs[idx, draft_tokens]
+    q_i = q_probs[idx, draft_tokens]
+    u = jax.random.uniform(k_u, (l,))
+    accept = u * q_i < p_i  # u < p/q without the divide
+    n_acc = _first_reject(accept)
+    # residual distribution at the first rejected position (or bonus at L)
+    p_next = p_probs[n_acc]
+    q_next = jnp.where(n_acc < l, q_probs[jnp.minimum(n_acc, l - 1)], 0.0)
+    residual = jnp.maximum(p_next - q_next, 0.0)
+    res_sum = jnp.sum(residual)
+    dist = jnp.where(res_sum > 1e-9, residual / jnp.maximum(res_sum, 1e-9), p_next)
+    next_tok = jax.random.categorical(k_res, jnp.log(dist + 1e-20))
+    pos = jnp.arange(l + 1)
+    padded_draft = jnp.concatenate([draft_tokens, jnp.zeros((1,), draft_tokens.dtype)])
+    out = jnp.where(pos < n_acc, padded_draft, -1)
+    out = out.at[n_acc].set(next_tok.astype(draft_tokens.dtype))
+    return out, n_acc + 1, n_acc
+
+
+def speculative_accept_greedy(
+    draft_tokens: jnp.ndarray,  # (L,)
+    p_logits: jnp.ndarray,  # (L+1, V)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Greedy (temperature-0) verify: accept while draft == argmax(target)."""
+    l = draft_tokens.shape[0]
+    tlm_tok = jnp.argmax(p_logits, axis=-1).astype(draft_tokens.dtype)  # (L+1,)
+    accept = tlm_tok[:l] == draft_tokens
+    n_acc = _first_reject(accept)
+    pos = jnp.arange(l + 1)
+    padded_draft = jnp.concatenate([draft_tokens, jnp.zeros((1,), draft_tokens.dtype)])
+    out = jnp.where(pos < n_acc, padded_draft, -1)
+    out = out.at[n_acc].set(tlm_tok[n_acc])
+    return out, n_acc + 1, n_acc
+
+
+def _probs(logits: jnp.ndarray, temperature: float) -> jnp.ndarray:
+    return jax.nn.softmax(logits / max(temperature, 1e-6), axis=-1)
+
+
+def sd_generate(
+    key: jax.Array,
+    target: LMInterface,
+    target_params: Any,
+    draft: LMInterface,
+    draft_params: Any,
+    prompt: jnp.ndarray,  # (1, S) int32
+    cfg: SDConfig,
+) -> Tuple[jnp.ndarray, SDStats]:
+    """Reference SD driver (host loop; jitted inner steps come from the
+    LMInterface).  Batch 1, greedy or sampled.  Returns (tokens (T,), stats).
+    """
+    l = cfg.draft_len
+    # Prefill all but the last prompt token: the last token is (re)fed as the
+    # first element of every verify window / draft step, so the caches never
+    # hold a position twice.
+    assert prompt.shape[1] >= 2, "prompt must have >= 2 tokens"
+    _, t_cache = target.prefill(target_params, prompt[:, :-1])
+    _, d_cache = draft.prefill(draft_params, prompt[:, :-1])
+    out: list = []
+    emitted = drafted = accepted = rounds = 0
+    last_tok = prompt[0, -1]
+
+    while len(out) < cfg.max_tokens:
+        # --- draft phase: DLM proposes l tokens autoregressively
+        d_toks = []
+        q_rows = []
+        cur = last_tok
+        for _ in range(l):
+            lg, d_cache = draft.extend(
+                draft_params, cur.reshape(1, 1), d_cache
+            )
+            qp = _probs(lg[0, -1], cfg.temperature)
+            if cfg.temperature <= 0.0:
+                nxt = jnp.argmax(lg[0, -1])
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, lg[0, -1] / cfg.temperature)
+            d_toks.append(nxt.astype(jnp.int32))
+            q_rows.append(qp)
+            cur = nxt
+        draft_tokens = jnp.stack(d_toks)
+        # --- verify phase: TLM scores [last_tok, draft...] in one forward
+        verify_in = jnp.concatenate([last_tok.reshape(1), draft_tokens]).reshape(1, -1)
+        vg, t_cache = target.extend(target_params, verify_in, t_cache)
+        p_logits = vg[0]  # (l+1, V): position i predicts token after draft i-1
+        if cfg.temperature <= 0.0:
+            toks, n_out, n_acc = speculative_accept_greedy(draft_tokens, p_logits)
+        else:
+            key, sub = jax.random.split(key)
+            toks, n_out, n_acc = speculative_sample(
+                sub,
+                draft_tokens,
+                _probs(p_logits, cfg.temperature),
+                jnp.stack(q_rows),
+            )
+        n_out_i, n_acc_i = int(n_out), int(n_acc)
+        new = [int(t) for t in toks[:n_out_i]]
+        out.extend(new)
+        rounds += 1
+        drafted += l
+        accepted += n_acc_i
+        emitted += n_out_i
+        # --- cache maintenance. Invariant between rounds: each cache holds
+        # exactly the committed sequence minus its last token (which is re-fed
+        # as the head of the next window).
+        # TLM consumed [last_tok, d_0..d_{l-1}] = l+1 positions; keep n_acc
+        # drafts + the last_tok position.
+        target_extra = l - n_acc_i
+        if target_extra > 0:
+            t_cache = target.rewind(t_cache, target_extra)
+        # DLM consumed [last_tok, d_0..d_{l-2}] = l positions (d_{l-1} was
+        # sampled but never fed). Keep n_acc drafts; when everything was
+        # accepted, feed the straggler d_{l-1} to complete the cache.
+        if n_acc_i == l:
+            _, d_cache = draft.extend(
+                draft_params, draft_tokens[-1].reshape(1, 1), d_cache
+            )
+        else:
+            draft_extra = (l - 1) - n_acc_i
+            if draft_extra > 0:
+                d_cache = draft.rewind(d_cache, draft_extra)
+        last_tok = jnp.asarray(new[-1], dtype=jnp.int32)
+
+    stats = SDStats(
+        emitted=jnp.asarray(emitted),
+        rounds=jnp.asarray(rounds),
+        drafted=jnp.asarray(drafted),
+        accepted=jnp.asarray(accepted),
+    )
+    return jnp.asarray(out[: cfg.max_tokens], dtype=jnp.int32), stats

@@ -1,0 +1,68 @@
+"""First-order Markov toy LMs — exact, cheap oracles for the speculative
+decoding stack.
+
+A table LM's next-token distribution depends only on the last fed token, so
+autoregressive decoding from it has a closed form and `sd_generate` /
+`apsd_generate` outputs can be checked for *exact* losslessness (greedy) or
+distributional correctness (sampled).  The functional cache is the fed-token
+buffer + length, exercising the same rewind semantics as real KV caches.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.speculative import LMInterface
+
+__all__ = ["make_markov_lm", "markov_greedy_decode", "random_transition_logits"]
+
+
+def random_transition_logits(key: jax.Array, vocab: int, sharpness: float = 2.0):
+    """(V, V) logits table: row t = distribution of the token after t."""
+    return sharpness * jax.random.normal(key, (vocab, vocab), dtype=jnp.float32)
+
+
+def make_markov_lm(max_len: int = 4096) -> LMInterface:
+    """LMInterface over params = (V, V) transition logits.
+
+    cache = (buffer (1, max_len) int32, length int32); logits at step i are
+    table[fed_token_i].
+    """
+
+    def prefill(params, tokens):
+        b, s = tokens.shape
+        assert b == 1
+        buf = jnp.zeros((1, max_len), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(buf, tokens.astype(jnp.int32), (0, 0))
+        logits = params[tokens[0]][None]  # (1, S, V)
+        return logits, (buf, jnp.asarray(s, jnp.int32))
+
+    def extend(params, tokens, cache):
+        buf, length = cache
+        b, l = tokens.shape
+        assert b == 1
+        buf = jax.lax.dynamic_update_slice(
+            buf, tokens.astype(jnp.int32), (0, length)
+        )
+        logits = params[tokens[0]][None]
+        return logits, (buf, length + l)
+
+    def rewind(cache, n):
+        buf, length = cache
+        return (buf, length - n)
+
+    return LMInterface(prefill=prefill, extend=extend, rewind=rewind)
+
+
+def markov_greedy_decode(
+    params: jnp.ndarray, start: int, n: int
+) -> jnp.ndarray:
+    """Ground-truth greedy AD decode of the table LM."""
+    toks = []
+    cur = jnp.asarray(start, jnp.int32)
+    for _ in range(n):
+        cur = jnp.argmax(params[cur]).astype(jnp.int32)
+        toks.append(int(cur))
+    return jnp.asarray(toks, jnp.int32)

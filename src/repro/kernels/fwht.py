@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for the LRU block rotation (paper's RFA + HAU).
+
+One grid step rotates a (token_tile, B) tile entirely in VMEM:
+  * the 2^k factor as in-register radix-2 butterflies (the RFA —
+    reconfigurable 2^1..2^6 FWHT, depth <= 6),
+  * the npot H_m factor as a +-1 matmul on the MXU (the HAU's "MAC-free
+    accumulate" — on TPU the MXU IS the cheap way to do a +-1 GEMM),
+  * the 1/sqrt(B) normalization fused with the store.
+
+The grid walks (token tiles) x (channel blocks); the channel dim must be a
+multiple of B = m * 2**k.  Two-stage tiled/two-block schemes are composed in
+ops.lru_rotate from this single-stage kernel.
+
+TPU notes: B is a multiple of 128 for every assigned dim (so the lane dim is
+MXU/VREG aligned); token tiles default to 256 rows and shrink for very large
+B to bound VMEM at ~4 MB per input tile.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import hadamard
+
+__all__ = ["block_rotate_pallas"]
+
+
+def _fwht_in_kernel(y: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(t, m, 2^k) -> FWHT along the last axis, unrolled butterflies."""
+    t, m, size = y.shape
+    h = 1
+    while h < size:
+        y = y.reshape(t, m, size // (2 * h), 2, h)
+        a = y[:, :, :, 0, :] + y[:, :, :, 1, :]
+        b = y[:, :, :, 0, :] - y[:, :, :, 1, :]
+        y = jnp.stack([a, b], axis=3)
+        h *= 2
+    return y.reshape(t, m, size)
+
+
+def _rotate_kernel(x_ref, hm_ref, o_ref, *, m: int, k: int, transpose: bool):
+    x = x_ref[...]
+    t, b = x.shape
+    size = 1 << k
+    y = x.reshape(t, m, size)
+    y = _fwht_in_kernel(y, k)  # kron(I_m, H_{2^k})
+    hm = hm_ref[...]  # (m, m) +-1 in x.dtype
+    if transpose:
+        hm = hm.T
+    # HAU: out[t, b, r] = sum_a y[t, a, r] * hm[a, b]  -> MXU dot
+    y = jax.lax.dot_general(
+        y,
+        hm,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (t, size, m) with contracted axis moved: result dims (t, r, b)
+    y = y.transpose(0, 2, 1).reshape(t, b)
+    o_ref[...] = (y * (1.0 / math.sqrt(b))).astype(o_ref.dtype)
+
+
+def _token_tile(n_tokens: int, block: int) -> int:
+    # bound VMEM: tile * block * 4B <= ~4 MB
+    cap = max(8, (4 << 20) // (4 * block))
+    tile = min(256, n_tokens, cap)
+    while n_tokens % tile:
+        tile -= 1
+    return max(tile, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "k", "transpose", "interpret")
+)
+def block_rotate_pallas(
+    x: jnp.ndarray,
+    m: int,
+    k: int,
+    transpose: bool = False,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """y = x @ kron(I_{n/B}, H_B / sqrt(B)) over the last axis, B = m * 2**k.
+
+    x: (..., n) with n % B == 0.  Leading dims are flattened into a token
+    axis; the Pallas grid is (token tiles, channel blocks).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b = m * (1 << k)
+    n = x.shape[-1]
+    assert n % b == 0, (n, b)
+    lead = x.shape[:-1]
+    tokens = int(np.prod(lead)) if lead else 1
+    x2 = x.reshape(tokens, n)
+    bt = _token_tile(tokens, b)
+    hm = jnp.asarray(hadamard.hadamard_matrix(m), dtype=x.dtype)
+    grid = (tokens // bt, n // b)
+    out = pl.pallas_call(
+        functools.partial(_rotate_kernel, m=m, k=k, transpose=transpose),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, b), lambda i, j: (i, j)),
+            pl.BlockSpec((m, m), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tokens, n), x.dtype),
+        interpret=interpret,
+    )(x2, hm)
+    return out.reshape(*lead, n)

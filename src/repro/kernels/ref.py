@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the corresponding kernel's contract exactly; kernel
+tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard
+from repro.core.bvq import BVQWeight, bvq_reconstruct
+from repro.core.quantization import unpack_int4
+from repro.core.rotation import _apply_blocks
+
+__all__ = ["block_rotate_ref", "w4a8_matmul_ref2", "bvq_matmul_ref2"]
+
+
+def block_rotate_ref(x: jnp.ndarray, m: int, k: int, transpose: bool = False):
+    """Oracle for kernels.fwht.block_rotate_pallas."""
+    return _apply_blocks(x, m, k, transpose=transpose)
+
+
+def w4a8_matmul_ref2(xq, wp, sx, sw):
+    """Oracle for kernels.w4a8_matmul.w4a8_matmul_pallas (packed input)."""
+    w = unpack_int4(wp, axis=0).astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32),
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * sx * sw
+
+
+def bvq_matmul_ref2(x: jnp.ndarray, bw: BVQWeight):
+    """Oracle for kernels.bvq_matmul.bvq_matmul_pallas."""
+    return (x.astype(jnp.float32) @ bvq_reconstruct(bw)).astype(jnp.float32)

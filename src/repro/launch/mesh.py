@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state.  Single-pod: 16 x 16 = 256 chips (data, model);
+multi-pod: 2 x 16 x 16 = 512 chips (pod, data, model) — data-parallel
+replicas across pods, tensor/expert parallelism within a pod (ICI), pod
+axis crossing DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cpu_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (1 real device unless XLA_FLAGS says more)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,337 @@
+"""Step builders for the dry-run / trainer / server: construct the jitted
+(train | prefill | decode) function for an (arch config x shape) cell plus
+abstract (ShapeDtypeStruct) inputs and shardings — nothing here allocates
+device memory; ``.lower().compile()`` on the results is the multi-pod
+dry-run.
+
+``input_specs(cfg, shape, mesh)`` is the assignment-required entry point:
+ShapeDtypeStruct stand-ins for every model input of the cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm
+from repro.models import whisper as W
+from repro.models.common import Family, ModelConfig, SHAPES, ShapeConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, optimizer_specs
+from repro.optim import linear_warmup_cosine
+
+__all__ = ["abstract_model", "input_specs", "build_cell", "CellSpec", "param_counts"]
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    """Analytic parameter counts: total and flops-active-per-token.
+
+    active: MoE counts router + top_k experts; hybrid counts the shared attn
+    block once per application; whisper counts encoder + decoder (the
+    encoder runs over frames, an approximation noted in EXPERIMENTS.md)."""
+    d, f, v, hd = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.hd
+    attn = d * cfg.n_heads * hd * 2 + d * cfg.n_kv * hd * 2
+    n_mats = 3 if cfg.act == "swiglu" else 2
+    mlp = n_mats * d * f
+    embed = 2 * v * d  # untied in/out embeddings
+    if cfg.family is Family.SSM:
+        din = cfg.d_inner
+        per = d * (2 * din + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads) + din * d
+        total = embed + cfg.n_layers * per
+        return {"total": total, "active": total}
+    if cfg.family is Family.HYBRID:
+        din = cfg.d_inner
+        per = d * (2 * din + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads) + din * d
+        napp = cfg.n_layers // cfg.attn_every
+        shared = attn + mlp
+        total = embed + cfg.n_layers * per + shared
+        active = embed + cfg.n_layers * per + napp * shared
+        return {"total": total, "active": active}
+    if cfg.family is Family.MOE:
+        router = d * cfg.n_experts
+        total = embed + cfg.n_layers * (attn + router + cfg.n_experts * mlp)
+        active = embed + cfg.n_layers * (attn + router + cfg.top_k * mlp)
+        return {"total": total, "active": active}
+    if cfg.family is Family.AUDIO:
+        enc = cfg.n_encoder_layers * (attn + mlp)
+        dec = cfg.n_layers * (2 * attn + mlp)  # self + cross
+        total = embed + enc + dec
+        return {"total": total, "active": total}
+    total = embed + cfg.n_layers * (attn + mlp)
+    return {"total": total, "active": total}
+
+
+def _ns(mesh, spec):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def batch_axes(mesh, batch=None):
+    if batch is None:
+        return ("pod", "data") if "pod" in mesh.shape else "data"
+    from repro.models.layers import pick_batch_axes
+
+    return pick_batch_axes(mesh, batch)
+
+
+# ---------------------------------------------------------------------------
+# Abstract params/opt/caches (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def abstract_model(cfg: ModelConfig, tp: int):
+    """(abstract params, param specs) via shape-only tracing."""
+    holder: Dict[str, Any] = {}
+
+    def shapes_only(key):
+        if cfg.family is Family.AUDIO:
+            p, s = W.init_whisper(key, cfg, tp)
+        else:
+            p, s = lm.init_lm(key, cfg, tp)
+        holder["specs"] = s
+        return p
+
+    aparams = jax.eval_shape(shapes_only, jax.random.PRNGKey(0))
+    return aparams, holder["specs"]
+
+
+def abstract_opt(aparams, ocfg: AdamWConfig):
+    return jax.eval_shape(lambda p: adamw_init(p, ocfg), aparams)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int, tp: int):
+    if cfg.family is Family.AUDIO:
+        return jax.eval_shape(
+            lambda: W.init_whisper_cache(cfg, batch, s_max, tp)
+        )
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, s_max, tp))
+
+
+def _cache_specs(cfg: ModelConfig, tp: int, ba):
+    if cfg.family is Family.AUDIO:
+        return W.whisper_cache_specs(cfg, tp, ba)
+    return lm.cache_specs(cfg, tp, ba)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, Any]]:
+    """-> ({name: ShapeDtypeStruct}, {name: NamedSharding}) for the cell's
+    data inputs (params/opt/cache handled by build_cell)."""
+    b = shape.global_batch
+    ba = batch_axes(mesh, b)
+    structs: Dict[str, jax.ShapeDtypeStruct] = {}
+    shardings: Dict[str, Any] = {}
+    tok_spec = NamedSharding(mesh, P(ba, None))
+    if shape.kind == "train":
+        s = shape.seq_len
+        if cfg.family is Family.VLM:
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.n_vision_tokens + 1), jnp.int32)
+            structs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype
+            )
+            shardings["vision_embeds"] = NamedSharding(mesh, P(ba, None, None))
+        elif cfg.family is Family.AUDIO:
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s + 1), jnp.int32)
+            structs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_frames, cfg.d_model), cfg.jdtype
+            )
+            shardings["frames"] = NamedSharding(mesh, P(ba, None, None))
+        else:
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s + 1), jnp.int32)
+        shardings["tokens"] = tok_spec
+    elif shape.kind == "prefill":
+        s = shape.seq_len
+        if cfg.family is Family.VLM:
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.n_vision_tokens), jnp.int32)
+            structs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype
+            )
+            shardings["vision_embeds"] = NamedSharding(mesh, P(ba, None, None))
+        elif cfg.family is Family.AUDIO:
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            structs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_frames, cfg.d_model), cfg.jdtype
+            )
+            shardings["frames"] = NamedSharding(mesh, P(ba, None, None))
+        else:
+            structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shardings["tokens"] = tok_spec
+    else:  # decode: one new token against a seq_len-deep cache
+        structs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        shardings["tokens"] = tok_spec
+    return structs, shardings
+
+
+# ---------------------------------------------------------------------------
+# Cell builder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    fn: Callable  # jitted
+    args: Tuple[Any, ...]  # abstract args (ShapeDtypeStruct trees)
+    kind: str
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    ocfg: Optional[AdamWConfig] = None,
+    donate: bool = True,
+) -> CellSpec:
+    tp = mesh.shape["model"]
+    ba = batch_axes(mesh, shape.global_batch)
+    aparams, pspecs = abstract_model(cfg, tp)
+    param_sh = _ns(mesh, pspecs)
+    structs, data_sh = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        ocfg = ocfg or AdamWConfig(moment_dtype=cfg.optim_dtype)
+        aopt = abstract_opt(aparams, ocfg)
+        zero1 = None if cfg.fsdp else "data"
+        opt_sh = _ns(
+            mesh,
+            optimizer_specs(
+                pspecs, aparams, zero1_axis=zero1, axis_size=mesh.shape["data"]
+            ),
+        )
+        opt_sh["count"] = NamedSharding(mesh, P())
+
+        if cfg.family is Family.AUDIO:
+
+            def train_step(params, opt_state, step, tokens, frames):
+                lscale = linear_warmup_cosine(step, 100, 10000)
+                loss, grads = jax.value_and_grad(W.whisper_loss_fn)(
+                    params, cfg, mesh, tokens, frames
+                )
+                params, opt_state, m = adamw_update(params, grads, opt_state, ocfg, lscale)
+                return params, opt_state, {"loss": loss, **m}
+
+            args = (aparams, aopt, jax.ShapeDtypeStruct((), jnp.int32),
+                    structs["tokens"], structs["frames"])
+            in_sh = (param_sh, opt_sh, NamedSharding(mesh, P()),
+                     data_sh["tokens"], data_sh["frames"])
+        elif cfg.family is Family.VLM:
+
+            def train_step(params, opt_state, step, tokens, vision):
+                lscale = linear_warmup_cosine(step, 100, 10000)
+                loss, grads = jax.value_and_grad(lm.loss_fn)(
+                    params, cfg, mesh, tokens, vision_embeds=vision
+                )
+                params, opt_state, m = adamw_update(params, grads, opt_state, ocfg, lscale)
+                return params, opt_state, {"loss": loss, **m}
+
+            args = (aparams, aopt, jax.ShapeDtypeStruct((), jnp.int32),
+                    structs["tokens"], structs["vision_embeds"])
+            in_sh = (param_sh, opt_sh, NamedSharding(mesh, P()),
+                     data_sh["tokens"], data_sh["vision_embeds"])
+        else:
+
+            def train_step(params, opt_state, step, tokens):
+                lscale = linear_warmup_cosine(step, 100, 10000)
+                loss, grads = jax.value_and_grad(lm.loss_fn)(
+                    params, cfg, mesh, tokens
+                )
+                if cfg.grad_barrier:
+                    # keep the gradient reduction in bf16: without this the
+                    # partitioner hoists the optimizer's f32 cast above the
+                    # cross-device reduce, doubling its bytes
+                    grads = jax.lax.optimization_barrier(grads)
+                if cfg.grad_constraint:
+                    # pin gradients to the parameter sharding BEFORE the
+                    # update: the partitioner then reduce-scatters the
+                    # backward partials instead of all-reducing full grads
+                    flat_s, tdef = jax.tree.flatten(
+                        pspecs, is_leaf=lambda x: isinstance(x, P)
+                    )
+                    flat_g = tdef.flatten_up_to(grads)
+                    grads = tdef.unflatten([
+                        jax.lax.with_sharding_constraint(g, sp)
+                        for g, sp in zip(flat_g, flat_s)
+                    ])
+                params, opt_state, m = adamw_update(params, grads, opt_state, ocfg, lscale)
+                return params, opt_state, {"loss": loss, **m}
+
+            args = (aparams, aopt, jax.ShapeDtypeStruct((), jnp.int32),
+                    structs["tokens"])
+            in_sh = (param_sh, opt_sh, NamedSharding(mesh, P()),
+                     data_sh["tokens"])
+        fn = jax.jit(
+            train_step,
+            in_shardings=in_sh,
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return CellSpec(fn=fn, args=args, kind="train")
+
+    # ---- serving cells
+    cache_sh = _ns(mesh, _cache_specs(cfg, tp, ba))
+    if shape.kind == "prefill":
+        acache = abstract_cache(cfg, shape.global_batch, shape.seq_len, tp)
+        if cfg.family is Family.AUDIO:
+
+            def prefill(params, tokens, frames, cache):
+                return W.apply_whisper(
+                    params, cfg, mesh, tokens, frames=frames, cache=cache,
+                    last_logit_only=True,
+                )
+
+            args = (aparams, structs["tokens"], structs["frames"], acache)
+            in_sh = (param_sh, data_sh["tokens"], data_sh["frames"], cache_sh)
+        elif cfg.family is Family.VLM:
+
+            def prefill(params, tokens, vision, cache):
+                return lm.apply_lm(
+                    params, cfg, mesh, tokens, cache=cache,
+                    vision_embeds=vision, last_logit_only=True,
+                )
+
+            args = (aparams, structs["tokens"], structs["vision_embeds"], acache)
+            in_sh = (param_sh, data_sh["tokens"], data_sh["vision_embeds"], cache_sh)
+        else:
+
+            def prefill(params, tokens, cache):
+                return lm.apply_lm(
+                    params, cfg, mesh, tokens, cache=cache, last_logit_only=True
+                )
+
+            args = (aparams, structs["tokens"], acache)
+            in_sh = (param_sh, data_sh["tokens"], cache_sh)
+        fn = jax.jit(
+            prefill,
+            in_shardings=in_sh,
+            donate_argnums=(3,) if cfg.family in (Family.AUDIO, Family.VLM) and donate else ((2,) if donate else ()),
+        )
+        return CellSpec(fn=fn, args=args, kind="prefill")
+
+    # decode: one token against a seq_len-deep cache
+    acache = abstract_cache(cfg, shape.global_batch, shape.seq_len, tp)
+    if cfg.family is Family.AUDIO:
+
+        def decode(params, tokens, cache):
+            return W.apply_whisper(params, cfg, mesh, tokens, cache=cache)
+
+    else:
+
+        def decode(params, tokens, cache):
+            return lm.apply_lm(params, cfg, mesh, tokens, cache=cache)
+
+    args = (aparams, structs["tokens"], acache)
+    in_sh = (param_sh, data_sh["tokens"], cache_sh)
+    fn = jax.jit(decode, in_shardings=in_sh, donate_argnums=(2,) if donate else ())
+    return CellSpec(fn=fn, args=args, kind="decode")

@@ -1,0 +1,165 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Wires the full production stack: config -> mesh -> sharded init ->
+data pipeline -> jitted train step (remat + scan + ZeRO-1) -> async
+checkpointing -> fault-tolerant elastic loop.  On this CPU container use
+--smoke (reduced config, 1-device mesh); the same code path drives the
+TPU fleet with the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
+from repro.configs import get_config, get_smoke
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.launch.mesh import make_cpu_mesh, make_production_mesh
+from repro.launch.steps import batch_axes, param_counts
+from repro.models import lm
+from repro.models import whisper as W
+from repro.models.common import Family, ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, optimizer_specs
+from repro.optim import linear_warmup_cosine
+
+__all__ = ["Trainer", "main"]
+
+
+class Trainer:
+    """Mesh-aware trainer with checkpoint-restart."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh,
+        seq_len: int = 128,
+        global_batch: int = 8,
+        ocfg: Optional[AdamWConfig] = None,
+        ckpt_dir: Optional[str] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.ocfg = ocfg or AdamWConfig(lr=1e-3, moment_dtype=cfg.optim_dtype)
+        self.ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+        self.ckpt_dir = ckpt_dir
+        tp = mesh.shape["model"]
+        self.data = SyntheticLMDataset(
+            DataConfig(vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
+                       seed=seed)
+        )
+
+        key = jax.random.PRNGKey(seed)
+        with jax.set_mesh(mesh):
+            if cfg.family is Family.AUDIO:
+                params, specs = W.init_whisper(key, cfg, tp)
+            else:
+                params, specs = lm.init_lm(key, cfg, tp)
+        self.param_specs = specs
+        self.params = jax.device_put(
+            params, jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                                 is_leaf=lambda s: isinstance(s, P))
+        )
+        self.opt_state = adamw_init(self.params, self.ocfg)
+        self.step = 0
+        self._jit_step = self._build_step()
+
+    def _build_step(self):
+        cfg, mesh, ocfg = self.cfg, self.mesh, self.ocfg
+
+        if cfg.family is Family.AUDIO:
+            def step_fn(params, opt_state, step, tokens, frames):
+                lscale = linear_warmup_cosine(step, 20, 2000)
+                loss, grads = jax.value_and_grad(W.whisper_loss_fn)(
+                    params, cfg, mesh, tokens, frames
+                )
+                params, opt_state, m = adamw_update(params, grads, opt_state, ocfg, lscale)
+                return params, opt_state, {"loss": loss, **m}
+        else:
+            def step_fn(params, opt_state, step, tokens):
+                lscale = linear_warmup_cosine(step, 20, 2000)
+                loss, grads = jax.value_and_grad(lm.loss_fn)(params, cfg, mesh, tokens)
+                params, opt_state, m = adamw_update(params, grads, opt_state, ocfg, lscale)
+                return params, opt_state, {"loss": loss, **m}
+
+        return jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def restore(self) -> bool:
+        if not self.ckpt_dir or latest_step(self.ckpt_dir) is None:
+            return False
+        step, tree, _ = load_checkpoint(self.ckpt_dir)
+        self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+        self.step = step + 1
+        return True
+
+    def run(self, steps: int, ckpt_every: int = 50, log_every: int = 10):
+        history = []
+        with jax.set_mesh(self.mesh):
+            for _ in range(steps):
+                batch = jnp.asarray(self.data.batch(self.step))
+                if self.cfg.family is Family.AUDIO:
+                    frames = jax.random.normal(
+                        jax.random.PRNGKey(self.step),
+                        (self.global_batch, self.cfg.n_audio_frames, self.cfg.d_model),
+                        self.cfg.jdtype,
+                    )
+                    self.params, self.opt_state, m = self._jit_step(
+                        self.params, self.opt_state, jnp.asarray(self.step), batch, frames
+                    )
+                else:
+                    self.params, self.opt_state, m = self._jit_step(
+                        self.params, self.opt_state, jnp.asarray(self.step), batch
+                    )
+                loss = float(m["loss"])
+                history.append({"step": self.step, "loss": loss})
+                if self.step % log_every == 0:
+                    print(f"step {self.step:5d} loss {loss:.4f}", flush=True)
+                if self.ckpt and self.step % ckpt_every == 0:
+                    self.ckpt.save(
+                        self.step, {"params": self.params, "opt": self.opt_state}
+                    )
+                self.step += 1
+        if self.ckpt:
+            self.ckpt.wait()
+        return history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config, CPU mesh")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cfg = get_smoke(args.arch)
+        mesh = make_cpu_mesh()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    pc = param_counts(cfg)
+    print(f"arch={cfg.name} params~{pc['total']/1e6:.1f}M active~{pc['active']/1e6:.1f}M")
+    tr = Trainer(cfg, mesh, seq_len=args.seq_len, global_batch=args.batch,
+                 ckpt_dir=args.ckpt_dir)
+    tr.restore()
+    hist = tr.run(args.steps)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,609 @@
+"""Layer library: norms, rotary, GQA attention (flash + decode paths),
+MLP variants, MoE (dense reference + all-to-all expert parallel).
+
+Conventions
+-----------
+* params are plain dict pytrees; every ``init_*`` returns ``(params, specs)``
+  where ``specs`` mirrors params with ``PartitionSpec`` leaves.
+* linear weights are (in, out); attention projections keep an explicit
+  (heads, head_dim) split so head sharding is a named axis.
+* TP ("model" axis) shards: q heads, FFN inner dim, expert dim, vocab.
+  GQA with n_kv < TP replicates kv heads to ``n_kv_store = n_kv * rep``
+  "virtual" heads (rep = tp // gcd(n_kv, tp)) so the KV cache shards evenly
+  and attention needs NO cross-shard collectives (vLLM-style).
+* archs whose head count does not divide TP (internvl 14H, whisper 20H) run
+  attention data-parallel only: weights replicated over "model", FFN still
+  TP-sharded (documented in DESIGN.md §Arch-applicability).
+* fsdp=True additionally shards the non-TP weight axis over "data"
+  (ZeRO-3); XLA inserts the all-gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+__all__ = [
+    "rmsnorm_init",
+    "rmsnorm",
+    "rope",
+    "attn_tp_enabled",
+    "attention_init",
+    "attention_apply",
+    "mlp_init",
+    "mlp_apply",
+    "moe_init",
+    "moe_apply",
+    "embed_init",
+    "Cache",
+]
+
+Params = Dict[str, Any]
+
+
+def _gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a
+
+
+def pick_batch_axes(mesh, batch: int):
+    # Largest prefix of ('pod','data') whose size product divides `batch`;
+    # long-context decode (batch 1) replicates over the data axis.
+    axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    chosen = []
+    prod = 1
+    for a in axes:
+        if batch % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    if not chosen:
+        return None
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Tuple[Params, Params]:
+    return {"g": jnp.ones((d,), dtype)}, {"g": P(None)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (B, S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cache:
+    """Functional KV cache: fixed buffers + explicit length.
+
+    With INT8 KV quantization (cfg.kv_quant) the buffers are int8 and
+    ``k_scale``/``v_scale`` hold per-token-per-head absmax scales — the
+    paper-aligned A8 cache that halves decode HBM traffic."""
+
+    k: jnp.ndarray  # (B, S_max, n_kv_store, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32
+    k_scale: Optional[jnp.ndarray] = None  # (B, S_max, n_kv_store, 1) f32
+    v_scale: Optional[jnp.ndarray] = None
+
+
+def _kv_quantize(k: jnp.ndarray):
+    """(B,S,H,hd) -> (int8 values, (B,S,H,1) f32 scales)."""
+    s = jnp.maximum(
+        jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1, keepdims=True), 1e-8
+    ) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def _kv_dequant(q: jnp.ndarray, s, dtype) -> jnp.ndarray:
+    if s is None:
+        return q.astype(dtype)
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def attn_tp_enabled(cfg: ModelConfig, tp: int) -> bool:
+    return cfg.n_heads % tp == 0 and tp > 1
+
+
+def kv_store_heads(cfg: ModelConfig, tp: int) -> int:
+    if not attn_tp_enabled(cfg, tp):
+        return cfg.n_kv
+    rep = tp // _gcd(cfg.n_kv, tp)
+    return cfg.n_kv * rep
+
+
+def attention_init(
+    key: jax.Array, cfg: ModelConfig, tp: int, cross: bool = False
+) -> Tuple[Params, Params]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    dt = cfg.jdtype
+    params = {
+        "wq": jax.random.normal(k1, (d, h, hd), dt) * s,
+        "wk": jax.random.normal(k2, (d, kv, hd), dt) * s,
+        "wv": jax.random.normal(k3, (d, kv, hd), dt) * s,
+        "wo": jax.random.normal(k4, (h, hd, d), dt) * (s / math.sqrt(h / 1.0)),
+    }
+    tp_on = attn_tp_enabled(cfg, tp)
+    hspec = "model" if tp_on else None
+    fs = "data" if cfg.fsdp else None
+    specs = {
+        "wq": P(fs, hspec, None),
+        "wk": P(fs, None, None),  # kv heads may not divide tp; see kv repeat
+        "wv": P(fs, None, None),
+        "wo": P(hspec, None, fs),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), dt)
+        params["k_norm"] = jnp.ones((hd,), dt)
+        specs["q_norm"] = P(None)
+        specs["k_norm"] = P(None)
+    return params, specs
+
+
+def _qk_head_norm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def _repeat_kv(k: jnp.ndarray, store: int) -> jnp.ndarray:
+    """(B, S, n_kv, hd) -> (B, S, store, hd), repeating heads contiguously so
+    virtual head v serves q-heads [v * H/store : (v+1) * H/store)."""
+    b, s, kv, hd = k.shape
+    if store == kv:
+        return k
+    rep = store // kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, Hkv_store, hd)
+    v: jnp.ndarray,
+    causal: bool,
+    q_offset: jnp.ndarray | int = 0,  # absolute position of q[0]
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Streaming-softmax attention, lax.scan over KV chunks (bounds memory
+    at Sq x kv_chunk scores per step — the 32k cells need this)."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    # dots run in the model dtype (bf16 on TPU -> MXU rate, half the bytes);
+    # softmax statistics and the accumulator stay f32 (standard flash)
+    dot_dt = q.dtype
+    qf = (q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * scale).astype(dot_dt)
+    n_chunks = max(skv // kv_chunk, 1)
+    kc = k.reshape(b, n_chunks, skv // n_chunks, hkv, hd).astype(dot_dt)
+    vc = v.reshape(b, n_chunks, skv // n_chunks, hkv, hd).astype(dot_dt)
+    q_pos = jnp.arange(sq) + q_offset  # (Sq,)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, c_idx = inputs  # (B, C, hkv, hd) x2, ()
+        ck = kb.shape[1]
+        scores = jnp.einsum(
+            "bqkgh,bckh->bkgqc", qf, kb, preferred_element_type=jnp.float32
+        )  # (B,hkv,g,Sq,C) f32
+        if causal:
+            kv_pos = c_idx * ck + jnp.arange(ck)
+            mask = q_pos[:, None] >= kv_pos[None, :]  # (Sq, C)
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bkgqc,bckh->bkgqh", p.astype(dot_dt), vb,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)  # (n_chunks, B, C, hkv, hd)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc_t, vc_t, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def _decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    cache_k: jnp.ndarray,  # (B, S_max, hkv, hd) — model dtype or int8
+    cache_v: jnp.ndarray,
+    length: jnp.ndarray,  # () — valid prefix length INCLUDING the new token
+    k_scale=None,  # (B, S_max, hkv, 1) f32 when the cache is int8
+    v_scale=None,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    s_max, hkv = cache_k.shape[1], cache_k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    # low-precision dots with f32 accumulation avoid materializing a 4-byte
+    # copy of the (huge) cache operand; f32 models keep f32 math (tests)
+    dot_dt = (
+        jnp.bfloat16
+        if (k_scale is not None or cache_k.dtype == jnp.bfloat16)
+        else jnp.float32
+    )
+    qf = (q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * scale).astype(dot_dt)
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qf, cache_k.astype(dot_dt),
+        preferred_element_type=jnp.float32,
+    )  # (B,hkv,g,1,S) f32
+    if k_scale is not None:
+        # per-token scales factor OUT of the contraction (exact)
+        ks = jnp.moveaxis(k_scale[..., 0], 1, -1)[:, :, None, None, :]
+        scores = scores * ks
+    valid = jnp.arange(s_max)[None] < length  # (1, S)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        vs = jnp.moveaxis(v_scale[..., 0], 1, -1)[:, :, None, None, :]
+        p = p * vs  # fold the per-token V scale into the weights (exact)
+    out = jnp.einsum(
+        "bkgqs,bskh->bkgqh", p.astype(dot_dt),
+        cache_v.astype(dot_dt), preferred_element_type=jnp.float32,
+    )
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention_apply(
+    params: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    tp: int,
+    cache: Optional[Cache] = None,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    b, s, d = x.shape
+    store = kv_store_heads(cfg, tp)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qk_norm:
+        q = _qk_head_norm(q, params["q_norm"])
+    if kv_override is not None:
+        k, v = kv_override  # already (B, T, store, hd)
+        new_cache = cache
+        if use_rope and positions is not None:
+            q = rope(q, positions, cfg.rope_theta)
+        out = flash_attention(q, k, v, causal=False)
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if cfg.qk_norm:
+            k = _qk_head_norm(k, params["k_norm"])
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        k = _repeat_kv(k, store)
+        v = _repeat_kv(v, store)
+        quant = cache is not None and cache.k_scale is not None
+        if cache is None:
+            out = flash_attention(q, k, v, causal=causal)
+            new_cache = None
+        elif s == 1:
+            # decode: append then attend over the valid prefix
+            if quant:
+                kq, ksc = _kv_quantize(k)
+                vq, vsc = _kv_quantize(v)
+                ck = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, cache.length, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, cache.length, axis=1)
+                cks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ksc, cache.length, axis=1)
+                cvs = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vsc, cache.length, axis=1)
+                new_len = cache.length + 1
+                out = _decode_attention(q, ck, cv, new_len, k_scale=cks, v_scale=cvs)
+                new_cache = Cache(k=ck, v=cv, length=new_len, k_scale=cks, v_scale=cvs)
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, cache.length, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, cache.length, axis=1)
+                new_len = cache.length + 1
+                out = _decode_attention(q, ck, cv, new_len)
+                new_cache = Cache(k=ck, v=cv, length=new_len)
+        else:
+            # prefill/extend into the cache, then flash over the FULL buffer:
+            # the causal mask (q_pos = offset + i vs absolute kv positions)
+            # attends the cached prefix and masks unwritten tail slots.
+            if quant:
+                kq, ksc = _kv_quantize(k)
+                vq, vsc = _kv_quantize(v)
+                ck = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, cache.length, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, cache.length, axis=1)
+                cks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ksc, cache.length, axis=1)
+                cvs = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vsc, cache.length, axis=1)
+                kf = _kv_dequant(ck, cks, x.dtype)
+                vf = _kv_dequant(cv, cvs, x.dtype)
+                out = flash_attention(q, kf, vf, causal=True, q_offset=cache.length)
+                new_cache = Cache(k=ck, v=cv, length=cache.length + s,
+                                  k_scale=cks, v_scale=cvs)
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, cache.length, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, cache.length, axis=1)
+                out = flash_attention(q, ck, cv, causal=True, q_offset=cache.length)
+                new_cache = Cache(k=ck, v=cv, length=cache.length + s)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jdtype
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    fs = "data" if cfg.fsdp else None
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = {
+            "w_gate": jax.random.normal(k1, (d, f), dt) * s_in,
+            "w_up": jax.random.normal(k2, (d, f), dt) * s_in,
+            "w_down": jax.random.normal(k3, (f, d), dt) * s_out,
+        }
+        specs = {
+            "w_gate": P(fs, "model"),
+            "w_up": P(fs, "model"),
+            "w_down": P("model", fs),
+        }
+    else:
+        k1, k2 = jax.random.split(key)
+        params = {
+            "w_up": jax.random.normal(k1, (d, f), dt) * s_in,
+            "w_down": jax.random.normal(k2, (f, d), dt) * s_out,
+        }
+        specs = {"w_up": P(fs, "model"), "w_down": P("model", fs)}
+    return params, specs
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif cfg.act == "squared_relu":
+        u = x @ params["w_up"]
+        r = jax.nn.relu(u.astype(jnp.float32))
+        h = (r * r).astype(x.dtype)
+    else:  # gelu
+        u = x @ params["w_up"]
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE — dense reference + GShard-style all-to-all expert parallelism
+# ---------------------------------------------------------------------------
+
+
+def moe_ff_split(cfg: ModelConfig, tp: int) -> int:
+    """When n_experts < tp, each expert's FFN columns split across
+    tp // n_experts shards so the (expert x slice) grid covers the model
+    axis exactly (grok-1: 8 experts x 2 slices on tp=16)."""
+    e = cfg.n_experts
+    if tp <= e:
+        assert e % tp == 0, (e, tp)
+        return 1
+    assert tp % e == 0, (e, tp)
+    return tp // e
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, tp: int = 1) -> Tuple[Params, Params]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    split = moe_ff_split(cfg, tp)
+    fs_ = f // split
+    dt = cfg.jdtype
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    fs = "data" if cfg.fsdp else None
+    # storage: (e * split, d, f / split) — total element count == e * d * f
+    params = {
+        "router": jax.random.normal(kr, (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(k1, (e * split, d, fs_), dt) * s_in,
+        "w_up": jax.random.normal(k2, (e * split, d, fs_), dt) * s_in,
+        "w_down": jax.random.normal(k3, (e * split, fs_, d), dt) * s_out,
+    }
+    specs = {
+        "router": P(None, None),
+        "w_gate": P("model", fs, None),
+        "w_up": P("model", fs, None),
+        "w_down": P("model", None, fs),
+    }
+    return params, specs
+
+
+def _topk_gates(logits: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (gate values (T, k) normalized, expert ids (T, k))."""
+    vals, ids = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(vals, axis=-1)
+    return gates, ids
+
+
+def moe_apply_dense(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Reference: every token through every expert, gated combine.
+    Exact math, x E/k compute — smoke tests and tiny configs only.
+    Handles the (e * split, d, f / split) storage layout."""
+    b, s, d = x.shape
+    e = cfg.n_experts
+    es, _, fs_ = params["w_gate"].shape
+    split = es // e
+    t = x.reshape(-1, d)
+    logits = (t.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    gates, ids = _topk_gates(logits, cfg.top_k)
+    combine = jnp.zeros((t.shape[0], e), jnp.float32)
+    combine = jax.vmap(lambda c, i, g: c.at[i].add(g))(combine, ids, gates)
+    # (e*split, d, f/split) -> (e, d, f)
+    wg = params["w_gate"].reshape(e, split, d, fs_).transpose(0, 2, 1, 3).reshape(e, d, split * fs_)
+    wu = params["w_up"].reshape(e, split, d, fs_).transpose(0, 2, 1, 3).reshape(e, d, split * fs_)
+    wd = params["w_down"].reshape(e, split, fs_, d).reshape(e, split * fs_, d)
+    g_out = jnp.einsum("td,edf->tef", t, wg)
+    u_out = jnp.einsum("td,edf->tef", t, wu)
+    h = jax.nn.silu(g_out.astype(jnp.float32)).astype(x.dtype) * u_out
+    y = jnp.einsum("tef,efd->ted", h, wd)
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), combine)
+    return out.astype(x.dtype).reshape(b, s, d)
+
+
+def moe_apply_a2a(
+    params: Params,
+    x: jnp.ndarray,  # (B, S, d) — sharded (data, model) over (B, S)
+    cfg: ModelConfig,
+    mesh,
+    seq_sharded: bool = True,
+) -> jnp.ndarray:
+    """GShard-style EP: tokens route to capacity-bounded per-expert slots,
+    all-to-all over the 'model' axis ships slots to their (expert x
+    ff-slice) owners, expert GEMMs run batched, a second all-to-all ships
+    partial results back (summed over ff slices when experts < tp).
+
+    Inside shard_map each device sees a (B/data, S/model, d) token slab, so
+    capacity is per (device, expert); over-capacity tokens drop to the
+    residual path (GShard semantics).
+    """
+    tp = mesh.shape["model"]
+    e = cfg.n_experts
+    split = moe_ff_split(cfg, tp)
+    e_loc = max(e // tp, 1)
+    batch_axes = pick_batch_axes(mesh, x.shape[0])
+
+    def local(x_loc, router, w_gate, w_up, w_down):
+        b_loc, s_loc, d = x_loc.shape
+        t = x_loc.reshape(-1, d)
+        n_tok = t.shape[0]
+        cap = max(int(cfg.capacity_factor * n_tok * cfg.top_k / e), 4)
+        logits = t.astype(jnp.float32) @ router
+        gates, ids = _topk_gates(logits, cfg.top_k)  # (T, k)
+        flat_ids = ids.reshape(-1)
+        flat_gates = gates.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(n_tok), cfg.top_k)
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # (T*k, E)
+        pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # 0-based rank
+        slot = jnp.sum(pos, axis=-1)
+        keep = (slot >= 0) & (slot < cap)
+        slot_c = jnp.clip(slot, 0, cap - 1)
+        buf = jnp.zeros((e, cap, d), x_loc.dtype)
+        buf = buf.at[flat_ids, slot_c].add(
+            jnp.where(keep[:, None], t[flat_tok], 0.0).astype(x_loc.dtype)
+        )
+        if split > 1:
+            # duplicate each expert's slots to all of its ff-slice owners
+            buf = jnp.repeat(buf, split, axis=0)  # (E*split == tp, cap, d)
+        buf = buf.reshape(tp, e_loc, cap, d)
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0)
+        # recv: (tp, e_loc, cap, d) — every peer's slots for MY experts
+        recv = recv.reshape(e_loc, tp * cap, d)
+        g_out = jnp.einsum("ecd,edf->ecf", recv, w_gate)
+        u_out = jnp.einsum("ecd,edf->ecf", recv, w_up)
+        h = jax.nn.silu(g_out.astype(jnp.float32)).astype(recv.dtype) * u_out
+        y = jnp.einsum("ecf,efd->ecd", h, w_down)  # partial over ff slice
+        y = y.reshape(e_loc, tp, cap, d).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(y, "model", split_axis=0, concat_axis=0)
+        back = back.reshape(e, split, cap, d).sum(axis=1)  # sum ff slices
+        picked = back[flat_ids, slot_c]  # (T*k, d)
+        picked = jnp.where(keep[:, None], picked, 0.0)
+        contrib = picked.astype(jnp.float32) * flat_gates[:, None]
+        out = jnp.zeros((n_tok, d), jnp.float32).at[flat_tok].add(contrib)
+        return out.astype(x_loc.dtype).reshape(b_loc, s_loc, d)
+
+    from jax.experimental.shard_map import shard_map
+
+    tok_spec = (
+        P(batch_axes, "model", None) if seq_sharded else P(batch_axes, None, None)
+    )
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            tok_spec,
+            P(None, None),
+            P("model", None, None),
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=tok_spec,
+        check_rep=False,
+    )
+    return fn(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+
+
+def moe_apply(
+    params: Params, x: jnp.ndarray, cfg: ModelConfig, mesh=None
+) -> jnp.ndarray:
+    if cfg.moe_impl == "a2a" and mesh is not None:
+        return moe_apply_a2a(params, x, cfg, mesh)
+    return moe_apply_dense(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jdtype
+    fs = "data" if cfg.fsdp else None
+    params = {
+        "tok": jax.random.normal(k1, (cfg.vocab_padded, cfg.d_model), dt) * 0.02,
+        "head": jax.random.normal(k2, (cfg.d_model, cfg.vocab_padded), dt)
+        * (1.0 / math.sqrt(cfg.d_model)),
+    }
+    specs = {"tok": P("model", fs), "head": P(fs, "model")}
+    return params, specs

@@ -1,0 +1,280 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked training scan,
+O(1)-state decode step  [arXiv:2405.21060].
+
+The SSD parametrization: per head h, state x_t evolves as
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * B_t (x) u_t
+    y_t = C_t . S_t + D_h * u_t
+with B_t, C_t shared across head groups (``ssm_groups``, GQA-like).  Training
+uses the chunked dual form: quadratic attention-like intra-chunk term plus a
+chunk-level recurrence — sub-quadratic in sequence length, which is why the
+``long_500k`` shape runs for SSM/hybrid archs only.
+
+TP: heads shard over 'model' (d_inner = heads * headdim; all assigned SSM
+configs have heads % 16 == 0); the state dim N stays local per head.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "init_ssm_cache", "ssd_chunked"]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    din = cfg.d_inner
+    h = cfg.ssm_heads
+    g = cfg.ssm_groups
+    n = cfg.ssm_state
+    conv_ch = din + 2 * g * n
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        # in_proj -> [z (din), x (din), B (g*n), C (g*n), dt (h)]
+        "w_in": jax.random.normal(ks[0], (d, 2 * din + 2 * g * n + h), dt) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), dt) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "w_out": jax.random.normal(ks[2], (din, d), dt) / math.sqrt(din),
+    }
+    norm_p, _ = rmsnorm_init(din, dt)
+    params["norm"] = norm_p
+    fs = "data" if cfg.fsdp else None
+    specs = {
+        "w_in": P(fs, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "A_log": P("model"),
+        "D": P("model"),
+        "dt_bias": P("model"),
+        "w_out": P("model", fs),
+        "norm": {"g": P("model")},
+    }
+    return params, specs
+
+
+def _split_in(proj: jnp.ndarray, cfg: ModelConfig):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din : 2 * din + 2 * g * n]
+    dt = proj[..., 2 * din + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _causal_conv_with_history(
+    combined: jnp.ndarray, s: int, w: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Depthwise causal conv: ``combined`` (B, W-1+S, C) already carries the
+    left history; returns the last ``s`` conv outputs (B, S, C)."""
+    width = w.shape[0]
+    out = sum(
+        combined[:, i : i + s, :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(combined.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., q) -> (..., q, q) lower-triangular segment sums:
+    out[.., i, j] = sum_{j < k <= i} a[.., k] (0 on diagonal, -inf above)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    idx = jnp.arange(q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, Pdim) — already dt-scaled inputs u * dt
+    da: jnp.ndarray,  # (B, S, H) log-decay dt * A  (negative)
+    b_mat: jnp.ndarray,  # (B, S, H, N) B expanded to heads
+    c_mat: jnp.ndarray,  # (B, S, H, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, Pdim, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xr = x.reshape(bsz, nc, q, h, p)
+    dar = da.reshape(bsz, nc, q, h).astype(jnp.float32)
+    br = b_mat.reshape(bsz, nc, q, h, n)
+    cr = c_mat.reshape(bsz, nc, q, h, n)
+
+    # intra-chunk (diagonal) term: attention-like with decay kernel L
+    ell = jnp.exp(_segsum(dar.transpose(0, 1, 3, 2)))  # (b, nc, h, q, q)
+    scores = jnp.einsum("bclhn,bcshn->bchls", cr, br)  # (b,nc,h,q,q)
+    y_diag = jnp.einsum(
+        "bchls,bchls,bcshp->bclhp",
+        scores,
+        ell.astype(scores.dtype),
+        xr,
+    )
+
+    # chunk states: contribution of each chunk to the running state
+    da_cum = jnp.cumsum(dar, axis=2)  # (b,nc,q,h)
+    da_total = da_cum[:, :, -1, :]  # (b,nc,h)
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cum)  # (b,nc,q,h)
+    states = jnp.einsum(
+        "bcshn,bcsh,bcshp->bchpn", br, decay_to_end.astype(br.dtype), xr
+    )  # (b,nc,h,p,n)
+
+    # inter-chunk recurrence over nc
+    def step(carry, inp):
+        st_prev = carry  # (b,h,p,n) f32
+        st_c, da_tot = inp  # (b,h,p,n), (b,h)
+        new = st_c.astype(jnp.float32) + jnp.exp(da_tot)[:, :, None, None] * st_prev
+        return new, st_prev
+
+    st0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    states_t = jnp.moveaxis(states, 1, 0)  # (nc, b, h, p, n)
+    da_tot_t = jnp.moveaxis(da_total, 1, 0)  # (nc, b, h)
+    final_state, prev_states = jax.lax.scan(step, st0, (states_t, da_tot_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,n) state BEFORE chunk
+
+    # off-diagonal term: prior state read out through decay
+    state_decay = jnp.exp(da_cum)  # (b,nc,q,h)
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bclh->bclhp",
+        cr,
+        prev_states.astype(cr.dtype),
+        state_decay.astype(cr.dtype),
+    )
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def _expand_groups(m: jnp.ndarray, heads: int) -> jnp.ndarray:
+    """(B, S, G, N) -> (B, S, H, N) by repeating each group H/G times."""
+    g = m.shape[2]
+    if g == heads:
+        return m
+    return jnp.repeat(m, heads // g, axis=2)
+
+
+def mamba_apply(
+    params: Params,
+    xin: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    init_state: Optional[jnp.ndarray] = None,
+    conv_state: Optional[jnp.ndarray] = None,  # (B, W-1, C) cached tail
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence SSD. Returns (y (B,S,d), final ssm state, conv tail).
+
+    ``conv_state`` carries the previous window's last W-1 conv inputs so
+    extend calls (SD verify windows) are exact; zeros == fresh sequence."""
+    bsz, s, _ = xin.shape
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    proj = xin @ params["w_in"]
+    z, xbc, dt_raw = _split_in(proj, cfg)
+    width = cfg.ssm_conv
+    if conv_state is None:
+        conv_state = jnp.zeros((bsz, width - 1, xbc.shape[-1]), xbc.dtype)
+    combined = jnp.concatenate([conv_state, xbc], axis=1)  # (B, W-1+S, C)
+    conv_tail = combined[:, -(width - 1) :, :]  # next window's conv state
+    xbc = _causal_conv_with_history(combined, s, params["conv_w"], params["conv_b"])
+    xpart = xbc[..., : cfg.d_inner].reshape(bsz, s, h, p)
+    b_mat = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., cfg.d_inner + g * n :].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )  # (B,S,H)
+    a = -jnp.exp(params["A_log"])  # (H,) negative
+    da = dt * a  # log decay
+    x_scaled = xpart * dt[..., None].astype(xpart.dtype)
+    b_h, c_h = _expand_groups(b_mat, h), _expand_groups(c_mat, h)
+    # pad S to a chunk multiple: zero inputs contribute nothing to states
+    # and zero log-decay (exp(0)=1) leaves the recurrence untouched — exact.
+    q = min(cfg.ssm_chunk, s)
+    pad = (-s) % q
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        x_scaled = jnp.pad(x_scaled, padw)
+        b_h = jnp.pad(b_h, padw)
+        c_h = jnp.pad(c_h, padw)
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    y, final_state = ssd_chunked(x_scaled, da, b_h, c_h, q, init_state)
+    if pad:
+        y = y[:, :s]
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xpart
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    return y @ params["w_out"], final_state, conv_tail
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    conv_ch = cfg.d_inner + 2 * g * n
+    return {
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(
+    params: Params,
+    xin: jnp.ndarray,  # (B, 1, d)
+    cfg: ModelConfig,
+    cache: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token recurrent step: O(1) state update (no KV growth)."""
+    bsz = xin.shape[0]
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    proj = xin @ params["w_in"]  # (B,1,...)
+    z, xbc_new, dt_raw = _split_in(proj, cfg)
+    # conv over [cached tail, new]: take the newest output column
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B, W, C)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(xin.dtype)  # (B, C)
+    xpart = xbc[..., : cfg.d_inner].reshape(bsz, h, p)
+    b_mat = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(bsz, g, n)
+    c_mat = xbc[..., cfg.d_inner + g * n :].reshape(bsz, g, n)
+    b_h = jnp.repeat(b_mat, h // g, axis=1)  # (B,H,N)
+    c_h = jnp.repeat(c_mat, h // g, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    dbx = jnp.einsum(
+        "bhp,bhn->bhpn", (xpart * dt[..., None].astype(xpart.dtype)).astype(jnp.float32), b_h.astype(jnp.float32)
+    )
+    state = cache["state"] * decay[:, :, None, None] + dbx
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_h.astype(jnp.float32)).astype(xin.dtype)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xpart
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    new_cache = {"state": state, "conv": window[:, 1:, :]}
+    return y @ params["w_out"], new_cache

@@ -1,0 +1,13 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    optimizer_specs,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_grads_int8,
+    decompress_grads_int8,
+    ef_init,
+    ErrorFeedbackState,
+)

@@ -1,0 +1,123 @@
+"""AdamW with ZeRO-1 sharded moments and configurable moment dtype.
+
+Moments inherit each parameter's PartitionSpec plus an optional extra
+sharding over the 'data' axis (ZeRO-1) on the largest dim when the spec
+leaves it free.  The giants (llama3-405b) run bf16 moments (DESIGN.md §6);
+everything else fp32.  Global-norm clipping is fused into the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "optimizer_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def optimizer_specs(
+    param_specs,
+    abstract_params=None,
+    zero1_axis: Optional[str] = "data",
+    axis_size: int = 1,
+):
+    """Moment specs mirror parameter specs.  When ``zero1_axis`` is set, each
+    moment additionally shards its largest free-and-divisible dim over that
+    axis (ZeRO-1).  ``abstract_params`` supplies shapes for the divisibility
+    check; without it no extra sharding is added."""
+
+    def one(spec: P, shape) -> P:
+        parts = list(spec)
+        if zero1_axis and shape is not None:
+            # pad spec to rank
+            parts = parts + [None] * (len(shape) - len(parts))
+            free = [
+                (shape[i], i)
+                for i in range(len(shape))
+                if parts[i] is None and shape[i] % max(axis_size, 1) == 0 and shape[i] >= axis_size
+            ]
+            if free:
+                _, idx = max(free)
+                parts[idx] = zero1_axis
+        return P(*parts)
+
+    if abstract_params is None:
+        mom = jax.tree.map(
+            lambda s: one(s, None), param_specs, is_leaf=lambda s: isinstance(s, P)
+        )
+    else:
+        flat_s, tdef = jax.tree.flatten(
+            param_specs, is_leaf=lambda s: isinstance(s, P)
+        )
+        flat_p = tdef.flatten_up_to(abstract_params)
+        mom = tdef.unflatten(
+            [one(s, p.shape) for s, p in zip(flat_s, flat_p)]
+        )
+    return {"mu": mom, "nu": mom, "count": P()}
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    cfg: AdamWConfig,
+    lr_scale: jnp.ndarray | float = 1.0,
+):
+    """-> (new_params, new_state, metrics)."""
+    # global-norm clip (f32 accumulation)
+    gsq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**cf
+    bc2 = 1.0 - cfg.b2**cf
+    lr = cfg.lr * lr_scale
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        step = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": tdef.unflatten([o[1] for o in out]),
+        "nu": tdef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,53 @@
+"""Gradient compression for cross-pod traffic: per-tensor INT8 with error
+feedback (the residual of each quantization round folds into the next).
+
+At 512+ chips the cross-pod data-parallel all-reduce is the scarce
+collective; INT8 gradients cut those bytes 4x vs f32 (2x vs bf16) at the
+cost of one extra buffer.  Error feedback keeps the *accumulated* quantizer
+bias at zero, which is what preserves convergence (1-bit Adam lineage).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ErrorFeedbackState", "compress_grads_int8", "decompress_grads_int8"]
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree matching grads
+
+
+def ef_init(grads_like) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+def compress_grads_int8(
+    grads, ef: ErrorFeedbackState
+) -> Tuple[Any, Any, ErrorFeedbackState]:
+    """-> (int8 tree, f32 scale tree, new error-feedback state)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)) / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qs = tdef.unflatten([o[0] for o in outs])
+    scales = tdef.unflatten([o[1] for o in outs])
+    new_ef = ErrorFeedbackState(residual=tdef.unflatten([o[2] for o in outs]))
+    return qs, scales, new_ef
+
+
+def decompress_grads_int8(qs, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, qs, scales
+    )

@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "linear_warmup_cosine"]
+
+
+def cosine_schedule(step, total_steps: int, min_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    return min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int, min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(warmup, 1), 1.0)
+    return warm * cosine_schedule(step, total_steps, min_frac)

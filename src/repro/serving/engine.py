@@ -1,0 +1,118 @@
+"""Serving engine: wires real zoo models into the SD / APSD drivers.
+
+Builds `LMInterface` adapters (prefill / extend / rewind over the functional
+caches) for any of: bf16 `lm.apply_lm`, W4A8 `apply_quantized_lm`, BVQ
+`apply_bvq_lm` — so the full paper configuration
+
+    TLM = W4A8+LRU target model,  DLM = BVQ draft model,  APSD controller
+
+runs end to end on real weights.  Rewind is O(1): reset the cache length
+(stale slots are overwritten and masked).  On a TPU mesh the draft and
+verify dispatches overlap (the WDOS idea); on CPU they serialize but are
+bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apsd import APSDConfig, apsd_generate
+from repro.core.speculative import LMInterface, SDConfig, sd_generate
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.serving import quantized_lm as qlm
+
+__all__ = ["make_interface", "ServingModel", "serve_sd", "serve_apsd"]
+
+
+@dataclasses.dataclass
+class ServingModel:
+    cfg: ModelConfig
+    params: Any
+    mode: str = "bf16"  # bf16 | w4a8 | bvq
+    mesh: Any = None
+    s_max: int = 512
+    use_pallas: bool = False
+
+    def _apply(self, params, tokens, cache):
+        if self.mode == "w4a8":
+            return qlm.apply_quantized_lm(
+                params, self.cfg, self.mesh, tokens, cache=cache,
+                use_pallas=self.use_pallas,
+            )
+        if self.mode == "bvq":
+            return qlm.apply_bvq_lm(
+                params, self.cfg, self.mesh, tokens, cache=cache,
+                use_pallas=self.use_pallas,
+            )
+        return lm.apply_lm(params, self.cfg, self.mesh, tokens, cache=cache)
+
+
+def make_interface(model: ServingModel) -> LMInterface:
+    cfg, mesh, s_max = model.cfg, model.mesh, model.s_max
+
+    def fresh_cache(batch):
+        if model.mode in ("w4a8", "bvq"):
+            # quantized paths use the dense attn cache layout
+            c = lm.init_cache(
+                dataclasses.replace(cfg),  # same shapes
+                batch, s_max, tp=mesh.shape["model"] if mesh else 1,
+            )
+            return c
+        return lm.init_cache(cfg, batch, s_max, tp=mesh.shape["model"] if mesh else 1)
+
+    @jax.jit
+    def _prefill(params, tokens, cache):
+        return model._apply(params, tokens, cache)
+
+    @jax.jit
+    def _extend(params, tokens, cache):
+        return model._apply(params, tokens, cache)
+
+    def prefill(params, tokens):
+        cache = fresh_cache(tokens.shape[0])
+        return _prefill(params, tokens, cache)
+
+    def extend(params, tokens, cache):
+        return _extend(params, tokens, cache)
+
+    def rewind(cache, n):
+        c = dict(cache)
+        c["length"] = cache["length"] - n
+        return c
+
+    return LMInterface(prefill=prefill, extend=extend, rewind=rewind)
+
+
+def serve_sd(
+    key: jax.Array,
+    target: ServingModel,
+    draft: ServingModel,
+    prompt: jnp.ndarray,
+    cfg: SDConfig,
+):
+    return sd_generate(
+        key,
+        make_interface(target), target.params,
+        make_interface(draft), draft.params,
+        prompt, cfg,
+    )
+
+
+def serve_apsd(
+    key: jax.Array,
+    target: ServingModel,
+    draft: ServingModel,
+    prompt: jnp.ndarray,
+    cfg: APSDConfig,
+):
+    return apsd_generate(
+        key,
+        make_interface(target), target.params,
+        make_interface(draft), draft.params,
+        prompt, cfg,
+    )

@@ -1,0 +1,140 @@
+"""Per-assigned-architecture smoke tests: REDUCED same-family configs run
+one forward + one train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke, shape_applicable
+from repro.launch.steps import param_counts
+from repro.models import lm
+from repro.models import whisper as W
+from repro.models.common import Family
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, batch=2, seq=16):
+    toks = jax.random.randint(KEY, (batch, seq), 0, cfg.vocab)
+    extra = {}
+    if cfg.family is Family.VLM:
+        extra["vision_embeds"] = jax.random.normal(
+            KEY, (batch, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype
+        )
+    if cfg.family is Family.AUDIO:
+        extra["frames"] = jax.random.normal(
+            KEY, (batch, cfg.n_audio_frames, cfg.d_model), cfg.jdtype
+        )
+    return toks, extra
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_smoke(arch)
+    toks, extra = _inputs(cfg)
+    if cfg.family is Family.AUDIO:
+        p, _ = W.init_whisper(KEY, cfg, tp=1)
+        logits, _ = W.apply_whisper(p, cfg, None, toks, frames=extra["frames"])
+        exp_s = toks.shape[1]
+    else:
+        p, _ = lm.init_lm(KEY, cfg, tp=1)
+        logits, _ = lm.apply_lm(p, cfg, None, toks,
+                                vision_embeds=extra.get("vision_embeds"))
+        exp_s = toks.shape[1] + (cfg.n_vision_tokens if cfg.family is Family.VLM else 0)
+    assert logits.shape == (2, exp_s, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One grad + update step: loss finite, params change, no NaNs."""
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = get_smoke(arch)
+    toks, extra = _inputs(cfg, seq=17)
+    ocfg = AdamWConfig(lr=1e-3)
+    if cfg.family is Family.AUDIO:
+        p, _ = W.init_whisper(KEY, cfg, tp=1)
+        loss, grads = jax.value_and_grad(W.whisper_loss_fn)(
+            p, cfg, None, toks, extra["frames"]
+        )
+    else:
+        p, _ = lm.init_lm(KEY, cfg, tp=1)
+        loss, grads = jax.value_and_grad(
+            lambda pp: lm.loss_fn(pp, cfg, None, toks,
+                                  vision_embeds=extra.get("vision_embeds"))
+        )(p)
+    assert np.isfinite(float(loss)) and float(loss) > 0, arch
+    state = adamw_init(p, ocfg)
+    new_p, _, m = adamw_update(p, grads, state, ocfg)
+    assert np.isfinite(float(m["grad_norm"]))
+    # at least one leaf moved
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(new_p))
+    )
+    assert moved, arch
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(new_p))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if a != "whisper-large-v3"])
+def test_smoke_decode_step(arch):
+    """Prefill + one decode step on the smoke config."""
+    cfg = get_smoke(arch)
+    toks, extra = _inputs(cfg, seq=8)
+    p, _ = lm.init_lm(KEY, cfg, tp=1)
+    cache = lm.init_cache(cfg, 2, 32, tp=1)
+    _, cache = lm.apply_lm(p, cfg, None, toks, cache=cache,
+                           vision_embeds=extra.get("vision_embeds"))
+    lg, cache = lm.apply_lm(p, cfg, None, toks[:, :1], cache=cache)
+    assert lg.shape == (2, 1, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(lg))), arch
+
+
+def test_full_config_param_counts():
+    """FULL configs match their published sizes (sanity on exact dims)."""
+    expect = {
+        "mamba2-1.3b": 1.4e9, "zamba2-7b": 6.7e9, "deepseek-67b": 67e9,
+        "llama3-405b": 405e9, "nemotron-4-15b": 15.6e9, "qwen3-8b": 8.2e9,
+        "grok-1-314b": 314e9, "whisper-large-v3": 1.6e9,
+    }
+    for arch, n in expect.items():
+        got = param_counts(get_config(arch))["total"]
+        assert abs(got - n) / n < 0.12, (arch, got, n)
+
+
+def test_exact_dims_match_assignment():
+    checks = {
+        "mamba2-1.3b": dict(n_layers=48, d_model=2048, vocab=50280, ssm_state=128),
+        "internvl2-1b": dict(n_layers=24, d_model=896, n_heads=14, n_kv=2,
+                             d_ff=4864, vocab=151655),
+        "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32, n_kv=32,
+                          d_ff=14336, vocab=32000, ssm_state=64),
+        "moonshot-v1-16b-a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                    d_ff=1408, vocab=163840, n_experts=64, top_k=6),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv=8,
+                            d_ff=32768, vocab=131072, n_experts=8, top_k=2),
+        "deepseek-67b": dict(n_layers=95, d_model=8192, n_heads=64, n_kv=8,
+                             d_ff=22016, vocab=102400),
+        "llama3-405b": dict(n_layers=126, d_model=16384, n_heads=128, n_kv=8,
+                            d_ff=53248, vocab=128256),
+        "nemotron-4-15b": dict(n_layers=32, d_model=6144, n_heads=48, n_kv=8,
+                               d_ff=24576, vocab=256000, act="squared_relu"),
+        "qwen3-8b": dict(n_layers=36, d_model=4096, n_heads=32, n_kv=8,
+                         d_ff=12288, vocab=151936, qk_norm=True),
+        "whisper-large-v3": dict(n_layers=32, n_encoder_layers=32, d_model=1280,
+                                 n_heads=20, n_kv=20, d_ff=5120, vocab=51866),
+    }
+    for arch, fields in checks.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_long_context_applicability():
+    assert shape_applicable("mamba2-1.3b", "long_500k")
+    assert shape_applicable("zamba2-7b", "long_500k")
+    for a in ("llama3-405b", "qwen3-8b", "whisper-large-v3", "internvl2-1b",
+              "grok-1-314b", "deepseek-67b", "nemotron-4-15b", "moonshot-v1-16b-a3b"):
+        assert not shape_applicable(a, "long_500k"), a

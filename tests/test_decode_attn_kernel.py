@@ -1,0 +1,66 @@
+"""Fused int8-KV decode-attention Pallas kernel vs the jnp oracle.
+
+Oracle dots run in bf16 (layers._decode_attention's quantized path), the
+kernel in f32 — tolerances cover that rounding gap, far below the int8
+cache quantization noise itself."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attn import decode_attention_int8_pallas
+from repro.models.layers import _decode_attention, _kv_quantize
+
+RNG = np.random.RandomState(0)
+
+
+def _setup(b, s, kvs, g, hd):
+    h = kvs * g
+    q = jnp.asarray(RNG.randn(b, 1, h, hd).astype(np.float32))
+    k = jnp.asarray(RNG.randn(b, s, kvs, hd).astype(np.float32))
+    v = jnp.asarray(RNG.randn(b, s, kvs, hd).astype(np.float32))
+    kq, ks = _kv_quantize(k)
+    vq, vs = _kv_quantize(v)
+    return q, kq, ks, vq, vs
+
+
+@pytest.mark.parametrize(
+    "b,s,kvs,g,hd,block_s",
+    [
+        (2, 64, 4, 2, 32, 16),
+        (1, 128, 2, 4, 64, 32),
+        (4, 32, 1, 8, 128, 32),  # GQA-16-like: one kv head per shard
+        (2, 64, 4, 2, 32, 64),  # single block
+    ],
+)
+@pytest.mark.parametrize("length", [1, 17, None])
+def test_matches_oracle(b, s, kvs, g, hd, block_s, length):
+    q, kq, ks, vq, vs = _setup(b, s, kvs, g, hd)
+    h = kvs * g
+    ln = jnp.asarray(s if length is None else min(length, s), jnp.int32)
+    want = _decode_attention(q, kq, vq, ln, k_scale=ks, v_scale=vs)
+    qg = q.reshape(b, 1, kvs, g, hd)[:, 0]
+    got = decode_attention_int8_pallas(
+        qg, kq, ks[..., 0], vq, vs[..., 0], ln, block_s=block_s
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.reshape(b, 1, h, hd)),
+        np.asarray(want, np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+def test_masking_exact():
+    """Positions beyond `length` must not contribute at all: poisoning the
+    tail of the cache must not change the output."""
+    b, s, kvs, g, hd = 1, 64, 2, 2, 32
+    q, kq, ks, vq, vs = _setup(b, s, kvs, g, hd)
+    ln = jnp.asarray(20, jnp.int32)
+    qg = q.reshape(b, 1, kvs, g, hd)[:, 0]
+    base = decode_attention_int8_pallas(qg, kq, ks[..., 0], vq, vs[..., 0], ln, block_s=16)
+    kq2 = kq.at[:, 20:].set(127)
+    vs2 = vs.at[:, 20:].set(1e6)
+    poisoned = decode_attention_int8_pallas(
+        qg, kq2, ks[..., 0], vq, vs2[..., 0], ln, block_s=16
+    )
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(poisoned))

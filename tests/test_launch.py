@@ -1,0 +1,87 @@
+"""Launch layer on a 1-device mesh: input_specs, build_cell lower+compile
+with smoke configs (the 512-device production meshes are covered by
+`repro.launch.dryrun`, which cannot run inside this test process because
+jax's device count is already locked)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.launch.mesh import make_cpu_mesh
+from repro.launch.steps import build_cell, input_specs, param_counts
+from repro.models.common import SHAPES, Family, ShapeConfig
+
+MESH = make_cpu_mesh()
+
+SMALL_SHAPES = {
+    "train": ShapeConfig("t", 32, 2, "train"),
+    "prefill": ShapeConfig("p", 32, 2, "prefill"),
+    "decode": ShapeConfig("d", 32, 2, "decode"),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_build_cell_compiles_smoke(arch, kind):
+    cfg = get_smoke(arch)
+    if cfg.family is Family.MOE:
+        cfg = dataclasses.replace(cfg, moe_impl="a2a")  # exercise shard_map
+    shape = SMALL_SHAPES[kind]
+    with jax.set_mesh(MESH):
+        cell = build_cell(cfg, shape, MESH, donate=False)
+        compiled = cell.fn.lower(*cell.args).compile()
+    cost = compiled.cost_analysis()
+    cost = cost if isinstance(cost, dict) else cost[0]
+    assert float(cost.get("flops", 0)) > 0 or kind == "decode"
+
+
+def test_input_specs_cover_every_family():
+    for arch in ARCH_IDS:
+        cfg = get_smoke(arch)
+        structs, shardings = input_specs(cfg, SMALL_SHAPES["train"], MESH)
+        assert "tokens" in structs and "tokens" in shardings
+        if cfg.family is Family.VLM:
+            assert "vision_embeds" in structs
+        if cfg.family is Family.AUDIO:
+            assert "frames" in structs
+        for v in structs.values():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_kv_quant_decode_consistency():
+    from repro.models import lm
+    from repro.models.common import ModelConfig
+
+    cfg = ModelConfig(name="t", family=Family.DENSE, n_layers=2, d_model=64,
+                      n_heads=4, n_kv=2, d_ff=128, vocab=97, dtype="float32",
+                      kv_quant=True)
+    key = jax.random.PRNGKey(0)
+    p, _ = lm.init_lm(key, cfg, tp=1)
+    toks = jax.random.randint(key, (2, 12), 0, 97)
+    cache = lm.init_cache(cfg, 2, 32, tp=1)
+    assert cache["attn"]["k"].dtype == jnp.int8
+    lgp, cache = lm.apply_lm(p, cfg, None, toks[:, :8], cache=cache)
+    lgd, cache = lm.apply_lm(p, cfg, None, toks[:, 8:9], cache=cache)
+    lgf, _ = lm.apply_lm(p, cfg, None, toks[:, :9])
+    # int8 KV adds bounded quantization noise
+    assert float(jnp.max(jnp.abs(lgf[:, 7] - lgp[:, -1]))) < 0.08
+    assert float(jnp.max(jnp.abs(lgf[:, 8] - lgd[:, 0]))) < 0.08
+
+
+def test_perf_variants_registry():
+    from repro.launch.perf import NAMED_VARIANTS
+
+    assert "w4a8+kvq8" in NAMED_VARIANTS
+    cfgs = get_smoke("deepseek-67b")
+    ov = {k: v for k, v in NAMED_VARIANTS["kvq8"].items() if not k.startswith("__")}
+    dataclasses.replace(cfgs, **ov)  # every override must be a real field
+
+
+def test_param_counts_positive():
+    for arch in ARCH_IDS:
+        pc = param_counts(get_smoke(arch))
+        assert pc["total"] > 0 and pc["active"] > 0
+        assert pc["active"] <= pc["total"] * 1.5  # hybrid active can exceed

@@ -1,0 +1,79 @@
+"""The paper-claims reproduction gate: every Fig. 31.1.6 band must hold."""
+import pytest
+
+from repro.core import perfmodel as pm
+
+
+@pytest.fixture(scope="module")
+def table():
+    return pm.fig6_table(n_tokens=4096)
+
+
+BAND_KEYS = [
+    ("lru_speedup", "lru_speedup"),
+    ("bvq_speedup", "bvq_speedup"),
+    ("apsd_speedup", "apsd_speedup"),
+    ("total_speedup", "total_speedup"),
+    ("tok_per_s", "tok_per_s"),
+    ("energy_savings", "energy_savings"),
+    ("rejected_reduction_pct", "rejected_reduction_pct"),
+]
+
+
+@pytest.mark.parametrize("row_key,band_key", BAND_KEYS)
+def test_every_pair_in_band(table, row_key, band_key):
+    lo, hi = pm.PAPER_BANDS[band_key]
+    for row in table:
+        assert lo <= row[row_key] <= hi, (row["pair"], row_key, row[row_key], (lo, hi))
+
+
+def test_llama2_7b_mj_per_token_near_paper(table):
+    """Paper: LLaMA2-7B decodes at 123.41 mJ/token on the 4-chip system."""
+    row = next(r for r in table if r["pair"].startswith("llama2-7b"))
+    assert abs(row["mj_per_token"] - 123.41) / 123.41 < 0.10
+
+
+def test_sd_beats_ad():
+    hw = pm.HWConfig()
+    pc = pm.fig6_pairs()[1]
+    ad = pm.simulate_decoding(pc.tlm, pc.dlm, hw, pm.SDMode.AD, pc.alpha, n_tokens=1024)
+    sd = pm.simulate_decoding(pc.tlm, pc.dlm, hw, pm.SDMode.BF16_SD, pc.alpha, n_tokens=1024)
+    assert sd.tok_per_s > ad.tok_per_s * 1.5
+
+
+def test_tile_fusion_halves_reram_traffic():
+    lm = pm.LMSpec("d", 1e9, 22, 2048)
+    hw = pm.HWConfig(reram_gbps=1e9)  # make ReRAM the bottleneck
+    fused = pm.step_time(lm, hw, pm.Precision.BVQ, tile_fusion=True)
+    unfused = pm.step_time(lm, hw, pm.Precision.BVQ, tile_fusion=False)
+    assert unfused / fused > 1.7
+
+
+def test_apsd_reduces_rejections_vs_pearl(table):
+    for row in table:
+        assert row["apsd_rejected"] < row["pearl_rejected"]
+
+
+def test_monotone_stage_improvements():
+    hw = pm.HWConfig()
+    for pc in pm.fig6_pairs():
+        prev = 0.0
+        for mode in (pm.SDMode.BF16_SD, pm.SDMode.W4A8_SD, pm.SDMode.BVQ_SD, pm.SDMode.APSD):
+            r = pm.simulate_decoding(
+                pc.tlm, pc.dlm, hw, mode, pc.alpha,
+                n_tokens=2048, seq_dl=pc.seq_dl, short_dl=pc.short_dl, long_dl=pc.long_dl,
+            )
+            assert r.tok_per_s > prev, (pc.tlm.name, mode)
+            prev = r.tok_per_s
+
+
+def test_codebooks_fit_reram():
+    """BVQ codebooks for the calibrated DLMs must fit the stacked ReRAM
+    (8 MB/chip, 32 MB in the 4-chip system) — the paper's Fig. 31.1.6 claim."""
+    hw = pm.HWConfig()
+    for pc in pm.fig6_pairs():
+        # codebooks: nb * C * v * 0.5 bytes, nb ~ total_cols/block_cols over
+        # all matrices ~ n_params / (4096 rows * 128 cols) blocks worst-case
+        nb = pc.dlm.n_params / (4096 * 128)
+        cb_bytes = nb * 256 * 8 * 0.5
+        assert cb_bytes < hw.reram_bytes * hw.n_chips

@@ -1,0 +1,98 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bvq, quantization as q, rotation as rot
+from repro.core.speculative import speculative_accept_greedy, speculative_sample
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=64, max_value=8192))
+def test_rotation_plan_exists_and_bounded(n):
+    """Every even dim gets a plan with depth <= 6 and a constructible m."""
+    n = n * 2  # even dims (all real channel dims are)
+    p = rot.plan_rotation(n)
+    assert p.k <= rot.MAX_DEPTH
+    assert p.block <= n
+    from repro.core.hadamard import hadamard_matrix
+
+    hadamard_matrix(p.m)  # must construct
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.integers(min_value=1, max_value=8),
+    v=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_speculative_sample_invariants(l, v, seed):
+    """Output = accepted draft prefix + exactly one sampled token; padding -1."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = jax.nn.softmax(jax.random.normal(k1, (l + 1, v)))
+    qd = jax.nn.softmax(jax.random.normal(k2, (l, v)))
+    draft = jax.random.categorical(k3, jnp.log(qd))
+    out, n_out, n_acc = speculative_sample(key, draft, p, qd)
+    n_out, n_acc = int(n_out), int(n_acc)
+    assert 0 <= n_acc <= l and n_out == n_acc + 1
+    assert np.array_equal(np.asarray(out[:n_acc]), np.asarray(draft[:n_acc]))
+    assert 0 <= int(out[n_acc]) < v
+    assert all(int(t) == -1 for t in out[n_out:])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.integers(min_value=1, max_value=8),
+    v=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_greedy_accept_invariants(l, v, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    logits = jax.random.normal(k1, (l + 1, v))
+    draft = jax.random.randint(k2, (l,), 0, v)
+    out, n_out, n_acc = speculative_accept_greedy(draft, logits)
+    n_out, n_acc = int(n_out), int(n_acc)
+    tlm = np.asarray(jnp.argmax(logits, -1))
+    # accepted prefix must equal the target's greedy choices
+    for i in range(n_acc):
+        assert int(draft[i]) == tlm[i]
+    # first rejection (if any) must disagree
+    if n_acc < l:
+        assert int(draft[n_acc]) != tlm[n_acc]
+    assert int(out[n_acc]) == tlm[n_acc]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(min_value=2, max_value=8),
+    cols=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_bvq_indices_always_valid(rows, cols, seed):
+    rng = np.random.RandomState(seed)
+    k, n, v, c, bc = rows * 8, cols * 16, 4, 8, 16
+    cfg = bvq.BVQConfig(vec_dim=v, codebook_size=c, block_cols=bc,
+                        kmeans_iters=3, qat_steps=0)
+    w = jnp.asarray(rng.randn(k, n).astype(np.float32))
+    bw = bvq.bvq_compress(w, cfg, jax.random.PRNGKey(seed))
+    assert int(jnp.min(bw.indices)) >= 0
+    assert int(jnp.max(bw.indices)) < c
+    assert bvq.bvq_reconstruct(bw).shape == (k, n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=128),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_act_quant_error_bounded(n, seed):
+    """|x - deq(q(x))| <= scale/2 per element (round-to-nearest)."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(4, n).astype(np.float32) * rng.rand() * 10)
+    xq, s = q.quantize_act_int8(x)
+    err = jnp.abs(xq.astype(jnp.float32) * s - x)
+    assert bool(jnp.all(err <= s * 0.5 + 1e-6))

@@ -1,0 +1,73 @@
+"""W4A8 quantization + int4 packing."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+def test_act_quant_roundtrip_accuracy():
+    x = np.random.RandomState(0).randn(16, 256).astype(np.float32)
+    xq, s = q.quantize_act_int8(jnp.asarray(x))
+    deq = xq.astype(jnp.float32) * s
+    assert float(q.sqnr_db(jnp.asarray(x), deq)) > 30.0
+
+
+def test_weight_quant_scales_per_channel():
+    w = np.random.RandomState(1).randn(128, 64).astype(np.float32)
+    w[:, 3] *= 50.0  # one huge channel must not hurt the others
+    wq, s = q.quantize_weight_int(jnp.asarray(w), bits=4, axis=0)
+    assert wq.shape == w.shape and s.shape == (1, 64)
+    assert int(jnp.max(jnp.abs(wq))) <= 7
+    deq = wq.astype(jnp.float32) * s
+    assert float(q.sqnr_db(jnp.asarray(w), deq)) > 10.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(min_value=2, max_value=32).map(lambda r: r * 2),
+    cols=st.integers(min_value=1, max_value=16),
+    axis=st.sampled_from([0, 1]),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_int4_pack_roundtrip(rows, cols, axis, seed):
+    rng = np.random.RandomState(seed)
+    shape = (rows, cols * 2)  # both axes even
+    vals = rng.randint(-8, 8, size=shape).astype(np.int8)
+    packed = q.pack_int4(jnp.asarray(vals), axis=axis)
+    unpacked = q.unpack_int4(packed, axis=axis)
+    assert np.array_equal(np.asarray(unpacked), vals)
+
+
+def test_w4a8_matmul_ref_int32_exact():
+    """Integer path must be exact: compare against int64 numpy accumulate."""
+    rng = np.random.RandomState(2)
+    xq = rng.randint(-127, 128, size=(5, 96)).astype(np.int8)
+    wq = rng.randint(-7, 8, size=(96, 32)).astype(np.int8)
+    sx = np.ones((5, 1), np.float32)
+    sw = np.ones((1, 32), np.float32)
+    got = np.asarray(q.w4a8_matmul_ref(jnp.asarray(xq), jnp.asarray(sx), jnp.asarray(wq), jnp.asarray(sw)))
+    ref = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert np.array_equal(got.astype(np.int64), ref)
+
+
+def test_quantized_linear_apply_close_to_fp():
+    rng = np.random.RandomState(3)
+    x = rng.randn(4, 7, 256).astype(np.float32)
+    w = rng.randn(256, 128).astype(np.float32) * 0.05
+    ql = q.quantize_linear_weights(jnp.asarray(w), bits=4)
+    y = q.quantized_linear_apply(jnp.asarray(x), ql)
+    ref = x @ w
+    assert float(q.sqnr_db(jnp.asarray(ref), y)) > 15.0
+
+
+def test_fake_quant_has_gradients():
+    w = jnp.asarray(np.random.RandomState(4).randn(32, 16).astype(np.float32))
+
+    def loss(w):
+        return jnp.sum(q.fake_quant_weight(w, bits=4) ** 2)
+
+    g = jax.grad(loss)(w)
+    assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.abs(g).sum()) > 0.0

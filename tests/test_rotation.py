@@ -1,0 +1,124 @@
+"""LRU rotation: orthogonality, invariance, outlier suppression, cost."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hadamard, rotation
+
+ASSIGNED_DIMS = [
+    896, 1280, 1408, 2048, 3584, 4096, 4864, 5120, 6144, 8192, 12288,
+    14336, 16384, 22016, 24576, 32768, 53248,
+]
+
+
+@pytest.mark.parametrize("order", [1, 2, 4, 8, 12, 16, 20, 24, 28, 44, 56, 76, 96])
+def test_hadamard_constructions(order):
+    h = hadamard.hadamard_matrix(order)
+    gram = h.astype(np.int64) @ h.astype(np.int64).T
+    assert np.array_equal(gram, order * np.eye(order, dtype=np.int64))
+    assert set(np.unique(h)) <= {-1, 1}
+
+
+@pytest.mark.parametrize("n", ASSIGNED_DIMS)
+def test_plan_exists_for_assigned_dims(n):
+    p = rotation.plan_rotation(n)
+    assert p.k <= rotation.MAX_DEPTH
+    assert p.block * p.num_blocks >= n or p.kind == "two_block"
+    if p.kind == "exact":
+        assert p.block == n
+    if p.kind == "tiled":
+        assert n % p.block == 0
+
+
+@pytest.mark.parametrize("n", [352, 768, 896, 1408, 2048])
+def test_rotation_matrix_orthogonal(n):
+    r = rotation.rotation_matrix(n)
+    assert np.allclose(r @ r.T, np.eye(n), atol=1e-9)
+
+
+@pytest.mark.parametrize("n", [352, 768, 896, 1364, 2048])
+def test_local_rotate_matches_dense(n):
+    p = rotation.plan_rotation(n)
+    x = np.random.RandomState(0).randn(4, n).astype(np.float32)
+    fast = np.asarray(rotation.local_rotate(jnp.asarray(x), p))
+    ref = x @ rotation.rotation_matrix(n).astype(np.float32)
+    np.testing.assert_allclose(fast, ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [352, 896, 2048, 1792])
+def test_transpose_inverts(n):
+    p = rotation.plan_rotation(n)
+    x = np.random.RandomState(1).randn(3, n).astype(np.float32)
+    y = rotation.local_rotate(jnp.asarray(x), p)
+    back = rotation.local_rotate_transpose(y, p)
+    np.testing.assert_allclose(np.asarray(back), x, atol=2e-4)
+
+
+def test_computational_invariance():
+    n = 1792
+    p = rotation.plan_rotation(n)
+    rng = np.random.RandomState(2)
+    x = rng.randn(8, n).astype(np.float32)
+    w = rng.randn(n, 64).astype(np.float32)
+    xr = rotation.local_rotate(jnp.asarray(x), p)
+    wr = rotation.rotate_weight_in(jnp.asarray(w), p)
+    ref = x @ w
+    np.testing.assert_allclose(np.asarray(xr @ wr), ref, rtol=2e-4, atol=2e-3)
+
+
+def test_outlier_suppression():
+    n = 3584
+    p = rotation.plan_rotation(n)
+    rng = np.random.RandomState(3)
+    x = rng.randn(32, n).astype(np.float32)
+    for ch in (5, 700, 2000, 3583):
+        x[:, ch] *= 100.0
+    xr = np.asarray(rotation.local_rotate(jnp.asarray(x), p))
+    k_before = float(np.mean(np.asarray(rotation.kurtosis(jnp.asarray(x)))))
+    k_after = float(np.mean(np.asarray(rotation.kurtosis(jnp.asarray(xr)))))
+    assert k_after < k_before / 20.0  # massive outlier mixing
+    ratio_before = np.abs(x).max() / np.abs(x).mean()
+    ratio_after = np.abs(xr).max() / np.abs(xr).mean()
+    assert ratio_after < ratio_before / 5.0
+
+
+def test_lru_area_saving_matches_paper():
+    """Paper: 92.7% area saving vs the global-rotation array (npot dims)."""
+    savings = []
+    for n in (14336, 22016, 53248, 4864):
+        lru = rotation.rotation_area(rotation.plan_rotation(n))
+        glob = rotation.global_rotation_area(n)
+        savings.append(1.0 - lru / glob)
+        assert lru < glob * 0.15, (n, lru, glob)
+    mean = sum(savings) / len(savings)
+    assert mean > 0.90  # paper: 0.927
+
+
+def test_paper_npot_factorization_example():
+    """Paper's worked example: 14336 (LLaMA3-8B down_proj) = 2^9 x 28 ->
+    LRU uses the m=28 npot Hadamard with a depth<=6 FWHT."""
+    p = rotation.plan_rotation(14336)
+    assert p.m == 28 and p.k == 6 and p.kind == "tiled"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logm=st.sampled_from([4, 8, 12, 16, 20]),
+    k=st.integers(min_value=0, max_value=6),
+)
+def test_block_hadamard_property(logm, k):
+    b = logm * (1 << k)
+    hb = rotation.block_hadamard(logm, k)
+    assert np.allclose(hb @ hb.T, np.eye(b), atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=2, max_value=64))
+def test_fwht_matches_matrix(logn):
+    n = 1 << int(np.ceil(np.log2(logn)))
+    x = np.random.RandomState(0).randn(2, n).astype(np.float32)
+    h = hadamard.hadamard_matrix(n).astype(np.float32)
+    got = np.asarray(rotation.fwht_jnp(jnp.asarray(x)))
+    np.testing.assert_allclose(got, x @ h, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,105 @@
+"""Speculative decoding + APSD: losslessness, distribution, controller."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import apsd, speculative as sd, toylm
+
+
+@pytest.fixture(scope="module")
+def markov():
+    key = jax.random.PRNGKey(0)
+    kt, kd = jax.random.split(key)
+    tp = toylm.random_transition_logits(kt, 24, sharpness=1.5)
+    dp = tp + 1.2 * jax.random.normal(kd, (24, 24))
+    return toylm.make_markov_lm(max_len=8192), tp, dp
+
+
+PROMPT = jnp.array([[3, 5]], dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("draft_len", [1, 2, 4, 7])
+def test_sd_greedy_lossless(markov, draft_len):
+    lm, tp, dp = markov
+    ref = toylm.markov_greedy_decode(tp, 5, 40)
+    toks, stats = sd.sd_generate(
+        jax.random.PRNGKey(1), lm, tp, lm, dp, PROMPT,
+        sd.SDConfig(draft_len=draft_len, temperature=0.0, max_tokens=40),
+    )
+    assert bool(jnp.all(toks == ref))
+    assert 0.0 <= float(stats.acceptance_rate) <= 1.0
+
+
+@pytest.mark.parametrize("short_dl,long_dl", [(2, 4), (2, 6), (4, 8), (1, 2)])
+def test_apsd_greedy_lossless(markov, short_dl, long_dl):
+    lm, tp, dp = markov
+    ref = toylm.markov_greedy_decode(tp, 5, 40)
+    toks, stats = apsd.apsd_generate(
+        jax.random.PRNGKey(2), lm, tp, lm, dp, PROMPT,
+        apsd.APSDConfig(short_dl=short_dl, long_dl=long_dl, temperature=0.0, max_tokens=40),
+    )
+    assert bool(jnp.all(toks == ref)), (short_dl, long_dl)
+
+
+def test_apsd_uses_parallel_mode_when_draft_good(markov):
+    lm, tp, _ = markov
+    _, stats = apsd.apsd_generate(
+        jax.random.PRNGKey(3), lm, tp, lm, tp, PROMPT,  # perfect draft
+        apsd.APSDConfig(short_dl=2, long_dl=6, temperature=0.0, max_tokens=48),
+    )
+    assert stats.par_rounds >= stats.rounds - 2  # immediately locks into PAR
+    assert stats.rejected_ratio < 0.05
+
+
+def test_apsd_falls_back_when_draft_bad(markov):
+    lm, tp, _ = markov
+    dp = toylm.random_transition_logits(jax.random.PRNGKey(9), 24, 1.5)  # unrelated
+    _, stats = apsd.apsd_generate(
+        jax.random.PRNGKey(4), lm, tp, lm, dp, PROMPT,
+        apsd.APSDConfig(short_dl=2, long_dl=6, temperature=0.0, max_tokens=32),
+    )
+    assert stats.par_rounds < stats.rounds * 0.5  # mostly NONPAR
+
+
+def test_sampled_sd_matches_target_distribution():
+    """L=1 window: emitted token must be distributed exactly as p."""
+    vs = 8
+    kp, kq, ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    p = jax.nn.softmax(2.0 * jax.random.normal(kp, (2, vs)))
+    q = jax.nn.softmax(2.0 * jax.random.normal(kq, (1, vs)))
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        d = jax.random.categorical(k1, jnp.log(q[0]))
+        out, _, _ = sd.speculative_sample(k2, d[None], p, q)
+        return out[0]
+
+    n = 20000
+    samples = jax.vmap(one)(jax.random.split(ks, n))
+    emp = jnp.bincount(samples, length=vs) / n
+    tv = 0.5 * float(jnp.abs(emp - p[0]).sum())
+    assert tv < 0.02
+
+
+def test_speculative_sample_accepts_identical_dists():
+    vs = 16
+    p_row = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (vs,)))
+    p = jnp.tile(p_row, (5, 1))
+    q = jnp.tile(p_row, (4, 1))
+    accs = []
+    for i in range(200):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(i))
+        d = jax.random.categorical(k1, jnp.log(p_row), shape=(4,))
+        _, _, n_acc = sd.speculative_sample(k2, d, p, q)
+        accs.append(int(n_acc))
+    assert np.mean(accs) == 4.0  # p == q -> always accept
+
+
+def test_policy_transitions():
+    P = apsd.APSDPolicy
+    assert P.next_mode(apsd.NONPAR, True, True) == apsd.PAR
+    assert P.next_mode(apsd.NONPAR, False, True) == apsd.NONPAR
+    assert P.next_mode(apsd.PAR, True, True) == apsd.PAR
+    assert P.next_mode(apsd.PAR, True, False) == apsd.NONPAR
+    assert P.next_mode(apsd.PAR, False, True) == apsd.NONPAR
