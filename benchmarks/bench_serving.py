@@ -1,0 +1,130 @@
+"""Continuous-batching serving throughput (the multi-request analogue of the
+paper's Fig. 31.1.6 token/s table).
+
+Measures aggregate decode throughput of `serve_batch` (paged KV pools +
+vmapped draft/verify steps) against N sequential single-request `serve_sd`
+runs of the SAME models, sweeps batch size and page size, and
+microbenchmarks the paged-attention kernel against the gather+dense path it
+replaces.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _prompts(n, seed=0, vocab=512):
+    rng = np.random.RandomState(seed)
+    return [
+        rng.randint(0, vocab, size=rng.randint(3, 7)).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _bench_paged_attn_rows(rows):
+    from repro.kernels import ref
+    from repro.kernels.paged_attn import paged_decode_attention_pallas
+
+    rng = np.random.RandomState(0)
+    b, kvs, g, hd, ps, mp = 8, 4, 2, 64, 16, 8
+    pool_pages = b * mp
+    q = jnp.asarray(rng.randn(b, kvs, g, hd).astype(np.float32))
+    kp = jnp.asarray(rng.randn(pool_pages, ps, kvs, hd).astype(np.float32))
+    vp = jnp.asarray(rng.randn(pool_pages, ps, kvs, hd).astype(np.float32))
+    pt = jnp.asarray(
+        rng.permutation(pool_pages).reshape(b, mp).astype(np.int32)
+    )
+    lens = jnp.asarray(rng.randint(1, ps * mp, size=(b,)).astype(np.int32))
+
+    def timed(fn, n=20):
+        fn()  # warm
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n * 1e6
+
+    us_kernel = timed(lambda: paged_decode_attention_pallas(q, kp, vp, pt, lens))
+    us_ref = timed(lambda: ref.paged_attn_ref(q, kp, vp, pt, lens))
+    backend = jax.default_backend()  # CPU runs the kernel in interpret mode
+    rows.append((
+        "paged_attn_pallas", us_kernel, f"B={b} pages={mp}x{ps} [{backend}]"
+    ))
+    rows.append(("paged_attn_gather_ref", us_ref, "gather+dense oracle"))
+
+
+def run(smoke: bool = False):
+    from repro.core.speculative import SDConfig
+    from repro.launch.serve import build_pair
+    from repro.serving.engine import BatchConfig, serve_batch, serve_sd
+
+    rows = []
+    max_tokens = 8 if smoke else 24
+    n_req = 4 if smoke else 8
+    target, draft = build_pair(seed=0, s_max=256, quantize=False)
+    prompts = _prompts(n_req)
+
+    # --- baseline: N sequential single-request SD runs (warm jit)
+    sd_cfg = SDConfig(draft_len=3, temperature=0.0, max_tokens=max_tokens)
+    serve_sd(jax.random.PRNGKey(0), target, draft,
+             jnp.asarray(prompts[0][None]), sd_cfg)  # warm-up
+    t0 = time.perf_counter()
+    for p in prompts:
+        serve_sd(jax.random.PRNGKey(0), target, draft, jnp.asarray(p[None]), sd_cfg)
+    dt_seq = time.perf_counter() - t0
+    seq_tps = n_req * max_tokens / dt_seq
+    rows.append(("serving_sequential_x%d" % n_req, 0.0, f"{seq_tps:.1f} tok/s"))
+
+    # --- continuous batching at increasing batch sizes
+    batch_tps = {}
+    for bs in ([2, n_req] if smoke else [2, 4, n_req]):
+        cfg = BatchConfig(max_batch=bs, page_size=16, max_tokens=max_tokens,
+                          draft_len=3)
+        serve_batch(jax.random.PRNGKey(0), target, draft, prompts[:bs], cfg)  # warm
+        t0 = time.perf_counter()
+        outs, summary = serve_batch(
+            jax.random.PRNGKey(0), target, draft, prompts, cfg
+        )
+        dt = time.perf_counter() - t0
+        tps = sum(int(o.shape[0]) for o in outs) / dt
+        batch_tps[bs] = tps
+        rows.append((
+            f"serving_continuous_b{bs}", 0.0,
+            f"{tps:.1f} tok/s; wdos-model {summary['wdos_modeled_speedup']:.2f}x",
+        ))
+    rows.append((
+        f"serving_batch{n_req}_speedup_vs_sequential", 0.0,
+        f"{batch_tps[n_req] / seq_tps:.2f}x",
+    ))
+
+    # --- page-size sweep: allocator utilization (internal fragmentation)
+    for ps in [4, 32]:
+        cfg = BatchConfig(max_batch=n_req, page_size=ps, max_tokens=max_tokens,
+                          draft_len=3)
+        _, summary = serve_batch(jax.random.PRNGKey(0), target, draft, prompts, cfg)
+        st = summary["target_pool"]
+        rows.append((
+            f"serving_page{ps}_high_water", 0.0,
+            f"{st.high_water_pages}/{st.num_pages} pages",
+        ))
+
+    _bench_paged_attn_rows(rows)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for n, us, derived in run(smoke=args.smoke):
+        print(f"{n},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

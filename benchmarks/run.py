@@ -15,7 +15,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     from benchmarks import (
         bench_apsd, bench_bvq, bench_e2e, bench_kernels, bench_lru,
-        roofline_report,
+        bench_serving, roofline_report,
     )
 
     suites = {
@@ -24,6 +24,7 @@ def main(argv=None):
         "apsd": bench_apsd,
         "e2e": bench_e2e,
         "kernels": bench_kernels,
+        "serving": bench_serving,
         "roofline": roofline_report,
     }
     if args.only:

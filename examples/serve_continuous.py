@@ -1,0 +1,77 @@
+"""Continuous-batching serving demo: many requests, one paged runtime.
+
+    PYTHONPATH=src python examples/serve_continuous.py [--requests 8]
+
+Submits a burst of prompts to `serve_batch`: the batcher admits what fits
+the page budget, streams tokens per request as they verify, back-fills freed
+slots from the queue, and reports pool utilization plus the WDOS model of
+how much cross-request draft/verify overlap the paper's 4-queue scheduler
+would buy on silicon.
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.launch.serve import build_pair
+from repro.serving.engine import BatchConfig, serve_batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="per-request APSD draft-length adaptation")
+    ap.add_argument("--no-quant", action="store_true")
+    args = ap.parse_args(argv)
+
+    print(f"building TLM/DLM pair (quantize={not args.no_quant}) ...")
+    target, draft = build_pair(seed=0, s_max=256, quantize=not args.no_quant)
+
+    rng = np.random.RandomState(0)
+    prompts = [
+        rng.randint(0, target.cfg.vocab, size=rng.randint(3, 8)).astype(np.int32)
+        for _ in range(args.requests)
+    ]
+    streamed = [[] for _ in prompts]
+    sinks = [streamed[i].append for i in range(len(prompts))]
+
+    cfg = BatchConfig(
+        max_batch=args.max_batch,
+        page_size=args.page_size,
+        max_tokens=args.tokens,
+        draft_len=3,
+        adaptive=args.adaptive,
+        short_dl=2,
+        long_dl=4,
+    )
+    t0 = time.time()
+    outs, summary = serve_batch(
+        jax.random.PRNGKey(0), target, draft, prompts, cfg, sinks=sinks
+    )
+    dt = time.time() - t0
+
+    emitted = sum(len(o) for o in outs)
+    print(f"\n{len(prompts)} requests, {emitted} tokens in {dt:.2f}s "
+          f"({emitted / dt:.1f} tok/s aggregate)")
+    for i, out in enumerate(outs):
+        print(f"  req{i} prompt={list(map(int, prompts[i]))} "
+              f"-> {list(map(int, out))}")
+        assert streamed[i] == [int(t) for t in out]  # sinks saw every token
+    tp = summary["target_pool"]
+    print(f"\npool: {tp.high_water_pages}/{tp.num_pages} pages high-water "
+          f"(page_size={tp.page_size})")
+    print(f"acceptance rate: {summary['acceptance_rate']:.3f}")
+    print(f"WDOS cross-request overlap model: "
+          f"{summary['wdos_modeled_speedup']:.2f}x vs in-order "
+          f"(COMPUTE util {summary['wdos_utilization']['COMPUTE']:.2f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,126 @@
+"""Paged decode-attention Pallas kernel: attend THROUGH a page table.
+
+The continuous-batching runtime (serving/engine.serve_batch) keeps every
+request's KV in a shared block-granular pool (serving/paged_cache.py); the
+pure-JAX path materializes a dense per-request view by gathering pages
+host-side before each step.  This kernel removes that copy: the grid's
+innermost dimension walks a request's page table and the BlockSpec index_map
+reads the page id from a scalar-prefetched table, so each (request, kv-head)
+pair streams exactly its own pages pool->VMEM once and runs online softmax
+in VREGs — decode attention over the paged pool with zero gather
+materialization (the same trick the dense int8 kernel in decode_attn.py
+plays on a contiguous cache, plus scalar-prefetch indirection).
+
+Layout (one grid step = one (request, kv-head) pair x one page):
+  page_table (B, max_pages) int32  — scalar-prefetched; unused slots must
+                                     hold any in-range id (masked by length)
+  lengths    (B,)           int32  — valid prefix per request
+  q          (B, KVS, G, hd)       — G = H / KVS query heads per kv head
+  k_pool     (P, page_size, KVS, hd)
+  v_pool     (P, page_size, KVS, hd)
+  out        (B, KVS, G, hd) f32
+
+TPU note: real-hardware efficiency wants hd a multiple of 128 and
+page_size a multiple of the sublane tile; interpret mode (CPU tests) takes
+any shape.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_decode_attention_pallas"]
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_pages: int, page_size: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, hd)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, page_size)
+    # mask token slots beyond the request's valid prefix (also covers page-
+    # table slots past the request's page count: every slot is masked)
+    pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < len_ref[b], scores, -1e30)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    prob = jnp.exp(scores - m_new)  # (G, page_size)
+    corr = jnp.exp(m_prev - m_new)  # (G, 1)
+    l_ref[...] = l_ref[...] * corr + prob.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        prob, v_ref[0, :, 0, :].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # (G, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,  # (B, KVS, G, hd)
+    k_pool: jnp.ndarray,  # (P, page_size, KVS, hd)
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, max_pages) int32
+    lengths: jnp.ndarray,  # (B,) int32
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """out (B, KVS, G, hd) f32 — one decoded token's attention per request,
+    gathered through the page table (no dense cache copy)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, kvs, g, hd = q.shape
+    _, page_size, pool_kvs, pool_hd = k_pool.shape
+    assert (pool_kvs, pool_hd) == (kvs, hd), (k_pool.shape, q.shape)
+    n_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    grid = (b, kvs, n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, 1, hd), lambda i, j, p, pt, ln: (pt[i, p], 0, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, hd), lambda i, j, p, pt, ln: (pt[i, p], 0, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, n_pages=n_pages, page_size=page_size, scale=scale
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvs, g, hd), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

@@ -16,7 +16,13 @@ from repro.core.bvq import BVQWeight, bvq_reconstruct
 from repro.core.quantization import unpack_int4
 from repro.core.rotation import _apply_blocks
 
-__all__ = ["block_rotate_ref", "w4a8_matmul_ref2", "bvq_matmul_ref2"]
+__all__ = [
+    "block_rotate_ref",
+    "w4a8_matmul_ref2",
+    "bvq_matmul_ref2",
+    "gather_pages_ref",
+    "paged_attn_ref",
+]
 
 
 def block_rotate_ref(x: jnp.ndarray, m: int, k: int, transpose: bool = False):
@@ -39,3 +45,36 @@ def w4a8_matmul_ref2(xq, wp, sx, sw):
 def bvq_matmul_ref2(x: jnp.ndarray, bw: BVQWeight):
     """Oracle for kernels.bvq_matmul.bvq_matmul_pallas."""
     return (x.astype(jnp.float32) @ bvq_reconstruct(bw)).astype(jnp.float32)
+
+
+def gather_pages_ref(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(P, ps, KVS, hd) pool + (B, max_pages) table -> (B, max_pages*ps, KVS,
+    hd) contiguous per-request K/V (the dense view of a paged cache)."""
+    b, mp = page_table.shape
+    _, ps, kvs, hd = pool.shape
+    return pool[page_table].reshape(b, mp * ps, kvs, hd)
+
+
+def paged_attn_ref(
+    q: jnp.ndarray,  # (B, KVS, G, hd) f32
+    k_pool: jnp.ndarray,  # (P, page_size, KVS, hd)
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, max_pages) int32 (unused slots: any valid id)
+    lengths: jnp.ndarray,  # (B,) int32 valid prefix per request
+) -> jnp.ndarray:
+    """Oracle for kernels.paged_attn.paged_decode_attention_pallas: gather
+    the pages into a dense cache, then masked softmax attention per row."""
+    b, kvs, g, hd = q.shape
+    k = gather_pages_ref(k_pool, page_table).astype(jnp.float32)  # (B, S, KVS, hd)
+    v = gather_pages_ref(v_pool, page_table).astype(jnp.float32)
+    s = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs", q.astype(jnp.float32) * scale, k,
+        preferred_element_type=jnp.float32,
+    )
+    valid = jnp.arange(s)[None] < lengths[:, None]  # (B, S)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v, preferred_element_type=jnp.float32)
+    return out.astype(jnp.float32)

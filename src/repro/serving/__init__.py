@@ -1,0 +1,34 @@
+"""Serving runtime: single-request SD/APSD drivers plus the continuous-
+batching multi-request engine (paged KV pools + WDOS-modeled scheduler).
+
+Layers, bottom-up:
+  paged_cache.PagedKVPool  — block-granular KV pages, free list, reservations
+  request.Request          — QUEUED/PREFILL/DECODE/FINISHED + APSD mode state
+  batcher.ContinuousBatcher— page-budget admission + WDOS round model
+  engine.serve_batch       — vmapped draft/verify steps over active requests
+"""
+from repro.serving.batcher import BatchConfig, ContinuousBatcher
+from repro.serving.engine import (
+    ServingModel,
+    make_interface,
+    serve_apsd,
+    serve_batch,
+    serve_sd,
+)
+from repro.serving.paged_cache import PagedKVPool, PagedSequence
+from repro.serving.request import DraftController, Request, RequestState
+
+__all__ = [
+    "BatchConfig",
+    "ContinuousBatcher",
+    "ServingModel",
+    "make_interface",
+    "serve_apsd",
+    "serve_batch",
+    "serve_sd",
+    "PagedKVPool",
+    "PagedSequence",
+    "DraftController",
+    "Request",
+    "RequestState",
+]

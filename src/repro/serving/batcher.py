@@ -1,0 +1,197 @@
+"""Continuous-batching scheduler over the paged KV pools.
+
+Admission/eviction works like vLLM's conservative policy: a QUEUED request is
+admitted into a free batch slot only when BOTH pools (target + draft) can
+reserve its worst-case page count (prompt + max_new_tokens + a full
+draft/verify window), so an admitted request can never OOM mid-flight; a
+FINISHED request releases its pages immediately, which un-blocks the queue —
+the batch composition changes continuously, no global barrier.
+
+Each decode round the batcher also builds a WDOS instruction DAG
+(`core/scheduler.py`'s ``Queue``/``Instr``) for the work it just dispatched:
+per request, DLM drafting is a RERAM-fed layer pipeline per draft token and
+TLM verification an EMAC-fed pipeline depending on that request's last draft
+— *different requests share no edges*, so the 4-queue out-of-order scheduler
+overlaps request A's verify (EMAC+COMPUTE) with request B's drafting
+(RERAM+COMPUTE).  That is the paper's Fig. 31.1.5 mechanism lifted from
+intra-request (APSD PAR mode) to cross-request scheduling; the modeled
+speedup vs. the in-order baseline is reported in the batch summary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import scheduler as sch
+from repro.core.scheduler import Queue
+from repro.serving.paged_cache import PagedKVPool, pages_for
+from repro.serving.request import DraftController, Request, RequestState
+
+__all__ = ["BatchConfig", "ContinuousBatcher", "WDOSModelStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchConfig:
+    """Knobs for ``serve_batch``."""
+
+    max_batch: int = 8  # concurrent DECODE slots (vmapped model batch)
+    page_size: int = 16  # tokens per KV page
+    max_tokens: int = 64  # per-request generation budget
+    draft_len: int = 3  # fixed draft window (adaptive=False)
+    adaptive: bool = False  # per-request APSD draft-length adaptation
+    short_dl: int = 2
+    long_dl: int = 6
+    temperature: float = 0.0  # only greedy (0.0) is supported today
+    num_pages: Optional[int] = None  # page budget per pool (None: fit max_batch)
+    model_wdos: bool = True  # build the per-round WDOS DAG (stats)
+
+    @property
+    def max_dl(self) -> int:
+        return self.long_dl if self.adaptive else self.draft_len
+
+
+@dataclasses.dataclass
+class WDOSModelStats:
+    """Accumulated discrete-event model of the dispatched rounds."""
+
+    wdos_makespan: float = 0.0
+    inorder_makespan: float = 0.0
+    busy: Dict[Queue, float] = dataclasses.field(
+        default_factory=lambda: {q: 0.0 for q in Queue}
+    )
+
+    @property
+    def modeled_speedup(self) -> float:
+        return self.inorder_makespan / self.wdos_makespan if self.wdos_makespan else 1.0
+
+    def utilization(self, q: Queue) -> float:
+        return self.busy[q] / self.wdos_makespan if self.wdos_makespan else 0.0
+
+
+class ContinuousBatcher:
+    """Slot/queue bookkeeping + page-budget admission + WDOS round model."""
+
+    def __init__(
+        self,
+        cfg: BatchConfig,
+        t_pool: PagedKVPool,
+        d_pool: PagedKVPool,
+        t_layers: int,
+        d_layers: int,
+        t_costs: Tuple[float, float],  # (per-layer load, per-layer compute)
+        d_costs: Tuple[float, float],
+    ):
+        self.cfg = cfg
+        self.t_pool = t_pool
+        self.d_pool = d_pool
+        self.t_layers = t_layers
+        self.d_layers = d_layers
+        self.t_costs = t_costs
+        self.d_costs = d_costs
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.max_batch
+        self.step_count = 0
+        self.rounds = 0
+        self.admitted = 0
+        self.finished: List[Request] = []
+        self.wdos = WDOSModelStats()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if self.cfg.adaptive:
+            req.controller = DraftController(self.cfg.short_dl, self.cfg.long_dl)
+        else:
+            req.controller = DraftController(self.cfg.draft_len, self.cfg.draft_len)
+        self.queue.append(req)
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots FIFO while both pools can take the worst case.
+        Returns the newly admitted (slot, request) pairs (they need prefill)."""
+        out: List[Tuple[int, Request]] = []
+        for slot in range(self.cfg.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            peak = req.peak_cache_len(self.cfg.max_dl)
+            t_seq = self.t_pool.allocate_sequence(peak)
+            if t_seq is None:
+                break  # head-of-line: keep FIFO order, wait for pages
+            d_seq = self.d_pool.allocate_sequence(peak)
+            if d_seq is None:
+                t_seq.release()
+                break
+            self.queue.popleft()
+            req.t_seq, req.d_seq = t_seq, d_seq
+            req.state = RequestState.PREFILL
+            req.admitted_step = self.step_count
+            self.slots[slot] = req
+            self.admitted += 1
+            out.append((slot, req))
+        return out
+
+    def active(self) -> List[Tuple[int, Request]]:
+        return [
+            (i, r)
+            for i, r in enumerate(self.slots)
+            if r is not None and r.state is RequestState.DECODE
+        ]
+
+    def retire(self, slot: int) -> None:
+        req = self.slots[slot]
+        assert req is not None
+        req.finish(self.step_count)
+        self.finished.append(req)
+        self.slots[slot] = None
+
+    def all_done(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)
+
+    # -- WDOS discrete-event model of one dispatched round ------------------
+
+    def model_round(self, work: Sequence[Tuple[Request, int]]) -> None:
+        """Price the round just executed: per request, `dl` chained DLM
+        draft pipelines (RERAM loads) then one TLM verify pipeline (EMAC
+        loads) depending on the request's final draft compute."""
+        self.rounds += 1
+        if not self.cfg.model_wdos or not work:
+            return
+        b = sch.new_builder()
+        d_load, d_comp = self.d_costs
+        t_load, t_comp = self.t_costs
+        for req, dl in work:
+            prev: Tuple[int, ...] = ()
+            for j in range(dl):
+                _, last = sch.layer_pipeline_instrs(
+                    b, self.d_layers, Queue.RERAM, d_load, d_comp,
+                    entry_deps=prev, tag=f"r{req.rid}.draft{j}",
+                )
+                prev = (last,)
+            _, _ = sch.layer_pipeline_instrs(
+                b, self.t_layers, Queue.EMAC, t_load, t_comp * (dl + 1),
+                entry_deps=prev, tag=f"r{req.rid}.verify",
+            )
+        s = sch.wdos_schedule(b.instrs)
+        base = sch.inorder_schedule(b.instrs)
+        self.wdos.wdos_makespan += s.makespan
+        self.wdos.inorder_makespan += base.makespan
+        for q in Queue:
+            self.wdos.busy[q] += s.busy[q]
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> Dict[str, object]:
+        reqs = self.finished
+        drafted = sum(r.drafted for r in reqs)
+        return {
+            "requests": len(reqs),
+            "rounds": self.rounds,
+            "steps": self.step_count,
+            "emitted": sum(len(r.out) for r in reqs),
+            "acceptance_rate": sum(r.accepted for r in reqs) / max(drafted, 1),
+            "target_pool": self.t_pool.stats(),
+            "draft_pool": self.d_pool.stats(),
+            "wdos_modeled_speedup": self.wdos.modeled_speedup,
+            "wdos_utilization": {q.name: self.wdos.utilization(q) for q in Queue},
+        }

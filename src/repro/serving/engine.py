@@ -10,23 +10,42 @@ runs end to end on real weights.  Rewind is O(1): reset the cache length
 (stale slots are overwritten and masked).  On a TPU mesh the draft and
 verify dispatches overlap (the WDOS idea); on CPU they serialize but are
 bit-identical.
+
+`serve_batch` is the multi-request runtime on top of the same models: KV
+lives in block-granular paged pools (serving/paged_cache.py), a continuous
+batcher (serving/batcher.py) admits/evicts requests under a page budget, and
+each draft/verify step runs as ONE vmapped model call over every active
+request.  Greedy outputs are bit-identical per request to the single-request
+``serve_sd`` path — batching and paging change scheduling, never sampling.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.apsd import APSDConfig, apsd_generate
 from repro.core.speculative import LMInterface, SDConfig, sd_generate
+from repro.models import layers as L
 from repro.models import lm
 from repro.models.common import ModelConfig
 from repro.serving import quantized_lm as qlm
+from repro.serving.batcher import BatchConfig, ContinuousBatcher
+from repro.serving.paged_cache import PagedKVPool, pages_for
+from repro.serving.request import Request, RequestState
 
-__all__ = ["make_interface", "ServingModel", "serve_sd", "serve_apsd"]
+__all__ = [
+    "make_interface",
+    "ServingModel",
+    "serve_sd",
+    "serve_apsd",
+    "serve_batch",
+    "BatchConfig",
+]
 
 
 @dataclasses.dataclass
@@ -81,8 +100,18 @@ def make_interface(model: ServingModel) -> LMInterface:
         return _extend(params, tokens, cache)
 
     def rewind(cache, n):
+        if n < 0:
+            raise ValueError(f"rewind expects n >= 0, got {n}")
+        length = cache["length"]
+        try:
+            if int(length) - n < 0:
+                raise ValueError(
+                    f"over-rewind: cache length {int(length)} < rewind {n}"
+                )
+        except jax.errors.ConcretizationTypeError:
+            pass  # traced length: fall through to the clamp below
         c = dict(cache)
-        c["length"] = cache["length"] - n
+        c["length"] = jnp.maximum(length - n, 0)
         return c
 
     return LMInterface(prefill=prefill, extend=extend, rewind=rewind)
@@ -116,3 +145,239 @@ def serve_apsd(
         make_interface(draft), draft.params,
         prompt, cfg,
     )
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching runtime (paged KV + vmapped draft/verify steps)
+# ---------------------------------------------------------------------------
+
+
+def _np_dtype(cfg: ModelConfig):
+    return np.asarray(jnp.zeros((), cfg.jdtype)).dtype
+
+
+def _make_batched_step(model: ServingModel):
+    """jit(vmap) of one cache-extending forward: every active request is a
+    batch row with its OWN cache length (positions, masking, and the KV
+    write offset are per-row).  Returns full updated dense K/V views so the
+    engine scatters only the written span back into the page pool."""
+
+    @jax.jit
+    def step(params, tokens, k, v, lengths):
+        # tokens (B, L) int32; k/v (B, n_layers, 1, S_pad, kvh, hd); lengths (B,)
+        def one(tok, kk, vv, ln):
+            cache = {"length": ln, "attn": {"k": kk, "v": vv}}
+            logits, nc = model._apply(params, tok[None, :], cache)
+            return logits[0], nc["attn"]["k"], nc["attn"]["v"]
+
+        return jax.vmap(one)(tokens, k, v, lengths)
+
+    return step
+
+
+class _PoolGather:
+    """Reusable pinned host buffers for pool -> dense batched cache views."""
+
+    def __init__(self, max_batch: int, pool: PagedKVPool, s_pad: int, dtype):
+        shape = (max_batch, pool.n_layers, 1, s_pad, pool.kv_heads, pool.head_dim)
+        self.k = np.zeros(shape, dtype)
+        self.v = np.zeros(shape, dtype)
+        self.lengths = np.zeros((max_batch,), np.int32)
+
+    def load(self, rows):
+        """rows: iterable of (slot index, PagedSequence)."""
+        self.lengths[:] = 0
+        for i, seq in rows:
+            seq.gather_into(self.k[i, :, 0], self.v[i, :, 0])
+            self.lengths[i] = seq.length
+        return jnp.asarray(self.k), jnp.asarray(self.v), jnp.asarray(self.lengths)
+
+
+def _pool_for(model: ServingModel, cfg: BatchConfig, peaks: Sequence[int]):
+    """Page pool sized to hold `max_batch` worst-case requests (or the
+    explicit cfg.num_pages budget)."""
+    mcfg = model.cfg
+    if mcfg.kv_quant:
+        raise NotImplementedError("paged pools hold dense-dtype KV (kv_quant=False)")
+    if model.mesh is not None:
+        raise NotImplementedError("serve_batch runs the single-host path (mesh=None)")
+    if cfg.num_pages is not None:
+        num_pages = cfg.num_pages
+    else:
+        worst = sorted((pages_for(p, cfg.page_size) for p in peaks), reverse=True)
+        num_pages = sum(worst[: cfg.max_batch])
+    return PagedKVPool(
+        n_layers=mcfg.n_layers,
+        kv_heads=L.kv_store_heads(mcfg, 1),
+        head_dim=mcfg.hd,
+        num_pages=num_pages,
+        page_size=cfg.page_size,
+        dtype=_np_dtype(mcfg),
+    )
+
+
+def _greedy_accept_host(drafts: np.ndarray, p_logits: np.ndarray, dl: int):
+    """Host-side mirror of ``speculative_accept_greedy`` for one request:
+    accept while draft == argmax(target); emit the bonus/correction token."""
+    tlm_tok = np.argmax(p_logits, axis=-1)  # (L+1,), first-max tie rule == jnp
+    n_acc = 0
+    while n_acc < dl and tlm_tok[n_acc] == drafts[n_acc]:
+        n_acc += 1
+    return [int(t) for t in drafts[:n_acc]] + [int(tlm_tok[n_acc])], n_acc
+
+
+def serve_batch(
+    key: jax.Array,
+    target: ServingModel,
+    draft: ServingModel,
+    prompts: Sequence[Any],  # each (S,) or (1, S) int32, S >= 2
+    cfg: BatchConfig,
+    sinks: Optional[Sequence[Optional[Callable[[int], None]]]] = None,
+) -> Tuple[List[jnp.ndarray], dict]:
+    """Continuously-batched greedy speculative decoding over paged KV pools.
+
+    Admits up to ``cfg.max_batch`` concurrent requests (more queue behind the
+    page budget), runs each SD round as vmapped draft/verify steps over every
+    active request, and streams tokens to per-request sinks.  Returns the
+    per-request outputs (original submission order) and the batch summary
+    (pool stats + the WDOS cross-request overlap model).
+
+    Greedy only: per-request outputs are bit-identical to ``serve_sd`` with
+    the same models (asserted in tests/test_serving_batch.py).
+    """
+    del key  # greedy path is deterministic; kept for API symmetry with serve_sd
+    if cfg.temperature != 0.0:
+        raise NotImplementedError("serve_batch currently supports temperature=0.0")
+
+    requests = [
+        Request(
+            rid=i,
+            prompt=np.asarray(p).reshape(-1),
+            max_new_tokens=cfg.max_tokens,
+            sink=sinks[i] if sinks else None,
+        )
+        for i, p in enumerate(prompts)
+    ]
+    if not requests:
+        return [], {
+            "requests": 0, "rounds": 0, "steps": 0, "emitted": 0,
+            "acceptance_rate": 0.0, "target_pool": None, "draft_pool": None,
+            "wdos_modeled_speedup": 1.0,
+            "wdos_utilization": {},
+        }
+    peaks = [r.peak_cache_len(cfg.max_dl) for r in requests]
+    for model in (target, draft):
+        if max(peaks) > model.s_max:
+            raise ValueError(
+                f"peak cache length {max(peaks)} exceeds s_max={model.s_max} "
+                f"of {model.cfg.name}"
+            )
+
+    t_pool = _pool_for(target, cfg, peaks)
+    d_pool = _pool_for(draft, cfg, peaks)
+
+    def _costs(mcfg: ModelConfig) -> Tuple[float, float]:
+        load = 12.0 * mcfg.d_model * mcfg.d_model * 1e-6  # ~per-layer weight bytes
+        return load, 0.25 * load
+
+    batcher = ContinuousBatcher(
+        cfg, t_pool, d_pool,
+        t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
+        t_costs=_costs(target.cfg), d_costs=_costs(draft.cfg),
+    )
+    for r in requests:
+        batcher.submit(r)
+
+    t_iface, d_iface = make_interface(target), make_interface(draft)
+    t_step, d_step = _make_batched_step(target), _make_batched_step(draft)
+    t_gather = _PoolGather(cfg.max_batch, t_pool, target.s_max, _np_dtype(target.cfg))
+    d_gather = _PoolGather(cfg.max_batch, d_pool, draft.s_max, _np_dtype(draft.cfg))
+
+    def _prefill_into(req: Request, iface: LMInterface, params, seq):
+        # same jitted program as the single-request path => bitwise identical
+        plen = req.prompt.shape[0]
+        _, cache = iface.prefill(params, jnp.asarray(req.prompt[None, :-1]))
+        k = np.asarray(cache["attn"]["k"])[:, 0]  # (n_layers, s_max, kvh, hd)
+        v = np.asarray(cache["attn"]["v"])[:, 0]
+        seq.append(k[:, : plen - 1], v[:, : plen - 1])
+
+    while not batcher.all_done():
+        for _, req in batcher.admit():
+            _prefill_into(req, t_iface, target.params, req.t_seq)
+            _prefill_into(req, d_iface, draft.params, req.d_seq)
+            req.state = RequestState.DECODE
+        active = batcher.active()
+        if not active:
+            batcher.step_count += 1
+            continue
+
+        dls = {slot: req.controller.draft_len() for slot, req in active}
+        round_dl = max(dls.values())
+
+        # ---- draft phase: round_dl sampled steps + 1 straggler step, all
+        # vmapped; the dense draft cache stays on device across the loop.
+        dk, dv, d_len0 = d_gather.load((s, r.d_seq) for s, r in active)
+        cur = np.zeros((cfg.max_batch,), np.int32)
+        for slot, req in active:
+            cur[slot] = req.last_tok
+        cur_dev = jnp.asarray(cur)
+        draft_cols = []
+        for j in range(round_dl + 1):
+            logits, dk, dv = d_step(
+                draft.params, cur_dev[:, None], dk, dv, d_len0 + j
+            )
+            if j < round_dl:
+                cur_dev = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                draft_cols.append(cur_dev)
+            # else: straggler — feeds d_{round_dl-1}, completing the cache for
+            # fully-accepted rows; over-written rows rewind it away below.
+        drafts = np.asarray(jnp.stack(draft_cols, axis=1))  # (B, round_dl)
+
+        # ---- verify phase: one vmapped pass scoring [last_tok, drafts...]
+        tk, tv, t_len0 = t_gather.load((s, r.t_seq) for s, r in active)
+        window = np.zeros((cfg.max_batch, round_dl + 1), np.int32)
+        window[:, 0] = cur
+        window[:, 1:] = drafts
+        v_logits, tk, tv = t_step(
+            target.params, jnp.asarray(window), tk, tv, t_len0
+        )
+        p_logits = np.asarray(v_logits)  # (B, round_dl+1, V)
+        dk_host, dv_host = np.asarray(dk), np.asarray(dv)
+        tk_host, tv_host = np.asarray(tk), np.asarray(tv)
+
+        # ---- per-request accept / commit / page maintenance
+        work = []
+        for slot, req in active:
+            dl = dls[slot]
+            new, n_acc = _greedy_accept_host(drafts[slot], p_logits[slot], dl)
+            req.commit(new)
+            req.rounds += 1
+            req.drafted += dl
+            req.accepted += n_acc
+            req.controller.observe(n_acc, dl)
+            work.append((req, dl))
+            # target wrote round_dl+1 positions at t_len0; keep n_acc + 1
+            t0 = int(t_len0[slot])
+            req.t_seq.append(
+                tk_host[slot, :, 0, t0 : t0 + round_dl + 1],
+                tv_host[slot, :, 0, t0 : t0 + round_dl + 1],
+            )
+            req.t_seq.rewind(round_dl - n_acc)
+            # draft wrote round_dl+1 positions at d_len0 (incl. straggler);
+            # the invariant cache == committed[:-1] keeps n_acc + 1 of them
+            d0 = int(d_len0[slot])
+            req.d_seq.append(
+                dk_host[slot, :, 0, d0 : d0 + round_dl + 1],
+                dv_host[slot, :, 0, d0 : d0 + round_dl + 1],
+            )
+            req.d_seq.rewind(round_dl - n_acc)
+        batcher.model_round(work)
+        for slot, req in active:
+            if req.done:
+                batcher.retire(slot)
+        batcher.step_count += 1
+
+    outputs = [
+        jnp.asarray(r.out[: r.max_new_tokens], jnp.int32) for r in requests
+    ]
+    return outputs, batcher.summary()

@@ -1,0 +1,229 @@
+"""Block-granular paged KV-cache pool (the vLLM idea, sized for SD serving).
+
+One pool per model holds EVERY concurrent request's KV in fixed-size pages
+(`page_size` tokens x all layers x kv heads x head dim); a request owns a
+page table (ordered page list) + a token length.  This is what turns the
+single-request serving path into a multi-tenant runtime:
+
+* admission is a reservation against the free list (worst-case pages for
+  prompt + max_new_tokens + draft window), so a request admitted by the
+  batcher can never OOM mid-flight;
+* speculative rewind is O(1): decrement the length and push whole pages that
+  fell past the new high-water mark back onto the free list — the exact
+  paged analogue of the dense cache's "reset the length" trick;
+* release returns pages AND the unused tail of the reservation, so finished
+  requests immediately make room for queued ones (continuous batching).
+
+Storage is host-side numpy (layer-stacked, `(n_layers, num_pages, page_size,
+kv_heads, head_dim)`); the engine gathers a request's pages into a dense
+per-request view for the jitted model step and scatters the newly written
+token span back.  The Pallas `kernels/paged_attn.py` kernel instead attends
+*in place* through the page table (no gather) — same layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["PagedKVPool", "PagedSequence", "PoolStats"]
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)  # ceil div
+
+
+@dataclasses.dataclass
+class PoolStats:
+    num_pages: int
+    page_size: int
+    used_pages: int
+    reserved_pages: int  # reservation not yet backed by allocated pages
+    free_pages: int  # physically free (some may be spoken for)
+    available_pages: int  # free minus outstanding reservations
+    high_water_pages: int
+
+    @property
+    def utilization(self) -> float:
+        return self.used_pages / self.num_pages if self.num_pages else 0.0
+
+
+class PagedKVPool:
+    """Fixed-size page pool with a free-list allocator and reservations."""
+
+    def __init__(
+        self,
+        n_layers: int,
+        kv_heads: int,
+        head_dim: int,
+        num_pages: int,
+        page_size: int,
+        dtype=np.float32,
+    ):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.n_layers = n_layers
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        self.num_pages = num_pages
+        self.page_size = page_size
+        shape = (n_layers, num_pages, page_size, kv_heads, head_dim)
+        self.k = np.zeros(shape, dtype)
+        self.v = np.zeros(shape, dtype)
+        # LIFO free list: recently released pages are reused first (warm)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._allocated: set = set()
+        self._reserved_unbacked = 0
+        self.high_water = 0
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._allocated)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def available_pages(self) -> int:
+        """Pages neither allocated nor promised to an admitted request."""
+        return len(self._free) - self._reserved_unbacked
+
+    def can_reserve(self, n_pages: int) -> bool:
+        return n_pages <= self.available_pages
+
+    def stats(self) -> PoolStats:
+        return PoolStats(
+            num_pages=self.num_pages,
+            page_size=self.page_size,
+            used_pages=self.used_pages,
+            reserved_pages=self._reserved_unbacked,
+            free_pages=self.free_pages,
+            available_pages=self.available_pages,
+            high_water_pages=self.high_water,
+        )
+
+    # -- sequence lifecycle -------------------------------------------------
+
+    def allocate_sequence(self, max_tokens: int) -> Optional["PagedSequence"]:
+        """Reserve worst-case capacity for one request; None if it won't fit.
+
+        `max_tokens` is the cache high-water mark (prompt + generation +
+        draft/verify window), not just the prompt length."""
+        need = pages_for(max_tokens, self.page_size)
+        if need > self.num_pages:
+            raise ValueError(
+                f"request needs {need} pages > pool capacity {self.num_pages}"
+            )
+        if not self.can_reserve(need):
+            return None
+        self._reserved_unbacked += need
+        return PagedSequence(self, reservation=need)
+
+    # -- internal page ops (called by PagedSequence) ------------------------
+
+    def _take_page(self) -> int:
+        page = self._free.pop()
+        self._allocated.add(page)
+        self._reserved_unbacked -= 1
+        self.high_water = max(self.high_water, self.used_pages)
+        return page
+
+    def _give_page(self, page: int, *, back_to_reservation: bool) -> None:
+        if page not in self._allocated:
+            raise RuntimeError(f"double-free of page {page}")
+        self._allocated.remove(page)
+        self._free.append(page)
+        if back_to_reservation:
+            self._reserved_unbacked += 1
+
+
+class PagedSequence:
+    """One request's page table + length over a shared PagedKVPool."""
+
+    def __init__(self, pool: PagedKVPool, reservation: int):
+        self.pool = pool
+        self.pages: List[int] = []
+        self.length = 0
+        self.reservation = reservation
+        self.released = False
+
+    # -- index helpers ------------------------------------------------------
+
+    def _flat_index(self, start: int, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(page ids, in-page slots) for token positions [start, start+n)."""
+        pos = np.arange(start, start + n)
+        page_idx = pos // self.pool.page_size
+        return np.asarray(self.pages, np.int64)[page_idx], pos % self.pool.page_size
+
+    def _ensure_capacity(self, n_tokens: int) -> None:
+        need = pages_for(n_tokens, self.pool.page_size)
+        while len(self.pages) < need:
+            if len(self.pages) >= self.reservation:
+                raise RuntimeError(
+                    f"sequence exceeded its reservation of {self.reservation} pages"
+                )
+            self.pages.append(self.pool._take_page())
+
+    # -- data path ----------------------------------------------------------
+
+    def append(self, k_span: np.ndarray, v_span: np.ndarray) -> None:
+        """Write KV for token span [length, length+L) and advance length.
+
+        k_span/v_span: (n_layers, L, kv_heads, head_dim)."""
+        assert not self.released, "append on a released sequence"
+        l = k_span.shape[1]
+        if l == 0:
+            return
+        self._ensure_capacity(self.length + l)
+        pg, slot = self._flat_index(self.length, l)
+        self.pool.k[:, pg, slot] = k_span
+        self.pool.v[:, pg, slot] = v_span
+        self.length += l
+
+    def gather_into(self, k_dst: np.ndarray, v_dst: np.ndarray) -> None:
+        """Materialize the dense per-request view: dst (n_layers, S_pad, kvh,
+        hd) receives the pages' contents at their token positions.  Slots
+        beyond `length` are left as-is — every consumer masks by length."""
+        assert not self.released
+        assert self.length <= k_dst.shape[1], (self.length, k_dst.shape)
+        n = len(self.pages)
+        if n == 0:
+            return
+        ps = self.pool.page_size
+        pg = np.asarray(self.pages, np.int64)
+        # the last page's tail may overhang a dst that is not a multiple of
+        # page_size — clamp the copy (only junk slots past `length` drop)
+        m = min(n * ps, k_dst.shape[1])
+        span = self.pool.k[:, pg].reshape(self.pool.n_layers, n * ps, *k_dst.shape[2:])
+        k_dst[:, :m] = span[:, :m]
+        span_v = self.pool.v[:, pg].reshape(self.pool.n_layers, n * ps, *v_dst.shape[2:])
+        v_dst[:, :m] = span_v[:, :m]
+
+    def rewind(self, n: int) -> None:
+        """Drop the last n tokens in O(pages dropped): adjust the length and
+        return whole pages past the new high-water mark to the free list
+        (into this sequence's reservation, so it may regrow)."""
+        assert not self.released, "rewind on a released sequence"
+        if n < 0:
+            raise ValueError(f"rewind expects n >= 0, got {n}")
+        if n > self.length:
+            raise ValueError(f"over-rewind: length {self.length} < rewind {n}")
+        self.length -= n
+        keep = pages_for(self.length, self.pool.page_size)
+        while len(self.pages) > keep:
+            self.pool._give_page(self.pages.pop(), back_to_reservation=True)
+
+    def release(self) -> None:
+        """Return every page and the unused reservation to the pool."""
+        if self.released:
+            raise RuntimeError("double release of PagedSequence")
+        for page in self.pages:
+            self.pool._give_page(page, back_to_reservation=False)
+        self.pool._reserved_unbacked -= self.reservation - len(self.pages)
+        self.pages = []
+        self.length = 0
+        self.released = True

@@ -1,0 +1,118 @@
+"""Request lifecycle for the continuous-batching runtime.
+
+A request moves QUEUED -> PREFILL -> DECODE -> FINISHED.  While in DECODE it
+owns one PagedSequence per model (target + draft) and carries its own APSD
+mode state: the paper's adaptive controller picks the draft length *per
+request per round* (short window while the TLM is rejecting, long window
+while it accepts everything — `core/apsd.APSDPolicy`), so easy and hard
+requests in the same batch draft different amounts.  Tokens stream to an
+optional per-request sink as soon as they commit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.apsd import NONPAR, PAR, APSDPolicy
+from repro.serving.paged_cache import PagedSequence
+
+__all__ = ["RequestState", "DraftController", "Request"]
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class DraftController:
+    """Per-request adaptive draft length (the APSD mode state machine).
+
+    Fixed-DL SD is the degenerate case short_dl == long_dl.  The PAR/NONPAR
+    transition reuses ``APSDPolicy.next_mode``; in the batched runtime "PAR"
+    buys a longer draft window (the cross-request overlap itself is what the
+    batcher's WDOS model prices — see serving/batcher.py).
+    """
+
+    short_dl: int
+    long_dl: int
+    mode: int = NONPAR
+
+    def draft_len(self) -> int:
+        return self.long_dl if self.mode == PAR else self.short_dl
+
+    def observe(self, n_accepted: int, window: int) -> None:
+        all_acc = n_accepted == window
+        self.mode = APSDPolicy.next_mode(self.mode, all_acc, True)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32, S >= 2
+    max_new_tokens: int
+    sink: Optional[Callable[[int], None]] = None  # streaming token callback
+
+    state: RequestState = RequestState.QUEUED
+    out: List[int] = dataclasses.field(default_factory=list)
+    last_tok: int = 0  # tip of the committed sequence (re-fed each round)
+    t_seq: Optional[PagedSequence] = None  # target-model KV pages
+    d_seq: Optional[PagedSequence] = None  # draft-model KV pages
+    controller: Optional[DraftController] = None
+
+    # stats
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    admitted_step: int = -1
+    finished_step: int = -1
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.shape[0] < 2:
+            raise ValueError("prompt must have >= 2 tokens (SD invariant)")
+        self.last_tok = int(self.prompt[-1])
+
+    @property
+    def committed_len(self) -> int:
+        """Prompt + generated tokens (the model-visible sequence)."""
+        return self.prompt.shape[0] + len(self.out)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new_tokens
+
+    def peak_cache_len(self, max_dl: int) -> int:
+        """Worst-case cache length: committed-1 positions plus a full
+        draft/verify window (+1 for the verify bonus / draft straggler)."""
+        return self.prompt.shape[0] + self.max_new_tokens + max_dl
+
+    def commit(self, tokens: List[int]) -> None:
+        """Append verified tokens; stream them (up to the budget); update the
+        tip.  A round may overshoot max_new_tokens — the overshoot is kept
+        for cache bookkeeping and trimmed at finish, like ``sd_generate``."""
+        keep = max(0, self.max_new_tokens - len(self.out))
+        if self.sink is not None:
+            for t in tokens[:keep]:
+                self.sink(int(t))
+        self.out.extend(tokens)
+        if tokens:
+            self.last_tok = int(tokens[-1])
+
+    def finish(self, step: int) -> None:
+        self.state = RequestState.FINISHED
+        self.finished_step = step
+        self.out = self.out[: self.max_new_tokens]
+        for seq in (self.t_seq, self.d_seq):
+            if seq is not None and not seq.released:
+                seq.release()
+        self.t_seq = self.d_seq = None
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.drafted, 1)

@@ -1,0 +1,41 @@
+"""Optional-dependency shims for the test suite.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt).  Test modules
+that mix property-based and example-based tests import `given / settings / st`
+from here: when hypothesis is absent the property tests skip individually and
+the example tests still run (a bare `from hypothesis import ...` used to error
+the whole collection).  Modules that are *entirely* property-based should use
+``pytest.importorskip("hypothesis")`` instead.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised only without dev deps
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """`st.<anything>(...)(.map/.filter/...)` placeholder; supports
+        arbitrary attribute/call chaining but is never drawn from (skip)."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _StrategyStub()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

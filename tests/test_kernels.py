@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st
 
 from repro.core import bvq, quantization as q, rotation as rot
 from repro.kernels import ops, ref

@@ -1,0 +1,141 @@
+"""Paged KV pool allocator invariants (serving/paged_cache.py)."""
+import numpy as np
+import pytest
+
+from repro.serving.paged_cache import PagedKVPool, pages_for
+
+
+def make_pool(num_pages=8, page_size=4, n_layers=2, kvh=2, hd=8):
+    return PagedKVPool(n_layers, kvh, hd, num_pages=num_pages, page_size=page_size)
+
+
+def span(pool, l, val=1.0):
+    x = np.full((pool.n_layers, l, pool.kv_heads, pool.head_dim), val, np.float32)
+    return x, -x
+
+
+def test_pages_for():
+    assert pages_for(0, 4) == 0
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+
+
+def test_append_gather_roundtrip():
+    pool = make_pool()
+    seq = pool.allocate_sequence(10)
+    k1, v1 = span(pool, 6, 1.0)
+    seq.append(k1, v1)
+    k2, v2 = span(pool, 3, 2.0)
+    seq.append(k2, v2)
+    assert seq.length == 9 and len(seq.pages) == 3
+    kd = np.zeros((pool.n_layers, 12, pool.kv_heads, pool.head_dim), np.float32)
+    vd = np.zeros_like(kd)
+    seq.gather_into(kd, vd)
+    np.testing.assert_array_equal(kd[:, :6], k1)
+    np.testing.assert_array_equal(kd[:, 6:9], k2)
+    np.testing.assert_array_equal(vd[:, :9], np.concatenate([v1, v2], 1))
+
+
+def test_reservation_blocks_admission():
+    pool = make_pool(num_pages=8, page_size=4)
+    a = pool.allocate_sequence(16)  # 4 pages reserved, 0 backed
+    assert a is not None and pool.available_pages == 4
+    b = pool.allocate_sequence(17)  # needs 5 > 4 available
+    assert b is None
+    c = pool.allocate_sequence(16)
+    assert c is not None and pool.available_pages == 0
+    assert pool.allocate_sequence(1) is None
+
+
+def test_request_larger_than_pool_raises():
+    pool = make_pool(num_pages=4, page_size=4)
+    with pytest.raises(ValueError, match="capacity"):
+        pool.allocate_sequence(17)
+
+
+def test_rewind_restores_free_pages_and_regrow():
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(12)
+    seq.append(*span(pool, 10))
+    assert pool.used_pages == 3
+    seq.rewind(6)  # length 4 -> 1 page kept
+    assert seq.length == 4 and pool.used_pages == 1
+    # rewound pages return to the reservation, so the sequence can regrow
+    seq.append(*span(pool, 8, 3.0))
+    assert seq.length == 12 and pool.used_pages == 3
+    with pytest.raises(ValueError, match="over-rewind"):
+        seq.rewind(13)
+    with pytest.raises(ValueError):
+        seq.rewind(-1)
+
+
+def test_rewind_is_partial_page_aware():
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(12)
+    seq.append(*span(pool, 9))  # 3 pages, last holds 1 token
+    seq.rewind(1)  # length 8: drops the partial page
+    assert pool.used_pages == 2
+    seq.rewind(1)  # length 7: page boundary not crossed
+    assert pool.used_pages == 2
+
+
+def test_release_returns_pages_and_reservation():
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(16)  # reserve 4
+    seq.append(*span(pool, 5))  # backs 2 of the 4 reserved pages
+    assert pool.free_pages == 6
+    assert pool.available_pages == 4  # 6 free minus 2 still-unbacked reserved
+    seq.release()
+    assert pool.used_pages == 0
+    assert pool.available_pages == 8
+    assert seq.released
+    with pytest.raises(RuntimeError, match="double release"):
+        seq.release()
+
+
+def test_page_reuse_after_release():
+    pool = make_pool(num_pages=2, page_size=4)
+    a = pool.allocate_sequence(8)
+    a.append(*span(pool, 8))
+    pages_a = list(a.pages)
+    assert pool.allocate_sequence(4) is None  # full
+    a.release()
+    b = pool.allocate_sequence(8)
+    b.append(*span(pool, 8, 9.0))
+    assert sorted(b.pages) == sorted(pages_a)  # physical reuse
+
+
+def test_exceeding_reservation_raises():
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(8)  # 2 pages
+    with pytest.raises(RuntimeError, match="reservation"):
+        seq.append(*span(pool, 9))
+
+
+def test_gather_into_clamps_page_overhang():
+    """A dst buffer that is not a multiple of page_size must not overflow:
+    the last page's junk tail is clamped (regression: s_max=110, ps=16)."""
+    pool = make_pool(num_pages=8, page_size=16)
+    seq = pool.allocate_sequence(110)
+    k, v = span(pool, 100, 5.0)
+    seq.append(k, v)  # 7 pages = 112 slots > 110-row dst
+    kd = np.zeros((pool.n_layers, 110, pool.kv_heads, pool.head_dim), np.float32)
+    vd = np.zeros_like(kd)
+    seq.gather_into(kd, vd)
+    np.testing.assert_array_equal(kd[:, :100], k)
+    with pytest.raises(AssertionError):
+        short = np.zeros((pool.n_layers, 99, pool.kv_heads, pool.head_dim), np.float32)
+        seq.gather_into(short, short.copy())  # dst smaller than valid data
+
+
+def test_high_water_and_stats():
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(16)
+    seq.append(*span(pool, 16))
+    st = pool.stats()
+    assert st.used_pages == 4 and st.high_water_pages == 4
+    assert st.utilization == pytest.approx(0.5)
+    seq.release()
+    assert pool.stats().used_pages == 0
+    assert pool.stats().high_water_pages == 4  # sticky

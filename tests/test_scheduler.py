@@ -59,6 +59,32 @@ def test_deadlock_detection():
         sch.wdos_schedule(instrs)
 
 
+def test_cyclic_dependency_deadlocks():
+    """A true cross-queue dependency cycle must raise, not spin."""
+    instrs = [
+        Instr(0, Queue.COMPUTE, 1.0, deps=(1,)),
+        Instr(1, Queue.EMAC, 1.0, deps=(0,)),
+    ]
+    with pytest.raises(RuntimeError, match="deadlock"):
+        sch.wdos_schedule(instrs)
+
+
+def test_self_dependency_deadlocks():
+    with pytest.raises(RuntimeError, match="deadlock"):
+        sch.wdos_schedule([Instr(0, Queue.RERAM, 1.0, deps=(0,))])
+
+
+def test_utilization_zero_makespan():
+    """Empty / zero-duration schedules must not divide by zero."""
+    s = sch.wdos_schedule([])
+    assert s.makespan == 0.0
+    for q in Queue:
+        assert s.utilization(q) == 0.0
+    s0 = sch.wdos_schedule([Instr(0, Queue.COMPUTE, 0.0)])
+    assert s0.makespan == 0.0
+    assert s0.utilization(Queue.COMPUTE) == 0.0
+
+
 def test_layer_pipeline_overlaps_load_and_compute():
     b = sch.new_builder()
     # 8 layers, load 2.0 each / compute 1.0 each

@@ -1,0 +1,183 @@
+"""Continuous-batching runtime: multi-request correctness + scheduling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.speculative import SDConfig
+from repro.launch.serve import build_pair, greedy_reference
+from repro.serving.engine import BatchConfig, make_interface, serve_batch, serve_sd
+from repro.serving.request import Request, RequestState
+
+
+def _prompts(n, seed=0, vocab=512):
+    rng = np.random.RandomState(seed)
+    return [
+        rng.randint(0, vocab, size=rng.randint(2, 7)).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return build_pair(seed=0, s_max=128, quantize=False)
+
+
+@pytest.fixture(scope="module")
+def qpair():
+    return build_pair(seed=0, s_max=128, quantize=True)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance criterion: >= 8 concurrent requests, bit-identical to serve_sd
+# ---------------------------------------------------------------------------
+
+
+def _assert_batch_matches_sequential(target, draft, n_req, max_tokens, **cfg_kw):
+    prompts = _prompts(n_req)
+    cfg = BatchConfig(
+        max_batch=n_req, page_size=8, max_tokens=max_tokens, draft_len=3, **cfg_kw
+    )
+    outs, summary = serve_batch(jax.random.PRNGKey(0), target, draft, prompts, cfg)
+    for i, p in enumerate(prompts):
+        ref, _ = serve_sd(
+            jax.random.PRNGKey(0), target, draft, jnp.asarray(p[None]),
+            SDConfig(draft_len=3, temperature=0.0, max_tokens=max_tokens),
+        )
+        assert outs[i].shape == ref.shape
+        assert bool(jnp.all(outs[i] == ref)), f"request {i} diverged"
+    return summary
+
+
+def test_batch8_bit_identical_to_serve_sd(pair):
+    target, draft = pair
+    summary = _assert_batch_matches_sequential(target, draft, 8, 12)
+    assert summary["requests"] == 8
+    assert summary["emitted"] == 8 * 12
+    assert summary["target_pool"].used_pages == 0  # everything released
+    assert summary["draft_pool"].used_pages == 0
+    assert summary["wdos_modeled_speedup"] > 1.0  # cross-request overlap
+
+
+def test_batch_bit_identical_quantized_pair(qpair):
+    """W4A8 target + BVQ draft (the paper pair) through the paged runtime."""
+    target, draft = qpair
+    _assert_batch_matches_sequential(target, draft, 4, 8)
+
+
+def test_page_budget_queues_requests(pair):
+    """A pool too small for all requests must queue (continuous batching),
+    not fail — and still produce identical outputs."""
+    target, draft = pair
+    prompts = _prompts(6, seed=3)
+    # budget: pages for ~2 concurrent worst-case requests of this size
+    need = -(-(max(len(p) for p in prompts) + 8 + 3) // 8)
+    cfg = BatchConfig(
+        max_batch=6, page_size=8, max_tokens=8, draft_len=3,
+        num_pages=2 * need,
+    )
+    outs, summary = serve_batch(jax.random.PRNGKey(0), target, draft, prompts, cfg)
+    for i, p in enumerate(prompts):
+        ref, _ = serve_sd(
+            jax.random.PRNGKey(0), target, draft, jnp.asarray(p[None]),
+            SDConfig(draft_len=3, temperature=0.0, max_tokens=8),
+        )
+        assert bool(jnp.all(outs[i] == ref))
+    assert summary["target_pool"].high_water_pages <= 2 * need
+    assert summary["steps"] > summary["rounds"] / max(summary["requests"], 1)
+
+
+def test_s_max_not_page_multiple(pair):
+    """Regression: requests whose pages overhang an s_max that is not a
+    multiple of page_size must still decode (and stay bit-identical)."""
+    import dataclasses
+
+    target, draft = pair
+    t2 = dataclasses.replace(target, s_max=46)
+    d2 = dataclasses.replace(draft, s_max=46)
+    prompts = _prompts(2, seed=11)
+    cfg = BatchConfig(max_batch=2, page_size=16, max_tokens=36, draft_len=3)
+    outs, _ = serve_batch(jax.random.PRNGKey(0), t2, d2, prompts, cfg)
+    for i, p in enumerate(prompts):
+        ref, _ = serve_sd(
+            jax.random.PRNGKey(0), t2, d2, jnp.asarray(p[None]),
+            SDConfig(draft_len=3, temperature=0.0, max_tokens=36),
+        )
+        assert bool(jnp.all(outs[i] == ref))
+
+
+def test_adaptive_draft_lossless(pair):
+    """Per-request APSD draft-length adaptation never changes greedy output
+    (only scheduling): outputs equal the plain AD reference."""
+    target, draft = pair
+    prompts = _prompts(4, seed=5)
+    cfg = BatchConfig(
+        max_batch=4, page_size=8, max_tokens=10, adaptive=True,
+        short_dl=2, long_dl=4,
+    )
+    outs, _ = serve_batch(jax.random.PRNGKey(0), target, draft, prompts, cfg)
+    for i, p in enumerate(prompts):
+        ref = greedy_reference(target, jnp.asarray(p[None]), 10)
+        assert bool(jnp.all(outs[i] == ref))
+
+
+def test_streaming_sinks_receive_tokens(pair):
+    target, draft = pair
+    prompts = _prompts(3, seed=7)
+    got = [[] for _ in prompts]
+    sinks = [got[i].append for i in range(len(prompts))]
+    cfg = BatchConfig(max_batch=2, page_size=8, max_tokens=6, draft_len=2)
+    outs, _ = serve_batch(
+        jax.random.PRNGKey(0), target, draft, prompts, cfg, sinks=sinks
+    )
+    for i in range(len(prompts)):
+        assert got[i] == [int(t) for t in outs[i]]
+
+
+def test_temperature_unsupported(pair):
+    target, draft = pair
+    with pytest.raises(NotImplementedError):
+        serve_batch(
+            jax.random.PRNGKey(0), target, draft, _prompts(1),
+            BatchConfig(temperature=0.7),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_request_lifecycle_and_trim():
+    r = Request(rid=0, prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4)
+    assert r.state is RequestState.QUEUED and r.last_tok == 3
+    r.commit([10, 11, 12])
+    assert not r.done and r.committed_len == 6
+    r.commit([13, 14])  # overshoot round
+    assert r.done and r.last_tok == 14
+    r.finish(step=9)
+    assert r.out == [10, 11, 12, 13]  # trimmed to the budget
+    assert r.state is RequestState.FINISHED and r.finished_step == 9
+
+
+def test_request_rejects_short_prompt():
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=np.array([1], np.int32), max_new_tokens=4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: engine rewind guard
+# ---------------------------------------------------------------------------
+
+
+def test_interface_rewind_guard(pair):
+    target, _ = pair
+    iface = make_interface(target)
+    _, cache = iface.prefill(target.params, jnp.asarray([[5, 17, 3]], jnp.int32))
+    assert int(cache["length"]) == 3
+    c2 = iface.rewind(cache, 2)
+    assert int(c2["length"]) == 1
+    with pytest.raises(ValueError, match="over-rewind"):
+        iface.rewind(cache, 4)
+    with pytest.raises(ValueError):
+        iface.rewind(cache, -1)
