@@ -1,15 +1,25 @@
 """Continuous-batching serving throughput (the multi-request analogue of the
 paper's Fig. 31.1.6 token/s table).
 
-Measures aggregate decode throughput of `serve_batch` (paged KV pools +
-vmapped draft/verify steps) against N sequential single-request `serve_sd`
-runs of the SAME models, sweeps batch size and page size, and
-microbenchmarks the paged-attention kernel against the gather+dense path it
-replaces.
+Measures aggregate decode throughput of `serve_batch` against N sequential
+single-request `serve_sd` runs of the SAME models, sweeps batch size and
+page size, and microbenchmarks the paged-attention kernel against the
+gather+dense path it replaces.
+
+`--kv-path` selects the KV residency: `paged` (device-resident pools — the
+real path: prefill scatters into pool pages, decode attends through the
+page table, zero host K/V copies) vs `host` (the legacy gather/scatter loop
+kept in serving/host_gather.py as the baseline), or `both` to A/B them.
+Per-round K/V copy time is reported separately so the refactor's win is
+visible directly: `host` pays O(S_max x B) host traffic per round
+(`kv_copy_ms_per_round`), `paged` pays only tiny int32 page-table/length
+uploads (`table_upload_ms_per_round`).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+        [--kv-path {paged,host,both}] [--paged-attn {gather,pallas}]
 """
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -55,9 +65,31 @@ def _bench_paged_attn_rows(rows):
         "paged_attn_pallas", us_kernel, f"B={b} pages={mp}x{ps} [{backend}]"
     ))
     rows.append(("paged_attn_gather_ref", us_ref, "gather+dense oracle"))
+    # multi-token verify window (the generalization serve_batch dispatches)
+    w = 4
+    qw = jnp.asarray(rng.randn(b, w, kvs, g, hd).astype(np.float32))
+    us_win = timed(lambda: paged_decode_attention_pallas(qw, kp, vp, pt, lens))
+    rows.append(("paged_attn_pallas_window4", us_win, f"W={w} verify span"))
 
 
-def run(smoke: bool = False):
+def _copy_telemetry(rows, tag, summary):
+    """Per-round host K/V copy vs page-table upload time — the refactor's
+    before/after, straight from the engine's instrumentation."""
+    rounds = max(summary["rounds"], 1)
+    if summary["kv_path"] == "host":
+        rows.append((
+            f"{tag}_kv_copy_ms_per_round", 0.0,
+            f"{summary['kv_copy_s'] / rounds * 1e3:.3f} ms (host gather/scatter)",
+        ))
+    else:
+        rows.append((
+            f"{tag}_table_upload_ms_per_round", 0.0,
+            f"{summary.get('table_upload_s', 0.0) / rounds * 1e3:.3f} ms "
+            "(int32 tables only; zero K/V copies)",
+        ))
+
+
+def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "gather"):
     from repro.core.speculative import SDConfig
     from repro.launch.serve import build_pair
     from repro.serving.engine import BatchConfig, serve_batch, serve_sd
@@ -66,7 +98,11 @@ def run(smoke: bool = False):
     max_tokens = 8 if smoke else 24
     n_req = 4 if smoke else 8
     target, draft = build_pair(seed=0, s_max=256, quantize=False)
+    if paged_attn != "gather":
+        target = dataclasses.replace(target, paged_attn_impl=paged_attn)
+        draft = dataclasses.replace(draft, paged_attn_impl=paged_attn)
     prompts = _prompts(n_req)
+    paths = ["paged", "host"] if kv_path == "both" else [kv_path]
 
     # --- baseline: N sequential single-request SD runs (warm jit)
     sd_cfg = SDConfig(draft_len=3, temperature=0.0, max_tokens=max_tokens)
@@ -79,32 +115,45 @@ def run(smoke: bool = False):
     seq_tps = n_req * max_tokens / dt_seq
     rows.append(("serving_sequential_x%d" % n_req, 0.0, f"{seq_tps:.1f} tok/s"))
 
-    # --- continuous batching at increasing batch sizes
+    # --- continuous batching at increasing batch sizes, per kv path
     batch_tps = {}
-    for bs in ([2, n_req] if smoke else [2, 4, n_req]):
-        cfg = BatchConfig(max_batch=bs, page_size=16, max_tokens=max_tokens,
-                          draft_len=3)
-        serve_batch(jax.random.PRNGKey(0), target, draft, prompts[:bs], cfg)  # warm
-        t0 = time.perf_counter()
-        outs, summary = serve_batch(
-            jax.random.PRNGKey(0), target, draft, prompts, cfg
-        )
-        dt = time.perf_counter() - t0
-        tps = sum(int(o.shape[0]) for o in outs) / dt
-        batch_tps[bs] = tps
+    round_ms = {}
+    for path in paths:
+        for bs in ([2, n_req] if smoke else [2, 4, n_req]):
+            cfg = BatchConfig(max_batch=bs, page_size=16, max_tokens=max_tokens,
+                              draft_len=3, kv_path=path)
+            serve_batch(jax.random.PRNGKey(0), target, draft, prompts[:bs], cfg)
+            t0 = time.perf_counter()
+            outs, summary = serve_batch(
+                jax.random.PRNGKey(0), target, draft, prompts, cfg
+            )
+            dt = time.perf_counter() - t0
+            tps = sum(int(o.shape[0]) for o in outs) / dt
+            batch_tps[(path, bs)] = tps
+            round_ms[(path, bs)] = dt / max(summary["rounds"], 1) * 1e3
+            rows.append((
+                f"serving_{path}_b{bs}", 0.0,
+                f"{tps:.1f} tok/s; {round_ms[(path, bs)]:.1f} ms/round; "
+                f"wdos-model {summary['wdos_modeled_speedup']:.2f}x",
+            ))
+            if bs == n_req:
+                _copy_telemetry(rows, f"serving_{path}_b{bs}", summary)
+    for path in paths:
         rows.append((
-            f"serving_continuous_b{bs}", 0.0,
-            f"{tps:.1f} tok/s; wdos-model {summary['wdos_modeled_speedup']:.2f}x",
+            f"serving_{path}_batch{n_req}_speedup_vs_sequential", 0.0,
+            f"{batch_tps[(path, n_req)] / seq_tps:.2f}x",
         ))
-    rows.append((
-        f"serving_batch{n_req}_speedup_vs_sequential", 0.0,
-        f"{batch_tps[n_req] / seq_tps:.2f}x",
-    ))
+    if len(paths) == 2:
+        rows.append((
+            f"serving_paged_round_speedup_vs_host_b{n_req}", 0.0,
+            f"{round_ms[('host', n_req)] / round_ms[('paged', n_req)]:.2f}x "
+            "per-round latency",
+        ))
 
     # --- page-size sweep: allocator utilization (internal fragmentation)
     for ps in [4, 32]:
         cfg = BatchConfig(max_batch=n_req, page_size=ps, max_tokens=max_tokens,
-                          draft_len=3)
+                          draft_len=3, kv_path=paths[0])
         _, summary = serve_batch(jax.random.PRNGKey(0), target, draft, prompts, cfg)
         st = summary["target_pool"]
         rows.append((
@@ -119,9 +168,19 @@ def run(smoke: bool = False):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument(
+        "--kv-path", choices=["paged", "host", "both"], default="both",
+        help="KV residency: device-resident pools, legacy host gather, or A/B",
+    )
+    ap.add_argument(
+        "--paged-attn", choices=["gather", "pallas"], default="gather",
+        help="paged attention impl: exact device gather or the Pallas kernel",
+    )
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    for n, us, derived in run(smoke=args.smoke):
+    for n, us, derived in run(
+        smoke=args.smoke, kv_path=args.kv_path, paged_attn=args.paged_attn
+    ):
         print(f"{n},{us:.1f},{derived}")
     return 0
 

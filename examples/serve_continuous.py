@@ -28,6 +28,8 @@ def main(argv=None):
     ap.add_argument("--adaptive", action="store_true",
                     help="per-request APSD draft-length adaptation")
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--kv-path", choices=["paged", "host"], default="paged",
+                    help="device-resident pools (default) vs legacy host gather")
     args = ap.parse_args(argv)
 
     print(f"building TLM/DLM pair (quantize={not args.no_quant}) ...")
@@ -49,6 +51,7 @@ def main(argv=None):
         adaptive=args.adaptive,
         short_dl=2,
         long_dl=4,
+        kv_path=args.kv_path,
     )
     t0 = time.time()
     outs, summary = serve_batch(
@@ -67,6 +70,12 @@ def main(argv=None):
     print(f"\npool: {tp.high_water_pages}/{tp.num_pages} pages high-water "
           f"(page_size={tp.page_size})")
     print(f"acceptance rate: {summary['acceptance_rate']:.3f}")
+    if summary["kv_path"] == "paged":
+        print(f"kv residency: device pools, 0 host K/V copies "
+              f"(table uploads {summary['table_upload_s'] * 1e3:.1f} ms total)")
+    else:
+        print(f"kv residency: host gather/scatter "
+              f"{summary['kv_copy_s'] * 1e3:.1f} ms total")
     print(f"WDOS cross-request overlap model: "
           f"{summary['wdos_modeled_speedup']:.2f}x vs in-order "
           f"(COMPUTE util {summary['wdos_utilization']['COMPUTE']:.2f})")

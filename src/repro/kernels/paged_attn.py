@@ -1,24 +1,32 @@
 """Paged decode-attention Pallas kernel: attend THROUGH a page table.
 
 The continuous-batching runtime (serving/engine.serve_batch) keeps every
-request's KV in a shared block-granular pool (serving/paged_cache.py); the
-pure-JAX path materializes a dense per-request view by gathering pages
-host-side before each step.  This kernel removes that copy: the grid's
-innermost dimension walks a request's page table and the BlockSpec index_map
-reads the page id from a scalar-prefetched table, so each (request, kv-head)
-pair streams exactly its own pages pool->VMEM once and runs online softmax
-in VREGs — decode attention over the paged pool with zero gather
-materialization (the same trick the dense int8 kernel in decode_attn.py
-plays on a contiguous cache, plus scalar-prefetch indirection).
+request's KV in a shared block-granular pool (serving/paged_cache.py) that
+is now DEVICE-RESIDENT: the model forward scatters new tokens straight into
+pool pages and this kernel attends in place through the page table.  The
+grid's innermost dimension walks a request's page table and the BlockSpec
+index_map reads the page id from a scalar-prefetched table, so each
+(request, kv-head) pair streams exactly its own pages pool->VMEM once and
+runs online softmax in VREGs — decode attention over the paged pool with
+zero gather materialization (the same trick the dense int8 kernel in
+decode_attn.py plays on a contiguous cache, plus scalar-prefetch
+indirection).
+
+The kernel generalizes to the speculative VERIFY window: q may carry W > 1
+query tokens per request (the round's [last_tok, drafts...] span), causally
+masked inside the window — query w attends to absolute positions
+<= length - W + w.
 
 Layout (one grid step = one (request, kv-head) pair x one page):
   page_table (B, max_pages) int32  — scalar-prefetched; unused slots must
                                      hold any in-range id (masked by length)
-  lengths    (B,)           int32  — valid prefix per request
-  q          (B, KVS, G, hd)       — G = H / KVS query heads per kv head
+  lengths    (B,)           int32  — valid tokens per request INCLUDING the
+                                     W window tokens just written
+  q          (B, KVS, G, hd)       — single decode token (W = 1), or
+             (B, W, KVS, G, hd)    — multi-token verify window
   k_pool     (P, page_size, KVS, hd)
   v_pool     (P, page_size, KVS, hd)
-  out        (B, KVS, G, hd) f32
+  out        same shape as q, f32
 
 TPU note: real-hardware efficiency wants hd a multiple of 128 and
 page_size a multiple of the sublane tile; interpret mode (CPU tests) takes
@@ -39,7 +47,8 @@ __all__ = ["paged_decode_attention_pallas"]
 
 
 def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, n_pages: int, page_size: int, scale: float):
+            m_ref, l_ref, acc_ref, *, n_pages: int, page_size: int,
+            window: int, group: int, scale: float):
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -49,25 +58,28 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (W*G, hd)
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, hd)
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (G, page_size)
-    # mask token slots beyond the request's valid prefix (also covers page-
-    # table slots past the request's page count: every slot is masked)
+    )  # (W*G, page_size)
+    # mask token slots beyond each query's causal horizon: row (w, g) at
+    # absolute position length - W + w sees kv positions <= itself.  This
+    # also covers page-table slots past the request's page count (every
+    # slot is masked) and reduces to `pos < length` when W == 1.
     pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    scores = jnp.where(pos < len_ref[b], scores, -1e30)
+    w = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0) // group
+    scores = jnp.where(pos <= len_ref[b] - window + w, scores, -1e30)
 
-    m_prev = m_ref[...]  # (G, 1)
+    m_prev = m_ref[...]  # (W*G, 1)
     m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
-    prob = jnp.exp(scores - m_new)  # (G, page_size)
-    corr = jnp.exp(m_prev - m_new)  # (G, 1)
+    prob = jnp.exp(scores - m_new)  # (W*G, page_size)
+    corr = jnp.exp(m_prev - m_new)  # (W*G, 1)
     l_ref[...] = l_ref[...] * corr + prob.sum(axis=-1, keepdims=True)
     pv = jax.lax.dot_general(
         prob, v_ref[0, :, 0, :].astype(jnp.float32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
-    )  # (G, hd)
+    )  # (W*G, hd)
     acc_ref[...] = acc_ref[...] * corr + pv
     m_ref[...] = m_new
 
@@ -80,28 +92,40 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention_pallas(
-    q: jnp.ndarray,  # (B, KVS, G, hd)
+    q: jnp.ndarray,  # (B, KVS, G, hd) or (B, W, KVS, G, hd)
     k_pool: jnp.ndarray,  # (P, page_size, KVS, hd)
     v_pool: jnp.ndarray,
     page_table: jnp.ndarray,  # (B, max_pages) int32
-    lengths: jnp.ndarray,  # (B,) int32
+    lengths: jnp.ndarray,  # (B,) int32 — valid tokens incl. the window
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """out (B, KVS, G, hd) f32 — one decoded token's attention per request,
-    gathered through the page table (no dense cache copy)."""
+    """Attention through the page table (no dense cache copy), f32 out.
+
+    4-D q decodes one token per request (``lengths`` = valid prefix, the
+    original contract); 5-D q scores a W-token window causally (``lengths``
+    counts the window's tokens too — the dense verify-path convention)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    b, kvs, g, hd = q.shape
+    windowed = q.ndim == 5
+    if windowed:
+        b, w, kvs, g, hd = q.shape
+        # (B, W, KVS, G, hd) -> (B, KVS, W*G, hd), rows (w, g) W-major
+        qk = q.transpose(0, 2, 1, 3, 4).reshape(b, kvs, w * g, hd)
+    else:
+        b, kvs, g, hd = q.shape
+        w = 1
+        qk = q
     _, page_size, pool_kvs, pool_hd = k_pool.shape
     assert (pool_kvs, pool_hd) == (kvs, hd), (k_pool.shape, q.shape)
     n_pages = page_table.shape[1]
+    rows = w * g
     scale = 1.0 / math.sqrt(hd)
     grid = (b, kvs, n_pages)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # page_table, lengths
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, rows, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)),
             pl.BlockSpec(
                 (1, page_size, 1, hd), lambda i, j, p, pt, ln: (pt[i, p], 0, j, 0)
             ),
@@ -109,18 +133,24 @@ def paged_decode_attention_pallas(
                 (1, page_size, 1, hd), lambda i, j, p, pt, ln: (pt[i, p], 0, j, 0)
             ),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)
+        ),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(
-            _kernel, n_pages=n_pages, page_size=page_size, scale=scale
+            _kernel, n_pages=n_pages, page_size=page_size,
+            window=w, group=g, scale=scale,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kvs, g, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, kvs, rows, hd), jnp.float32),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qk, k_pool, v_pool)
+    if windowed:
+        out = out.reshape(b, kvs, w, g, hd).transpose(0, 2, 1, 3, 4)
+    return out

@@ -56,25 +56,35 @@ def gather_pages_ref(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
 
 
 def paged_attn_ref(
-    q: jnp.ndarray,  # (B, KVS, G, hd) f32
+    q: jnp.ndarray,  # (B, KVS, G, hd) f32, or (B, W, KVS, G, hd) for a window
     k_pool: jnp.ndarray,  # (P, page_size, KVS, hd)
     v_pool: jnp.ndarray,
     page_table: jnp.ndarray,  # (B, max_pages) int32 (unused slots: any valid id)
-    lengths: jnp.ndarray,  # (B,) int32 valid prefix per request
+    lengths: jnp.ndarray,  # (B,) int32 valid tokens (incl. the window when 5-D)
 ) -> jnp.ndarray:
     """Oracle for kernels.paged_attn.paged_decode_attention_pallas: gather
-    the pages into a dense cache, then masked softmax attention per row."""
-    b, kvs, g, hd = q.shape
+    the pages into a dense cache, then masked softmax attention per row.
+
+    A 5-D q is a W-token causally-masked window whose last query sits at
+    absolute position ``lengths - 1`` (the speculative verify span)."""
+    windowed = q.ndim == 5
+    if not windowed:
+        q = q[:, None]  # (B, 1, KVS, G, hd); lengths = prefix == window end
+    b, w, kvs, g, hd = q.shape
     k = gather_pages_ref(k_pool, page_table).astype(jnp.float32)  # (B, S, KVS, hd)
     v = gather_pages_ref(v_pool, page_table).astype(jnp.float32)
     s = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum(
-        "bkgh,bskh->bkgs", q.astype(jnp.float32) * scale, k,
+        "bwkgh,bskh->bwkgs", q.astype(jnp.float32) * scale, k,
         preferred_element_type=jnp.float32,
     )
-    valid = jnp.arange(s)[None] < lengths[:, None]  # (B, S)
-    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    # query w attends kv positions <= lengths - W + w
+    horizon = lengths[:, None] - w + jnp.arange(w)[None, :]  # (B, W)
+    valid = jnp.arange(s)[None, None] <= horizon[..., None]  # (B, W, S)
+    scores = jnp.where(valid[:, :, None, None], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskh->bkgh", p, v, preferred_element_type=jnp.float32)
+    out = jnp.einsum("bwkgs,bskh->bwkgh", p, v, preferred_element_type=jnp.float32)
+    if not windowed:
+        out = out[:, 0]
     return out.astype(jnp.float32)

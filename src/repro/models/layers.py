@@ -44,6 +44,9 @@ __all__ = [
     "moe_apply",
     "embed_init",
     "Cache",
+    "PagedCache",
+    "paged_attention_update",
+    "forward_cache_ctx",
 ]
 
 Params = Dict[str, Any]
@@ -126,6 +129,116 @@ class Cache:
     v_scale: Optional[jnp.ndarray] = None
 
 
+@dataclasses.dataclass
+class PagedCache:
+    """One layer's view of the device-resident paged KV pool.
+
+    Unlike ``Cache`` (per-request dense buffers), the pool is SHARED across
+    the whole batch: each request owns the pages its ``page_table`` row
+    names, and ``length`` is per row.  Built inside the traced forward from
+    the paged cache pytree plus static serving config — not itself a pytree.
+
+    ``impl`` picks the attention path:
+      * "gather" — gather pages into a dense per-request view ON DEVICE
+        (width = the table span, max_pages * page_size) and run the exact
+        dense decode/flash math (bit-identical floats to the
+        single-request path; the default serving path);
+      * "pallas" — attend in place through the page table with
+        ``kernels/paged_attn.paged_decode_attention_pallas`` (interpret mode
+        on CPU), zero gather materialization.
+    """
+
+    k: jnp.ndarray  # (P(+scratch), page_size, kvh, hd)
+    v: jnp.ndarray
+    page_table: jnp.ndarray  # (B, max_pages) int32
+    length: jnp.ndarray  # (B,) int32 — tokens already written per request
+    impl: str = "gather"  # "gather" | "pallas"
+
+
+def forward_cache_ctx(cache, b: int, s: int, paged_impl: str):
+    """Shared forward preamble for every model path (bf16 / W4A8 / BVQ):
+    ``(offset, positions (B, S), paged_ctx)`` for any cache form.
+
+    A cache carrying ``page_table`` is the device-resident paged pool
+    (``{"lengths" (B,), "page_table" (B, mp), "attn": {"k": (L, P, ps,
+    kvh, hd), ...}}``): offset is the per-row length vector and paged_ctx
+    the ``(page_table, impl)`` pair the per-layer attention needs.  A
+    dense cache (or None) yields the scalar offset and
+    ``paged_ctx = None``."""
+    if cache is not None and "page_table" in cache:
+        offset = cache["lengths"]  # (B,)
+        positions = jnp.broadcast_to(
+            offset[:, None] + jnp.arange(s)[None, :], (b, s)
+        )
+        return offset, positions, (cache["page_table"], paged_impl)
+    offset = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = jnp.broadcast_to(offset + jnp.arange(s)[None, :], (b, s))
+    return offset, positions, None
+
+
+def paged_attention_update(
+    q: jnp.ndarray,  # (B, S, H, hd) — post-rope queries
+    k_new: jnp.ndarray,  # (B, S, kvh_store, hd) — post-rope, post-repeat
+    v_new: jnp.ndarray,
+    pc: PagedCache,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Scatter the S new tokens into their pool pages, then attend over the
+    valid per-request prefix (+ the causally-masked window when S > 1).
+
+    Returns ``(out (B, S, H, hd), new_k_pool, new_v_pool)``.  The scatter is
+    one flat ``.at[].set`` per pool — rows write disjoint pages by
+    construction (inactive rows all target the scratch page, where
+    duplicate writes are harmless)."""
+    b, s, h, hd = q.shape
+    n_pages, ps, kvh, _ = pc.k.shape
+    mp = pc.page_table.shape[1]
+    pos = pc.length[:, None] + jnp.arange(s)[None, :]  # (B, S) absolute slots
+    page = jnp.take_along_axis(
+        pc.page_table, jnp.minimum(pos // ps, mp - 1), axis=1
+    )  # (B, S) physical page per token
+    # positions past the table span (an engine sizing bug — admission
+    # reserves peak+window, so it cannot happen from serve_batch) divert to
+    # the pool's last page (the engine's scratch) rather than silently
+    # overwriting the request's own committed KV in its last page
+    page = jnp.where(pos >= mp * ps, n_pages - 1, page)
+    flat = (page * ps + pos % ps).reshape(-1)  # (B*S,) into (P*ps, kvh, hd)
+    new_k = (
+        pc.k.reshape(n_pages * ps, kvh, hd)
+        .at[flat]
+        .set(k_new.astype(pc.k.dtype).reshape(b * s, kvh, hd))
+        .reshape(pc.k.shape)
+    )
+    new_v = (
+        pc.v.reshape(n_pages * ps, kvh, hd)
+        .at[flat]
+        .set(v_new.astype(pc.v.dtype).reshape(b * s, kvh, hd))
+        .reshape(pc.v.shape)
+    )
+    new_len = pc.length + s  # valid tokens incl. this span, per row
+    if pc.impl == "pallas":
+        from repro.kernels.paged_attn import paged_decode_attention_pallas
+
+        g = h // kvh
+        q5 = q.reshape(b, s, kvh, g, hd)  # H is (kv-head, group)-major
+        out = paged_decode_attention_pallas(
+            q5, new_k, new_v, pc.page_table, new_len
+        )
+        return out.reshape(b, s, h, hd).astype(q.dtype), new_k, new_v
+    if pc.impl != "gather":
+        raise ValueError(f"unknown paged attention impl {pc.impl!r}")
+    # device-side gather to the table-span width (>= every valid length by
+    # the allocator's reservation invariant), then the identical dense
+    # math — bit-identical to the host-dense path: masked columns
+    # contribute exact zeros, so the width difference never shows
+    kd = new_k[pc.page_table.reshape(-1)].reshape(b, mp * ps, kvh, hd)
+    vd = new_v[pc.page_table.reshape(-1)].reshape(b, mp * ps, kvh, hd)
+    if s == 1:
+        out = _decode_attention(q, kd, vd, new_len)
+    else:
+        out = flash_attention(q, kd, vd, causal=True, q_offset=pc.length)
+    return out, new_k, new_v
+
+
 def _kv_quantize(k: jnp.ndarray):
     """(B,S,H,hd) -> (int8 values, (B,S,H,1) f32 scales)."""
     s = jnp.maximum(
@@ -203,11 +316,15 @@ def flash_attention(
     k: jnp.ndarray,  # (B, Skv, Hkv_store, hd)
     v: jnp.ndarray,
     causal: bool,
-    q_offset: jnp.ndarray | int = 0,  # absolute position of q[0]
+    q_offset: jnp.ndarray | int = 0,  # absolute position of q[0]: () or (B,)
     kv_chunk: int = 1024,
 ) -> jnp.ndarray:
     """Streaming-softmax attention, lax.scan over KV chunks (bounds memory
-    at Sq x kv_chunk scores per step — the 32k cells need this)."""
+    at ~Sq x kv_chunk scores per step — the 32k cells need this).  Widths
+    that don't split evenly fall back to the largest divisor <= the target
+    chunk count; a prime Skv > kv_chunk therefore runs unchunked — callers
+    with such widths (none of the shipped paths: caches, paged spans, and
+    training lengths are all highly composite) should pad K/V instead."""
     b, sq, h, hd = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     g = h // hkv
@@ -216,10 +333,16 @@ def flash_attention(
     # softmax statistics and the accumulator stay f32 (standard flash)
     dot_dt = q.dtype
     qf = (q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * scale).astype(dot_dt)
+    # largest chunk count <= skv/kv_chunk that divides skv evenly — keeps
+    # the score-tensor memory bound for widths (e.g. paged spans sized in
+    # pages, not powers of two) that a fixed chunk count cannot split
     n_chunks = max(skv // kv_chunk, 1)
+    while skv % n_chunks:
+        n_chunks -= 1
     kc = k.reshape(b, n_chunks, skv // n_chunks, hkv, hd).astype(dot_dt)
     vc = v.reshape(b, n_chunks, skv // n_chunks, hkv, hd).astype(dot_dt)
-    q_pos = jnp.arange(sq) + q_offset  # (Sq,)
+    # scalar offset -> (1, Sq) broadcast row; per-request (B,) -> (B, Sq)
+    q_pos = jnp.arange(sq)[None, :] + jnp.reshape(jnp.asarray(q_offset), (-1, 1))
 
     def step(carry, inputs):
         m, l, acc = carry
@@ -230,8 +353,8 @@ def flash_attention(
         )  # (B,hkv,g,Sq,C) f32
         if causal:
             kv_pos = c_idx * ck + jnp.arange(ck)
-            mask = q_pos[:, None] >= kv_pos[None, :]  # (Sq, C)
-            scores = jnp.where(mask[None, None, None], scores, -1e30)
+            mask = q_pos[:, :, None] >= kv_pos[None, None, :]  # (B|1, Sq, C)
+            scores = jnp.where(mask[:, None, None], scores, -1e30)
         m_new = jnp.maximum(m, scores.max(axis=-1))
         p = jnp.exp(scores - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -260,7 +383,7 @@ def _decode_attention(
     q: jnp.ndarray,  # (B, 1, H, hd)
     cache_k: jnp.ndarray,  # (B, S_max, hkv, hd) — model dtype or int8
     cache_v: jnp.ndarray,
-    length: jnp.ndarray,  # () — valid prefix length INCLUDING the new token
+    length: jnp.ndarray,  # () or (B,) — valid prefix INCLUDING the new token
     k_scale=None,  # (B, S_max, hkv, 1) f32 when the cache is int8
     v_scale=None,
 ) -> jnp.ndarray:
@@ -284,8 +407,8 @@ def _decode_attention(
         # per-token scales factor OUT of the contraction (exact)
         ks = jnp.moveaxis(k_scale[..., 0], 1, -1)[:, :, None, None, :]
         scores = scores * ks
-    valid = jnp.arange(s_max)[None] < length  # (1, S)
-    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    valid = jnp.arange(s_max)[None, :] < jnp.reshape(length, (-1, 1))  # (B|1, S)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     if v_scale is not None:
         vs = jnp.moveaxis(v_scale[..., 0], 1, -1)[:, :, None, None, :]
@@ -326,12 +449,23 @@ def attention_apply(
         if cfg.qk_norm:
             k = _qk_head_norm(k, params["k_norm"])
         if positions is None:
-            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            if isinstance(cache, PagedCache):
+                positions = cache.length[:, None] + jnp.arange(s)[None, :]
+            else:
+                positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         if use_rope:
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
         k = _repeat_kv(k, store)
         v = _repeat_kv(v, store)
+        if isinstance(cache, PagedCache):
+            # device-resident paged pool: scatter the new span into its
+            # pages and attend through the page table (per-row lengths)
+            out, npk, npv = paged_attention_update(q, k, v, cache)
+            y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+            return y, dataclasses.replace(
+                cache, k=npk, v=npv, length=cache.length + s
+            )
         quant = cache is not None and cache.k_scale is not None
         if cache is None:
             out = flash_attention(q, k, v, causal=causal)

@@ -276,11 +276,21 @@ def _dense_block(
     length: Optional[jnp.ndarray],
     positions: jnp.ndarray,
     is_moe: bool,
+    paged: Optional[Tuple] = None,  # (page_table, impl) device pool
 ):
-    """Pre-norm attn + FFN. kv = (k_slice, v_slice) cache buffers or None."""
+    """Pre-norm attn + FFN. kv = (k_slice, v_slice) cache buffers or None.
+
+    With `paged` (a ``(page_table, impl)`` pair), kv holds one layer's
+    slice of the device-resident paged pool and `length` is the per-row
+    (B,) length vector; attention scatters and attends through the page
+    table instead of the dense buffers."""
     tp = _tp_of(mesh)
     cache = None
-    if kv is not None:
+    if paged is not None:
+        page_table, impl = paged
+        cache = L.PagedCache(k=kv[0], v=kv[1], page_table=page_table,
+                             length=length, impl=impl)
+    elif kv is not None:
         cache = L.Cache(k=kv[0], v=kv[1], length=length,
                         k_scale=kv[2] if len(kv) > 2 else None,
                         v_scale=kv[3] if len(kv) > 2 else None)
@@ -297,6 +307,8 @@ def _dense_block(
     x = _sp_constrain(x + f, cfg, mesh)
     if new_cache is None:
         out_kv = None
+    elif isinstance(new_cache, L.PagedCache):
+        out_kv = (new_cache.k, new_cache.v)
     elif new_cache.k_scale is not None:
         out_kv = (new_cache.k, new_cache.v, new_cache.k_scale, new_cache.v_scale)
     else:
@@ -333,6 +345,7 @@ def apply_lm(
     cache: Optional[Params] = None,
     vision_embeds: Optional[jnp.ndarray] = None,  # (B, T_img, d) for VLM
     last_logit_only: bool = False,
+    paged_impl: str = "gather",  # paged caches: "gather" | "pallas"
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     b, s = tokens.shape
     fam = cfg.family
@@ -340,9 +353,12 @@ def apply_lm(
     if vision_embeds is not None:
         x = jnp.concatenate([vision_embeds.astype(cfg.jdtype), x], axis=1)
         s = x.shape[1]
-    offset = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
-    positions = offset + jnp.arange(s)[None, :]
-    positions = jnp.broadcast_to(positions, (b, s))
+    # a paged cache carries the shared device pool + per-row page tables /
+    # lengths instead of per-request dense buffers + one scalar length
+    paged = cache is not None and "page_table" in cache
+    if paged and fam not in (Family.DENSE, Family.VLM, Family.MOE):
+        raise NotImplementedError(f"paged KV cache: family {fam}")
+    offset, positions, paged_ctx = L.forward_cache_ctx(cache, b, s, paged_impl)
     x = _sp_constrain(x, cfg, mesh)
     decode = cache is not None and s == 1
 
@@ -389,7 +405,8 @@ def apply_lm(
             else:
                 kvp = (kv["k"], kv["v"])
             xc, out_kv = _dense_block(
-                p, xc, cfg, mesh, kvp, offset, positions, is_moe
+                p, xc, cfg, mesh, kvp, offset, positions, is_moe,
+                paged=paged_ctx,
             )
             if out_kv is None:
                 ys = None
@@ -496,7 +513,7 @@ def apply_lm(
         pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
         logits = jnp.where(pad_mask, logits, -1e9)
     if new_cache is not None:
-        new_cache["length"] = offset + s
+        new_cache["lengths" if paged else "length"] = offset + s
     return logits, new_cache
 
 

@@ -1,11 +1,16 @@
 """Serving runtime: single-request SD/APSD drivers plus the continuous-
-batching multi-request engine (paged KV pools + WDOS-modeled scheduler).
+batching multi-request engine (device-resident paged KV pools +
+WDOS-modeled scheduler).
 
 Layers, bottom-up:
   paged_cache.PagedKVPool  — block-granular KV pages, free list, reservations
+                             (host allocator; KV bytes in device arrays via
+                             device_pool_init)
   request.Request          — QUEUED/PREFILL/DECODE/FINISHED + APSD mode state
   batcher.ContinuousBatcher— page-budget admission + WDOS round model
-  engine.serve_batch       — vmapped draft/verify steps over active requests
+  engine.serve_batch       — batched draft/verify steps scattering/attending
+                             in place through per-row page tables
+  host_gather.serve_batch_host — legacy gather/scatter loop (bench baseline)
 """
 from repro.serving.batcher import BatchConfig, ContinuousBatcher
 from repro.serving.engine import (
@@ -15,7 +20,7 @@ from repro.serving.engine import (
     serve_batch,
     serve_sd,
 )
-from repro.serving.paged_cache import PagedKVPool, PagedSequence
+from repro.serving.paged_cache import PagedKVPool, PagedSequence, device_pool_init
 from repro.serving.request import DraftController, Request, RequestState
 
 __all__ = [
@@ -28,6 +33,7 @@ __all__ = [
     "serve_sd",
     "PagedKVPool",
     "PagedSequence",
+    "device_pool_init",
     "DraftController",
     "Request",
     "RequestState",

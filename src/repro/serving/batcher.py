@@ -45,6 +45,9 @@ class BatchConfig:
     temperature: float = 0.0  # only greedy (0.0) is supported today
     num_pages: Optional[int] = None  # page budget per pool (None: fit max_batch)
     model_wdos: bool = True  # build the per-round WDOS DAG (stats)
+    # "paged": device-resident pools, zero host K/V copies (the real path);
+    # "host": legacy gather/scatter loop (serving/host_gather.py baseline)
+    kv_path: str = "paged"
 
     @property
     def max_dl(self) -> int:

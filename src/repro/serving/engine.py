@@ -12,15 +12,22 @@ verify dispatches overlap (the WDOS idea); on CPU they serialize but are
 bit-identical.
 
 `serve_batch` is the multi-request runtime on top of the same models: KV
-lives in block-granular paged pools (serving/paged_cache.py), a continuous
-batcher (serving/batcher.py) admits/evicts requests under a page budget, and
-each draft/verify step runs as ONE vmapped model call over every active
-request.  Greedy outputs are bit-identical per request to the single-request
-``serve_sd`` path — batching and paging change scheduling, never sampling.
+lives in DEVICE-RESIDENT block-granular paged pools (serving/paged_cache.py
+allocator + JAX pool arrays), a continuous batcher (serving/batcher.py)
+admits/evicts requests under a page budget, and each draft/verify step runs
+as ONE batched model call over every active request that scatters new
+tokens straight into pool pages and attends through per-row page tables —
+no per-round host gather/scatter of K/V views.  Accept/rewind is a
+per-row length update with zero KV copies.  Greedy outputs are
+bit-identical per request to the single-request ``serve_sd`` path —
+batching and paging change scheduling and residency, never sampling.
+(The pre-refactor host-gather loop survives in serving/host_gather.py as
+the benchmark baseline, selected by ``BatchConfig.kv_path == "host"``.)
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
@@ -35,7 +42,7 @@ from repro.models import lm
 from repro.models.common import ModelConfig
 from repro.serving import quantized_lm as qlm
 from repro.serving.batcher import BatchConfig, ContinuousBatcher
-from repro.serving.paged_cache import PagedKVPool, pages_for
+from repro.serving.paged_cache import PagedKVPool, device_pool_init, pages_for
 from repro.serving.request import Request, RequestState
 
 __all__ = [
@@ -56,19 +63,29 @@ class ServingModel:
     mesh: Any = None
     s_max: int = 512
     use_pallas: bool = False
+    # paged decode attention path: "gather" replays the exact dense math
+    # over a device-side page gather (bit-identical to serve_sd); "pallas"
+    # attends in place through the page table with kernels/paged_attn.py
+    # (interpret mode on CPU).
+    paged_attn_impl: str = "gather"
 
     def _apply(self, params, tokens, cache):
+        paged_kw = {}
+        if cache is not None and "page_table" in cache:
+            paged_kw = dict(paged_impl=self.paged_attn_impl)
         if self.mode == "w4a8":
             return qlm.apply_quantized_lm(
                 params, self.cfg, self.mesh, tokens, cache=cache,
-                use_pallas=self.use_pallas,
+                use_pallas=self.use_pallas, **paged_kw,
             )
         if self.mode == "bvq":
             return qlm.apply_bvq_lm(
                 params, self.cfg, self.mesh, tokens, cache=cache,
-                use_pallas=self.use_pallas,
+                use_pallas=self.use_pallas, **paged_kw,
             )
-        return lm.apply_lm(params, self.cfg, self.mesh, tokens, cache=cache)
+        return lm.apply_lm(
+            params, self.cfg, self.mesh, tokens, cache=cache, **paged_kw
+        )
 
 
 def make_interface(model: ServingModel) -> LMInterface:
@@ -148,7 +165,7 @@ def serve_apsd(
 
 
 # ---------------------------------------------------------------------------
-# Continuous-batching runtime (paged KV + vmapped draft/verify steps)
+# Continuous-batching runtime (device-resident paged KV, zero host copies)
 # ---------------------------------------------------------------------------
 
 
@@ -156,46 +173,30 @@ def _np_dtype(cfg: ModelConfig):
     return np.asarray(jnp.zeros((), cfg.jdtype)).dtype
 
 
-def _make_batched_step(model: ServingModel):
-    """jit(vmap) of one cache-extending forward: every active request is a
-    batch row with its OWN cache length (positions, masking, and the KV
-    write offset are per-row).  Returns full updated dense K/V views so the
-    engine scatters only the written span back into the page pool."""
-
-    @jax.jit
-    def step(params, tokens, k, v, lengths):
-        # tokens (B, L) int32; k/v (B, n_layers, 1, S_pad, kvh, hd); lengths (B,)
-        def one(tok, kk, vv, ln):
-            cache = {"length": ln, "attn": {"k": kk, "v": vv}}
-            logits, nc = model._apply(params, tok[None, :], cache)
-            return logits[0], nc["attn"]["k"], nc["attn"]["v"]
-
-        return jax.vmap(one)(tokens, k, v, lengths)
-
-    return step
+def _wdos_costs(mcfg: ModelConfig) -> Tuple[float, float]:
+    load = 12.0 * mcfg.d_model * mcfg.d_model * 1e-6  # ~per-layer weight bytes
+    return load, 0.25 * load
 
 
-class _PoolGather:
-    """Reusable pinned host buffers for pool -> dense batched cache views."""
-
-    def __init__(self, max_batch: int, pool: PagedKVPool, s_pad: int, dtype):
-        shape = (max_batch, pool.n_layers, 1, s_pad, pool.kv_heads, pool.head_dim)
-        self.k = np.zeros(shape, dtype)
-        self.v = np.zeros(shape, dtype)
-        self.lengths = np.zeros((max_batch,), np.int32)
-
-    def load(self, rows):
-        """rows: iterable of (slot index, PagedSequence)."""
-        self.lengths[:] = 0
-        for i, seq in rows:
-            seq.gather_into(self.k[i, :, 0], self.v[i, :, 0])
-            self.lengths[i] = seq.length
-        return jnp.asarray(self.k), jnp.asarray(self.v), jnp.asarray(self.lengths)
+def _empty_summary(cfg: BatchConfig) -> dict:
+    return {
+        "requests": 0, "rounds": 0, "steps": 0, "emitted": 0,
+        "acceptance_rate": 0.0, "target_pool": None, "draft_pool": None,
+        "wdos_modeled_speedup": 1.0,
+        "wdos_utilization": {},
+        "kv_path": cfg.kv_path,
+        "kv_copy_s": 0.0,
+        "table_upload_s": 0.0,
+    }
 
 
-def _pool_for(model: ServingModel, cfg: BatchConfig, peaks: Sequence[int]):
+def _pool_for(
+    model: ServingModel, cfg: BatchConfig, peaks: Sequence[int],
+    alloc_storage: bool = True,
+):
     """Page pool sized to hold `max_batch` worst-case requests (or the
-    explicit cfg.num_pages budget)."""
+    explicit cfg.num_pages budget).  alloc_storage=False builds the pure
+    allocator for the device-resident path (KV bytes live in JAX arrays)."""
     mcfg = model.cfg
     if mcfg.kv_quant:
         raise NotImplementedError("paged pools hold dense-dtype KV (kv_quant=False)")
@@ -213,6 +214,7 @@ def _pool_for(model: ServingModel, cfg: BatchConfig, peaks: Sequence[int]):
         num_pages=num_pages,
         page_size=cfg.page_size,
         dtype=_np_dtype(mcfg),
+        alloc_storage=alloc_storage,
     )
 
 
@@ -226,6 +228,90 @@ def _greedy_accept_host(drafts: np.ndarray, p_logits: np.ndarray, dl: int):
     return [int(t) for t in drafts[:n_acc]] + [int(tlm_tok[n_acc])], n_acc
 
 
+def _make_paged_step(model: ServingModel):
+    """jit of one batched paged forward: every active request is a batch row
+    with its OWN page-table row and length (positions, causal masking, and
+    the pool write slots are per-row).  The K/V pools are carried as device
+    values — the step scatters new tokens in place and returns the updated
+    pools, so NO K/V bytes ever cross the host boundary.  The pool buffers
+    are DONATED: the caller always rebinds them to the step's outputs, so
+    XLA may alias the scatter in place instead of copying the pool."""
+
+    @partial(jax.jit, donate_argnums=(2, 3))
+    def step(params, tokens, pool_k, pool_v, page_table, lengths):
+        # tokens (B, W) int32; pools (L, P+1, ps, kvh, hd); table (B, mp)
+        cache = {
+            "lengths": lengths,
+            "page_table": page_table,
+            "attn": {"k": pool_k, "v": pool_v},
+        }
+        logits, nc = model._apply(params, tokens, cache)
+        return logits, nc["attn"]["k"], nc["attn"]["v"]
+
+    return step
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_prefill(pool_k, pool_v, k_dense, v_dense, pages, n):
+    """Scatter a freshly prefilled request's first `n` cache rows straight
+    into its pool pages — device to device, no host round-trip.
+    k_dense/v_dense: (L, s_max, kvh, hd); pages: (mp,) physical page ids,
+    unowned slots holding the scratch page.  `n` is traced (one compile per
+    model, not per prompt length): the fixed-width scatter covers the whole
+    table span and routes slots >= n to the scratch page."""
+    nl, p1, ps, kvh, hd = pool_k.shape
+    s_max = k_dense.shape[1]
+    cap = pages.shape[0] * ps  # table span; may overhang s_max by < ps
+    pos = jnp.arange(cap)
+    scratch = (p1 - 1) * ps + pos % ps  # harmless dup writes per layer
+    flat = jnp.where(pos < n, pages[pos // ps] * ps + pos % ps, scratch)
+    src = k_dense[:, jnp.minimum(pos, s_max - 1)]
+    pk = pool_k.reshape(nl, p1 * ps, kvh, hd).at[:, flat].set(src)
+    srcv = v_dense[:, jnp.minimum(pos, s_max - 1)]
+    pv = pool_v.reshape(nl, p1 * ps, kvh, hd).at[:, flat].set(srcv)
+    return pk.reshape(pool_k.shape), pv.reshape(pool_v.shape)
+
+
+class _TableSet:
+    """Host mirror of one pool's per-slot page tables / lengths.
+
+    Page tables only change at admission/retirement (pages are backed
+    eagerly, so a request's table is stable for its whole lifetime);
+    lengths change every round.  Both are O(B) int32 uploads — the point of
+    the device-resident refactor is that these tiny tables are ALL that
+    crosses the host boundary per round.  `cap_tokens` (the batch's
+    worst-case peak cache length, NOT s_max) sizes the table width, which
+    in turn bounds the attention span the paged forward touches."""
+
+    def __init__(self, max_batch: int, pool: PagedKVPool, cap_tokens: int):
+        self.max_pages = pages_for(cap_tokens, pool.page_size)
+        self.scratch = pool.num_pages  # device arrays have one extra page
+        self.table = np.full((max_batch, self.max_pages), self.scratch, np.int32)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self._table_dev = None
+
+    def set_row(self, slot: int, seq) -> None:
+        row = self.table[slot]
+        row[:] = self.scratch
+        row[: len(seq.pages)] = seq.pages
+        self._table_dev = None
+
+    def clear_row(self, slot: int) -> None:
+        self.table[slot] = self.scratch
+        self._table_dev = None
+
+    def load(self, rows):
+        """rows: iterable of (slot, PagedSequence) -> (table, lengths) dev.
+        Blocks until the uploads land so the caller's timing is comparable
+        to the host baseline's blocking kv_copy_s."""
+        self.lengths[:] = 0
+        for slot, seq in rows:
+            self.lengths[slot] = seq.length
+        if self._table_dev is None:
+            self._table_dev = jax.block_until_ready(jnp.asarray(self.table))
+        return self._table_dev, jax.block_until_ready(jnp.asarray(self.lengths))
+
+
 def serve_batch(
     key: jax.Array,
     target: ServingModel,
@@ -234,17 +320,30 @@ def serve_batch(
     cfg: BatchConfig,
     sinks: Optional[Sequence[Optional[Callable[[int], None]]]] = None,
 ) -> Tuple[List[jnp.ndarray], dict]:
-    """Continuously-batched greedy speculative decoding over paged KV pools.
+    """Continuously-batched greedy speculative decoding over device-resident
+    paged KV pools.
 
     Admits up to ``cfg.max_batch`` concurrent requests (more queue behind the
-    page budget), runs each SD round as vmapped draft/verify steps over every
-    active request, and streams tokens to per-request sinks.  Returns the
-    per-request outputs (original submission order) and the batch summary
-    (pool stats + the WDOS cross-request overlap model).
+    page budget), runs each SD round as batched draft/verify steps over every
+    active request — prefill scatters straight into pool pages, decode
+    scatters/attends in place through per-row page tables, and accept/rewind
+    is a per-row length update with no KV copy.  Streams tokens to
+    per-request sinks.  Returns the per-request outputs (original submission
+    order) and the batch summary (pool stats + the WDOS cross-request
+    overlap model).
+
+    ``cfg.kv_path == "host"`` selects the legacy host-gather loop
+    (serving/host_gather.py) kept as the benchmark baseline.
 
     Greedy only: per-request outputs are bit-identical to ``serve_sd`` with
     the same models (asserted in tests/test_serving_batch.py).
     """
+    if cfg.kv_path == "host":
+        from repro.serving.host_gather import serve_batch_host
+
+        return serve_batch_host(key, target, draft, prompts, cfg, sinks=sinks)
+    if cfg.kv_path != "paged":
+        raise ValueError(f"kv_path must be 'paged' or 'host', got {cfg.kv_path!r}")
     del key  # greedy path is deterministic; kept for API symmetry with serve_sd
     if cfg.temperature != 0.0:
         raise NotImplementedError("serve_batch currently supports temperature=0.0")
@@ -259,12 +358,7 @@ def serve_batch(
         for i, p in enumerate(prompts)
     ]
     if not requests:
-        return [], {
-            "requests": 0, "rounds": 0, "steps": 0, "emitted": 0,
-            "acceptance_rate": 0.0, "target_pool": None, "draft_pool": None,
-            "wdos_modeled_speedup": 1.0,
-            "wdos_utilization": {},
-        }
+        return [], _empty_summary(cfg)
     peaks = [r.peak_cache_len(cfg.max_dl) for r in requests]
     for model in (target, draft):
         if max(peaks) > model.s_max:
@@ -273,38 +367,53 @@ def serve_batch(
                 f"of {model.cfg.name}"
             )
 
-    t_pool = _pool_for(target, cfg, peaks)
-    d_pool = _pool_for(draft, cfg, peaks)
-
-    def _costs(mcfg: ModelConfig) -> Tuple[float, float]:
-        load = 12.0 * mcfg.d_model * mcfg.d_model * 1e-6  # ~per-layer weight bytes
-        return load, 0.25 * load
+    # host pools are pure allocators; the KV bytes live in device arrays
+    t_pool = _pool_for(target, cfg, peaks, alloc_storage=False)
+    d_pool = _pool_for(draft, cfg, peaks, alloc_storage=False)
+    t_pk, t_pv = device_pool_init(t_pool)
+    d_pk, d_pv = device_pool_init(d_pool)
 
     batcher = ContinuousBatcher(
         cfg, t_pool, d_pool,
         t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
-        t_costs=_costs(target.cfg), d_costs=_costs(draft.cfg),
+        t_costs=_wdos_costs(target.cfg), d_costs=_wdos_costs(draft.cfg),
     )
     for r in requests:
         batcher.submit(r)
 
     t_iface, d_iface = make_interface(target), make_interface(draft)
-    t_step, d_step = _make_batched_step(target), _make_batched_step(draft)
-    t_gather = _PoolGather(cfg.max_batch, t_pool, target.s_max, _np_dtype(target.cfg))
-    d_gather = _PoolGather(cfg.max_batch, d_pool, draft.s_max, _np_dtype(draft.cfg))
+    t_step, d_step = _make_paged_step(target), _make_paged_step(draft)
+    t_tables = _TableSet(cfg.max_batch, t_pool, max(peaks))
+    d_tables = _TableSet(cfg.max_batch, d_pool, max(peaks))
+    table_upload_s = 0.0  # tiny int32 table/length uploads (all that remains)
 
-    def _prefill_into(req: Request, iface: LMInterface, params, seq):
-        # same jitted program as the single-request path => bitwise identical
+    def _prefill_into(req: Request, iface: LMInterface, params, seq,
+                      pool_k, pool_v, tables, slot):
+        # same jitted program as the single-request path => bitwise
+        # identical prefix KV; the cache rows scatter device->device into
+        # the request's (eagerly backed, lifetime-stable) pages
         plen = req.prompt.shape[0]
         _, cache = iface.prefill(params, jnp.asarray(req.prompt[None, :-1]))
-        k = np.asarray(cache["attn"]["k"])[:, 0]  # (n_layers, s_max, kvh, hd)
-        v = np.asarray(cache["attn"]["v"])[:, 0]
-        seq.append(k[:, : plen - 1], v[:, : plen - 1])
+        seq.ensure_backed(seq.reservation * seq.pool.page_size)
+        tables.set_row(slot, seq)
+        pool_k, pool_v = _scatter_prefill(
+            pool_k, pool_v,
+            cache["attn"]["k"][:, 0], cache["attn"]["v"][:, 0],
+            jnp.asarray(tables.table[slot]), plen - 1,
+        )
+        seq.advance(plen - 1)
+        return pool_k, pool_v
 
     while not batcher.all_done():
-        for _, req in batcher.admit():
-            _prefill_into(req, t_iface, target.params, req.t_seq)
-            _prefill_into(req, d_iface, draft.params, req.d_seq)
+        for slot, req in batcher.admit():
+            t_pk, t_pv = _prefill_into(
+                req, t_iface, target.params, req.t_seq, t_pk, t_pv,
+                t_tables, slot,
+            )
+            d_pk, d_pv = _prefill_into(
+                req, d_iface, draft.params, req.d_seq, d_pk, d_pv,
+                d_tables, slot,
+            )
             req.state = RequestState.DECODE
         active = batcher.active()
         if not active:
@@ -314,17 +423,21 @@ def serve_batch(
         dls = {slot: req.controller.draft_len() for slot, req in active}
         round_dl = max(dls.values())
 
+        t0 = time.perf_counter()
+        d_table, d_len0 = d_tables.load((s, r.d_seq) for s, r in active)
+        t_table, t_len0 = t_tables.load((s, r.t_seq) for s, r in active)
+        table_upload_s += time.perf_counter() - t0
+
         # ---- draft phase: round_dl sampled steps + 1 straggler step, all
-        # vmapped; the dense draft cache stays on device across the loop.
-        dk, dv, d_len0 = d_gather.load((s, r.d_seq) for s, r in active)
+        # batched; the draft pool stays on device across the loop.
         cur = np.zeros((cfg.max_batch,), np.int32)
         for slot, req in active:
             cur[slot] = req.last_tok
         cur_dev = jnp.asarray(cur)
         draft_cols = []
         for j in range(round_dl + 1):
-            logits, dk, dv = d_step(
-                draft.params, cur_dev[:, None], dk, dv, d_len0 + j
+            logits, d_pk, d_pv = d_step(
+                draft.params, cur_dev[:, None], d_pk, d_pv, d_table, d_len0 + j
             )
             if j < round_dl:
                 cur_dev = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
@@ -333,19 +446,18 @@ def serve_batch(
             # fully-accepted rows; over-written rows rewind it away below.
         drafts = np.asarray(jnp.stack(draft_cols, axis=1))  # (B, round_dl)
 
-        # ---- verify phase: one vmapped pass scoring [last_tok, drafts...]
-        tk, tv, t_len0 = t_gather.load((s, r.t_seq) for s, r in active)
+        # ---- verify phase: one batched pass scoring [last_tok, drafts...]
         window = np.zeros((cfg.max_batch, round_dl + 1), np.int32)
         window[:, 0] = cur
         window[:, 1:] = drafts
-        v_logits, tk, tv = t_step(
-            target.params, jnp.asarray(window), tk, tv, t_len0
+        v_logits, t_pk, t_pv = t_step(
+            target.params, jnp.asarray(window), t_pk, t_pv, t_table, t_len0
         )
         p_logits = np.asarray(v_logits)  # (B, round_dl+1, V)
-        dk_host, dv_host = np.asarray(dk), np.asarray(dv)
-        tk_host, tv_host = np.asarray(tk), np.asarray(tv)
 
-        # ---- per-request accept / commit / page maintenance
+        # ---- per-request accept / commit: a pure length update per row —
+        # the KV was written in place by the steps above, and rewind just
+        # drops the tail (stale pool slots are masked, then overwritten)
         work = []
         for slot, req in active:
             dl = dls[slot]
@@ -356,28 +468,24 @@ def serve_batch(
             req.accepted += n_acc
             req.controller.observe(n_acc, dl)
             work.append((req, dl))
-            # target wrote round_dl+1 positions at t_len0; keep n_acc + 1
-            t0 = int(t_len0[slot])
-            req.t_seq.append(
-                tk_host[slot, :, 0, t0 : t0 + round_dl + 1],
-                tv_host[slot, :, 0, t0 : t0 + round_dl + 1],
-            )
-            req.t_seq.rewind(round_dl - n_acc)
-            # draft wrote round_dl+1 positions at d_len0 (incl. straggler);
-            # the invariant cache == committed[:-1] keeps n_acc + 1 of them
-            d0 = int(d_len0[slot])
-            req.d_seq.append(
-                dk_host[slot, :, 0, d0 : d0 + round_dl + 1],
-                dv_host[slot, :, 0, d0 : d0 + round_dl + 1],
-            )
-            req.d_seq.rewind(round_dl - n_acc)
+            # both models wrote round_dl+1 positions; keep n_acc + 1
+            # (draft invariant: cache == committed[:-1], incl. straggler)
+            for seq in (req.t_seq, req.d_seq):
+                seq.advance(round_dl + 1)
+                seq.rewind(round_dl - n_acc, release_pages=False)
         batcher.model_round(work)
         for slot, req in active:
             if req.done:
+                t_tables.clear_row(slot)
+                d_tables.clear_row(slot)
                 batcher.retire(slot)
         batcher.step_count += 1
 
     outputs = [
         jnp.asarray(r.out[: r.max_new_tokens], jnp.int32) for r in requests
     ]
-    return outputs, batcher.summary()
+    summary = batcher.summary()
+    summary["kv_path"] = "paged"
+    summary["kv_copy_s"] = 0.0  # no host K/V copies exist on this path
+    summary["table_upload_s"] = table_upload_s
+    return outputs, summary

@@ -1,0 +1,235 @@
+"""LEGACY host-gather serving loop — the benchmark baseline the paged
+device-resident path replaced.
+
+This is the pre-refactor ``serve_batch`` decode loop: the paged pools live
+in host numpy, and every SD round each request's full dense KV view is
+gathered pool -> host -> device before the vmapped step, then the written
+span is copied back host-side (``np.asarray`` of the full K/V buffers).
+That per-round O(S_max x B) host traffic is exactly the data-movement tax
+the paper's ReRAM-on-logic stacking argues against; it is kept ONLY so
+``benchmarks/bench_serving.py --kv-path host`` can measure the win of the
+device-resident path (``serving/engine.py``), which keeps KV on device and
+scatters/attends in place through the page table.
+
+Outputs are bit-identical to both ``serve_sd`` and the paged path (same
+jitted per-row programs, different data residency).
+
+This module is a deliberately FROZEN copy of the pre-refactor loop: it
+shares only the engine's leaf helpers (pool sizing, accept rule, summary
+shape) and keeps its own round loop verbatim, so future changes to the
+live paged engine cannot silently alter the baseline being measured
+against.  Parity with the paged path is asserted in
+tests/test_serving_paged.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.batcher import BatchConfig, ContinuousBatcher
+from repro.serving.paged_cache import PagedKVPool
+from repro.serving.request import Request, RequestState
+
+__all__ = ["serve_batch_host"]
+
+
+def _make_batched_step(model):
+    """jit(vmap) of one cache-extending forward: every active request is a
+    batch row with its OWN cache length (positions, masking, and the KV
+    write offset are per-row).  Returns full updated dense K/V views so the
+    engine scatters only the written span back into the page pool."""
+
+    @jax.jit
+    def step(params, tokens, k, v, lengths):
+        # tokens (B, L) int32; k/v (B, n_layers, 1, S_pad, kvh, hd); lengths (B,)
+        def one(tok, kk, vv, ln):
+            cache = {"length": ln, "attn": {"k": kk, "v": vv}}
+            logits, nc = model._apply(params, tok[None, :], cache)
+            return logits[0], nc["attn"]["k"], nc["attn"]["v"]
+
+        return jax.vmap(one)(tokens, k, v, lengths)
+
+    return step
+
+
+class _PoolGather:
+    """Reusable pinned host buffers for pool -> dense batched cache views."""
+
+    def __init__(self, max_batch: int, pool: PagedKVPool, s_pad: int, dtype):
+        shape = (max_batch, pool.n_layers, 1, s_pad, pool.kv_heads, pool.head_dim)
+        self.k = np.zeros(shape, dtype)
+        self.v = np.zeros(shape, dtype)
+        self.lengths = np.zeros((max_batch,), np.int32)
+
+    def load(self, rows):
+        """rows: iterable of (slot index, PagedSequence)."""
+        self.lengths[:] = 0
+        for i, seq in rows:
+            seq.gather_into(self.k[i, :, 0], self.v[i, :, 0])
+            self.lengths[i] = seq.length
+        return jnp.asarray(self.k), jnp.asarray(self.v), jnp.asarray(self.lengths)
+
+
+def serve_batch_host(
+    key: jax.Array,
+    target,
+    draft,
+    prompts: Sequence[Any],
+    cfg: BatchConfig,
+    sinks: Optional[Sequence[Optional[Callable[[int], None]]]] = None,
+) -> Tuple[List[jnp.ndarray], dict]:
+    """The legacy host-gather loop (see module docstring).  Called through
+    ``engine.serve_batch(..., cfg)`` with ``cfg.kv_path == "host"``."""
+    from repro.core.speculative import LMInterface
+    from repro.serving import engine as E
+
+    del key
+    if cfg.temperature != 0.0:
+        raise NotImplementedError("serve_batch currently supports temperature=0.0")
+
+    requests = [
+        Request(
+            rid=i,
+            prompt=np.asarray(p).reshape(-1),
+            max_new_tokens=cfg.max_tokens,
+            sink=sinks[i] if sinks else None,
+        )
+        for i, p in enumerate(prompts)
+    ]
+    if not requests:
+        return [], E._empty_summary(cfg)
+    peaks = [r.peak_cache_len(cfg.max_dl) for r in requests]
+    for model in (target, draft):
+        if max(peaks) > model.s_max:
+            raise ValueError(
+                f"peak cache length {max(peaks)} exceeds s_max={model.s_max} "
+                f"of {model.cfg.name}"
+            )
+
+    t_pool = E._pool_for(target, cfg, peaks)
+    d_pool = E._pool_for(draft, cfg, peaks)
+    batcher = ContinuousBatcher(
+        cfg, t_pool, d_pool,
+        t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
+        t_costs=E._wdos_costs(target.cfg), d_costs=E._wdos_costs(draft.cfg),
+    )
+    for r in requests:
+        batcher.submit(r)
+
+    t_iface, d_iface = E.make_interface(target), E.make_interface(draft)
+    t_step, d_step = _make_batched_step(target), _make_batched_step(draft)
+    t_gather = _PoolGather(
+        cfg.max_batch, t_pool, target.s_max, E._np_dtype(target.cfg)
+    )
+    d_gather = _PoolGather(
+        cfg.max_batch, d_pool, draft.s_max, E._np_dtype(draft.cfg)
+    )
+    kv_copy_s = 0.0  # cumulative host<->device K/V copy time (the tax)
+
+    def _prefill_into(req: Request, iface: LMInterface, params, seq):
+        # same jitted program as the single-request path => bitwise identical
+        nonlocal kv_copy_s
+        plen = req.prompt.shape[0]
+        _, cache = iface.prefill(params, jnp.asarray(req.prompt[None, :-1]))
+        t0 = time.perf_counter()
+        k = np.asarray(cache["attn"]["k"])[:, 0]  # (n_layers, s_max, kvh, hd)
+        v = np.asarray(cache["attn"]["v"])[:, 0]
+        seq.append(k[:, : plen - 1], v[:, : plen - 1])
+        kv_copy_s += time.perf_counter() - t0
+
+    while not batcher.all_done():
+        for _, req in batcher.admit():
+            _prefill_into(req, t_iface, target.params, req.t_seq)
+            _prefill_into(req, d_iface, draft.params, req.d_seq)
+            req.state = RequestState.DECODE
+        active = batcher.active()
+        if not active:
+            batcher.step_count += 1
+            continue
+
+        dls = {slot: req.controller.draft_len() for slot, req in active}
+        round_dl = max(dls.values())
+
+        # ---- draft phase: round_dl sampled steps + 1 straggler step, all
+        # vmapped; the dense draft cache stays on device across the loop.
+        t0 = time.perf_counter()
+        dk, dv, d_len0 = d_gather.load((s, r.d_seq) for s, r in active)
+        kv_copy_s += time.perf_counter() - t0
+        cur = np.zeros((cfg.max_batch,), np.int32)
+        for slot, req in active:
+            cur[slot] = req.last_tok
+        cur_dev = jnp.asarray(cur)
+        draft_cols = []
+        for j in range(round_dl + 1):
+            logits, dk, dv = d_step(
+                draft.params, cur_dev[:, None], dk, dv, d_len0 + j
+            )
+            if j < round_dl:
+                cur_dev = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                draft_cols.append(cur_dev)
+            # else: straggler — feeds d_{round_dl-1}, completing the cache for
+            # fully-accepted rows; over-written rows rewind it away below.
+        drafts = np.asarray(jnp.stack(draft_cols, axis=1))  # (B, round_dl)
+
+        # ---- verify phase: one vmapped pass scoring [last_tok, drafts...]
+        t0 = time.perf_counter()
+        tk, tv, t_len0 = t_gather.load((s, r.t_seq) for s, r in active)
+        kv_copy_s += time.perf_counter() - t0
+        window = np.zeros((cfg.max_batch, round_dl + 1), np.int32)
+        window[:, 0] = cur
+        window[:, 1:] = drafts
+        v_logits, tk, tv = t_step(
+            target.params, jnp.asarray(window), tk, tv, t_len0
+        )
+        p_logits = np.asarray(v_logits)  # (B, round_dl+1, V)
+        t0 = time.perf_counter()
+        dk_host, dv_host = np.asarray(dk), np.asarray(dv)
+        tk_host, tv_host = np.asarray(tk), np.asarray(tv)
+        kv_copy_s += time.perf_counter() - t0
+
+        # ---- per-request accept / commit / page maintenance
+        work = []
+        for slot, req in active:
+            dl = dls[slot]
+            new, n_acc = E._greedy_accept_host(drafts[slot], p_logits[slot], dl)
+            req.commit(new)
+            req.rounds += 1
+            req.drafted += dl
+            req.accepted += n_acc
+            req.controller.observe(n_acc, dl)
+            work.append((req, dl))
+            # target wrote round_dl+1 positions at t_len0; keep n_acc + 1
+            t0 = time.perf_counter()
+            tpos = int(t_len0[slot])
+            req.t_seq.append(
+                tk_host[slot, :, 0, tpos : tpos + round_dl + 1],
+                tv_host[slot, :, 0, tpos : tpos + round_dl + 1],
+            )
+            req.t_seq.rewind(round_dl - n_acc)
+            # draft wrote round_dl+1 positions at d_len0 (incl. straggler);
+            # the invariant cache == committed[:-1] keeps n_acc + 1 of them
+            dpos = int(d_len0[slot])
+            req.d_seq.append(
+                dk_host[slot, :, 0, dpos : dpos + round_dl + 1],
+                dv_host[slot, :, 0, dpos : dpos + round_dl + 1],
+            )
+            req.d_seq.rewind(round_dl - n_acc)
+            kv_copy_s += time.perf_counter() - t0
+        batcher.model_round(work)
+        for slot, req in active:
+            if req.done:
+                batcher.retire(slot)
+        batcher.step_count += 1
+
+    outputs = [
+        jnp.asarray(r.out[: r.max_new_tokens], jnp.int32) for r in requests
+    ]
+    summary = batcher.summary()
+    summary["kv_path"] = "host"
+    summary["kv_copy_s"] = kv_copy_s
+    summary["table_upload_s"] = 0.0  # same schema as the paged path
+    return outputs, summary

@@ -14,11 +14,22 @@ single-request serving path into a multi-tenant runtime:
 * release returns pages AND the unused tail of the reservation, so finished
   requests immediately make room for queued ones (continuous batching).
 
-Storage is host-side numpy (layer-stacked, `(n_layers, num_pages, page_size,
-kv_heads, head_dim)`); the engine gathers a request's pages into a dense
-per-request view for the jitted model step and scatters the newly written
-token span back.  The Pallas `kernels/paged_attn.py` kernel instead attends
-*in place* through the page table (no gather) — same layout.
+Two storage modes:
+
+* ``alloc_storage=True`` (legacy / benchmark baseline): host-side numpy
+  arrays (layer-stacked, ``(n_layers, num_pages, page_size, kv_heads,
+  head_dim)``); a consumer gathers a request's pages into a dense view and
+  scatters written spans back (``PagedSequence.append``/``gather_into``).
+* ``alloc_storage=False`` (device-resident serving): this object is pure
+  allocator/bookkeeper — KV bytes live in JAX device arrays built by
+  ``device_pool_init`` and are written in place by the model forward
+  (``models/layers.paged_attention_update``), so no per-round host copies
+  exist.  Sequences then use ``ensure_backed``/``advance``/``rewind(...,
+  release_pages=False)`` so their page tables stay stable while the data
+  stays on device.
+
+The Pallas ``kernels/paged_attn.py`` kernel attends *in place* through the
+page table (no gather) — same page layout either way.
 """
 from __future__ import annotations
 
@@ -27,7 +38,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["PagedKVPool", "PagedSequence", "PoolStats"]
+__all__ = [
+    "PagedKVPool",
+    "PagedSequence",
+    "PoolStats",
+    "device_pool_init",
+]
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -60,6 +76,7 @@ class PagedKVPool:
         num_pages: int,
         page_size: int,
         dtype=np.float32,
+        alloc_storage: bool = True,
     ):
         if num_pages <= 0 or page_size <= 0:
             raise ValueError("num_pages and page_size must be positive")
@@ -68,9 +85,14 @@ class PagedKVPool:
         self.head_dim = head_dim
         self.num_pages = num_pages
         self.page_size = page_size
-        shape = (n_layers, num_pages, page_size, kv_heads, head_dim)
-        self.k = np.zeros(shape, dtype)
-        self.v = np.zeros(shape, dtype)
+        self.dtype = dtype
+        if alloc_storage:
+            shape = (n_layers, num_pages, page_size, kv_heads, head_dim)
+            self.k = np.zeros(shape, dtype)
+            self.v = np.zeros(shape, dtype)
+        else:  # pure allocator: KV bytes live in a device pool
+            self.k = None
+            self.v = None
         # LIFO free list: recently released pages are reused first (warm)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._allocated: set = set()
@@ -175,6 +197,11 @@ class PagedSequence:
 
         k_span/v_span: (n_layers, L, kv_heads, head_dim)."""
         assert not self.released, "append on a released sequence"
+        if self.pool.k is None:
+            raise RuntimeError(
+                "host append on a storage-less pool (device-resident mode); "
+                "use advance() — data is written by the model forward"
+            )
         l = k_span.shape[1]
         if l == 0:
             return
@@ -184,11 +211,35 @@ class PagedSequence:
         self.pool.v[:, pg, slot] = v_span
         self.length += l
 
+    # -- device-resident bookkeeping (no host data path) --------------------
+
+    def ensure_backed(self, n_tokens: int) -> None:
+        """Eagerly back pages for `n_tokens` capacity (device-resident mode:
+        backing everything at admission keeps the page table stable for the
+        request's whole lifetime, so it uploads once, not per round).
+        Admission already reserved the worst case, so this cannot fail for
+        n_tokens within the reservation."""
+        assert not self.released, "ensure_backed on a released sequence"
+        self._ensure_capacity(n_tokens)
+
+    def advance(self, n: int) -> None:
+        """Advance length by n WITHOUT touching data — the device pool was
+        already written in place by the model forward's paged scatter."""
+        assert not self.released, "advance on a released sequence"
+        if n < 0:
+            raise ValueError(f"advance expects n >= 0, got {n}")
+        self._ensure_capacity(self.length + n)
+        self.length += n
+
     def gather_into(self, k_dst: np.ndarray, v_dst: np.ndarray) -> None:
         """Materialize the dense per-request view: dst (n_layers, S_pad, kvh,
         hd) receives the pages' contents at their token positions.  Slots
         beyond `length` are left as-is — every consumer masks by length."""
         assert not self.released
+        if self.pool.k is None:
+            raise RuntimeError(
+                "host gather on a storage-less pool (device-resident mode)"
+            )
         assert self.length <= k_dst.shape[1], (self.length, k_dst.shape)
         n = len(self.pages)
         if n == 0:
@@ -203,16 +254,24 @@ class PagedSequence:
         span_v = self.pool.v[:, pg].reshape(self.pool.n_layers, n * ps, *v_dst.shape[2:])
         v_dst[:, :m] = span_v[:, :m]
 
-    def rewind(self, n: int) -> None:
+    def rewind(self, n: int, *, release_pages: bool = True) -> None:
         """Drop the last n tokens in O(pages dropped): adjust the length and
         return whole pages past the new high-water mark to the free list
-        (into this sequence's reservation, so it may regrow)."""
+        (into this sequence's reservation, so it may regrow).
+
+        release_pages=False keeps every backed page (device-resident mode:
+        the table must stay stable and the pages are reserved anyway), making
+        speculative rewind a pure O(1) length update — mirroring the
+        engine's `rewind` contract including its n >= 0 / over-rewind
+        validation."""
         assert not self.released, "rewind on a released sequence"
         if n < 0:
             raise ValueError(f"rewind expects n >= 0, got {n}")
         if n > self.length:
             raise ValueError(f"over-rewind: length {self.length} < rewind {n}")
         self.length -= n
+        if not release_pages:
+            return
         keep = pages_for(self.length, self.pool.page_size)
         while len(self.pages) > keep:
             self.pool._give_page(self.pages.pop(), back_to_reservation=True)
@@ -227,3 +286,33 @@ class PagedSequence:
         self.pages = []
         self.length = 0
         self.released = True
+
+
+# ---------------------------------------------------------------------------
+# Device-resident pool storage (functional, jit-compatible)
+# ---------------------------------------------------------------------------
+
+
+def device_pool_init(pool: PagedKVPool, dtype=None):
+    """JAX-array KV storage for `pool`: ``(k, v)`` each of shape
+    ``(n_layers, num_pages + 1, page_size, kv_heads, head_dim)``.
+
+    One extra SCRATCH page (index ``pool.num_pages``, never handed out by
+    the allocator) absorbs writes from inactive batch rows, whose page
+    tables point every slot at it — their garbage lands where no request
+    reads.  The arrays are pure values: the model forward scatters new
+    tokens in (``models/layers.paged_attention_update``) and returns the
+    updated pool; speculative rewind never touches them (stale slots are
+    masked by length, then overwritten in place on the next append — the
+    paged analogue of the dense cache's reset-the-length trick)."""
+    import jax.numpy as jnp  # deferred: allocator stays importable sans jax
+
+    dtype = dtype if dtype is not None else pool.dtype
+    shape = (
+        pool.n_layers,
+        pool.num_pages + 1,
+        pool.page_size,
+        pool.kv_heads,
+        pool.head_dim,
+    )
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)

@@ -147,6 +147,17 @@ def _qlinear(x: jnp.ndarray, qw: Params, use_pallas: bool) -> jnp.ndarray:
     return ops.w4a8_linear(x, qw["packed"], qw["sw"], use_pallas=use_pallas)
 
 
+def _paged_attn(q_, k_, v_, kvs_, lengths, pctx):
+    """One layer's paged attention: scatter the span into the pool slice,
+    attend through the page table, return (att, new pool slices)."""
+    table, impl = pctx
+    pc = L.PagedCache(
+        k=kvs_["k"], v=kvs_["v"], page_table=table, length=lengths, impl=impl
+    )
+    att, npk, npv = L.paged_attention_update(q_, k_, v_, pc)
+    return att, {"k": npk, "v": npv}
+
+
 def _norm_only(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
@@ -162,16 +173,18 @@ def apply_quantized_lm(
     rotate: bool = True,
     use_pallas: bool = False,
     last_logit_only: bool = False,
+    paged_impl: str = "gather",
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """W4A8 serving forward (dense family).  Mirrors lm.apply_lm's dense
-    path with quantized linears; scan over layers."""
+    path with quantized linears; scan over layers.  A cache carrying
+    ``page_table`` is the device-resident paged pool (per-row lengths)."""
     tp = mesh.shape["model"] if mesh is not None else 1
     b, s = tokens.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
     store = L.kv_store_heads(cfg, tp)
     r2 = rot.plan_rotation(cfg.d_ff) if rotate else None
-    offset = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
-    positions = jnp.broadcast_to(offset + jnp.arange(s)[None, :], (b, s))
+    paged = cache is not None and "page_table" in cache
+    offset, positions, pctx = L.forward_cache_ctx(cache, b, s, paged_impl)
     x = qparams["embed"][tokens].astype(cfg.jdtype)
     if mesh is not None:
         from repro.models.lm import batch_axes_for
@@ -193,7 +206,9 @@ def apply_quantized_lm(
         k_ = L.rope(k_, positions, cfg.rope_theta)
         k_ = L._repeat_kv(k_, store)
         v_ = L._repeat_kv(v_, store)
-        if kvs_ is not None and "k_scale" in kvs_:
+        if pctx is not None:
+            att, ys = _paged_attn(q_, k_, v_, kvs_, offset, pctx)
+        elif kvs_ is not None and "k_scale" in kvs_:
             kq, ksc = L._kv_quantize(k_)
             vq, vsc = L._kv_quantize(v_)
             ck = jax.lax.dynamic_update_slice_in_dim(kvs_["k"], kq, offset, axis=1)
@@ -235,7 +250,7 @@ def apply_quantized_lm(
     if cache is not None:
         x, kv_out = jax.lax.scan(body, x, (qparams["layers"], cache["attn"]))
         new_cache["attn"] = kv_out
-        new_cache["length"] = offset + s
+        new_cache["lengths" if paged else "length"] = offset + s
     else:
         x, _ = jax.lax.scan(lambda c, p: body(c, (p, None)), x, qparams["layers"])
     x = _norm_only(x)
@@ -295,14 +310,16 @@ def apply_bvq_lm(
     cache: Optional[Params] = None,
     use_pallas: bool = False,
     last_logit_only: bool = False,
+    paged_impl: str = "gather",
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
-    """BVQ draft-LM forward: weights decoded from codebooks on the fly."""
+    """BVQ draft-LM forward: weights decoded from codebooks on the fly.
+    A cache carrying ``page_table`` is the device-resident paged pool."""
     tp = mesh.shape["model"] if mesh is not None else 1
     b, s = tokens.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
     store = L.kv_store_heads(cfg, tp)
-    offset = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
-    positions = jnp.broadcast_to(offset + jnp.arange(s)[None, :], (b, s))
+    paged = cache is not None and "page_table" in cache
+    offset, positions, pctx = L.forward_cache_ctx(cache, b, s, paged_impl)
     x = qparams["embed"][tokens].astype(cfg.jdtype)
     new_cache = dict(cache) if cache is not None else None
 
@@ -323,7 +340,9 @@ def apply_bvq_lm(
         k_ = L.rope(k_, positions, cfg.rope_theta)
         k_ = L._repeat_kv(k_, store)
         v_ = L._repeat_kv(v_, store)
-        if kvs_ is not None:
+        if pctx is not None:
+            att, ys = _paged_attn(q_, k_, v_, kvs_, offset, pctx)
+        elif kvs_ is not None:
             ck = jax.lax.dynamic_update_slice_in_dim(kvs_["k"], k_, offset, axis=1)
             cv = jax.lax.dynamic_update_slice_in_dim(kvs_["v"], v_, offset, axis=1)
             if s == 1:
@@ -346,7 +365,7 @@ def apply_bvq_lm(
     if cache is not None:
         x, kv_out = jax.lax.scan(body, x, (qparams["layers"], cache["attn"]))
         new_cache["attn"] = kv_out
-        new_cache["length"] = offset + s
+        new_cache["lengths" if paged else "length"] = offset + s
     else:
         x, _ = jax.lax.scan(lambda c, p: body(c, (p, None)), x, qparams["layers"])
     x = L.rmsnorm(qparams["final_norm"], x)

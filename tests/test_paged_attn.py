@@ -87,3 +87,71 @@ def test_unused_table_slots_are_masked():
     pt_junk[0, 2:] = 7  # length 10 uses ceil(10/8)=2 pages; rest is junk
     got = paged_decode_attention_pallas(q, kp, vp, jnp.asarray(pt_junk), lens)
     np.testing.assert_allclose(np.asarray(base), np.asarray(got), atol=0)
+
+
+def test_ragged_page_tables_one_page_vs_max():
+    """One batch mixing a 1-page request with a request spanning every
+    table slot (the continuous-batching steady state) must match the
+    oracle row-for-row — the short request's unused slots are masked."""
+    b, kvs, g, hd, ps, mp = 4, 2, 2, 32, 8, 6
+    lengths = [3, ps * mp, 1, ps * (mp - 1) + 5]  # 1 page .. all mp pages
+    q, kp, vp, pt, lens = _case(5, b, kvs, g, hd, b * mp, ps, mp, lengths)
+    # point the short rows' dead slots at the long rows' pages (worst case)
+    pt_np = np.asarray(pt).copy()
+    pt_np[0, 1:] = pt_np[1, 1:]
+    pt_np[2, 1:] = pt_np[3, 1:]
+    pt = jnp.asarray(pt_np)
+    got = paged_decode_attention_pallas(q, kp, vp, pt, lens)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("lengths", [[1, 7, 13], [29, 31, 37], [5, 23, 47]])
+def test_non_power_of_two_lengths(lengths):
+    """Prefix lengths that straddle page boundaries at odd offsets (primes,
+    not powers of two) must agree with the gather+dense oracle."""
+    b, kvs, g, hd, ps, mp = 3, 2, 2, 48, 8, 6  # hd 48: also non-pow2
+    q, kp, vp, pt, lens = _case(6, b, kvs, g, hd, b * mp + 1, ps, mp, lengths)
+    got = paged_decode_attention_pallas(q, kp, vp, pt, lens)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Multi-token verify window (5-D q)
+# ---------------------------------------------------------------------------
+
+
+def _window_case(seed, b, w, kvs, g, hd, pool_pages, page_size, mp, lengths):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(b, w, kvs, g, hd).astype(np.float32))
+    kp = jnp.asarray(rng.randn(pool_pages, page_size, kvs, hd).astype(np.float32))
+    vp = jnp.asarray(rng.randn(pool_pages, page_size, kvs, hd).astype(np.float32))
+    perm = rng.permutation(pool_pages)[: b * mp].reshape(b, mp)
+    return q, kp, vp, jnp.asarray(perm.astype(np.int32)), jnp.asarray(
+        np.asarray(lengths, np.int32)
+    )
+
+
+@pytest.mark.parametrize("w,lengths", [(2, [9, 30]), (4, [5, 17]), (3, [3, 32])])
+def test_window_matches_oracle(w, lengths):
+    """W-query verify windows (the speculative round's [last_tok, drafts...]
+    span) match the causally-masked oracle."""
+    b, kvs, g, hd, ps, mp = 2, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens = _window_case(7, b, w, kvs, g, hd, b * mp, ps, mp, lengths)
+    got = paged_decode_attention_pallas(q, kp, vp, pt, lens)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens)
+    assert got.shape == (b, w, kvs, g, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_window_last_query_equals_single_token_call():
+    """The window's LAST query sees the full prefix — it must equal a 4-D
+    single-token call at the same length (causal consistency)."""
+    b, w, kvs, g, hd, ps, mp = 2, 3, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens = _window_case(8, b, w, kvs, g, hd, b * mp, ps, mp, [11, 26])
+    win = paged_decode_attention_pallas(q, kp, vp, pt, lens)
+    single = paged_decode_attention_pallas(q[:, -1], kp, vp, pt, lens)
+    np.testing.assert_allclose(
+        np.asarray(win[:, -1]), np.asarray(single), atol=1e-6
+    )

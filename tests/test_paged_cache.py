@@ -129,6 +129,70 @@ def test_gather_into_clamps_page_overhang():
         seq.gather_into(short, short.copy())  # dst smaller than valid data
 
 
+def test_over_rewind_at_page_boundary():
+    """Regression: when length sits EXACTLY on a page boundary, rewinding
+    one past it must raise (not wrap / pop a non-existent page), and the
+    sequence must stay usable afterwards.  Also mirrors the engine's rewind
+    contract: n must be >= 0."""
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(12)
+    seq.append(*span(pool, 8))  # exactly 2 full pages
+    assert seq.length == 8 and len(seq.pages) == 2
+    with pytest.raises(ValueError, match="over-rewind"):
+        seq.rewind(9)
+    with pytest.raises(ValueError, match="n >= 0"):
+        seq.rewind(-1)
+    # state unchanged by the failed rewinds; a full boundary rewind is fine
+    assert seq.length == 8 and len(seq.pages) == 2
+    seq.rewind(8)
+    assert seq.length == 0 and pool.used_pages == 0
+
+
+def test_rewind_keep_pages_for_device_mode():
+    """release_pages=False (device-resident pools): the length drops but
+    every backed page stays owned, so the page table is lifetime-stable."""
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(12)
+    seq.append(*span(pool, 10))  # 3 pages
+    pages = list(seq.pages)
+    seq.rewind(7, release_pages=False)
+    assert seq.length == 3 and seq.pages == pages and pool.used_pages == 3
+    with pytest.raises(ValueError, match="over-rewind"):
+        seq.rewind(4, release_pages=False)
+    seq.advance(9)  # regrow over the kept pages, no new allocation
+    assert seq.length == 12 and seq.pages == pages
+
+
+def test_storageless_pool_is_pure_allocator():
+    """alloc_storage=False: bookkeeping works, host data paths refuse."""
+    pool = PagedKVPool(2, 2, 8, num_pages=4, page_size=4, alloc_storage=False)
+    assert pool.k is None and pool.v is None
+    seq = pool.allocate_sequence(8)
+    seq.ensure_backed(8)
+    assert len(seq.pages) == 2 and pool.used_pages == 2
+    seq.advance(5)
+    assert seq.length == 5
+    with pytest.raises(RuntimeError, match="storage-less"):
+        seq.append(
+            np.zeros((2, 1, 2, 8), np.float32), np.zeros((2, 1, 2, 8), np.float32)
+        )
+    with pytest.raises(RuntimeError, match="storage-less"):
+        seq.gather_into(
+            np.zeros((2, 8, 2, 8), np.float32), np.zeros((2, 8, 2, 8), np.float32)
+        )
+    seq.release()
+    assert pool.used_pages == 0 and pool.available_pages == 4
+
+
+def test_device_pool_init_has_scratch_page():
+    from repro.serving.paged_cache import device_pool_init
+
+    pool = PagedKVPool(3, 2, 8, num_pages=5, page_size=4, alloc_storage=False)
+    k, v = device_pool_init(pool)
+    assert k.shape == (3, 6, 4, 2, 8)  # num_pages + 1 scratch
+    assert v.shape == k.shape
+
+
 def test_high_water_and_stats():
     pool = make_pool(num_pages=8, page_size=4)
     seq = pool.allocate_sequence(16)
