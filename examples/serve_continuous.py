@@ -1,22 +1,24 @@
-"""Continuous-batching serving demo: many requests, one paged runtime.
+"""Stepwise serving demo: requests join and leave a LIVE batch.
 
     PYTHONPATH=src python examples/serve_continuous.py [--requests 8]
 
-Submits a burst of prompts to `serve_batch`: the batcher admits what fits
-the page budget, streams tokens per request as they verify, back-fills freed
-slots from the queue, and reports pool utilization plus the WDOS model of
-how much cross-request draft/verify overlap the paper's 4-queue scheduler
-would buy on silicon.
+Drives the ``Engine`` API directly: an initial burst is admitted under the
+page budget, tokens stream per request as each draft/verify round commits
+them, and — the point of the stepwise redesign — a LATE request is
+submitted after the batch has already run several rounds and joins on the
+very next ``step()`` without draining anyone.  With ``--sample`` every
+request decodes at temperature > 0 from its own seeded key stream (lossless
+speculative rejection sampling).  The run ends with pool utilization plus
+the WDOS model of how much cross-request draft/verify overlap the paper's
+4-queue scheduler would buy on silicon.
 """
 import argparse
 import time
 
 import numpy as np
 
-import jax
-
 from repro.launch.serve import build_pair
-from repro.serving.engine import BatchConfig, serve_batch
+from repro.serving import Engine, EngineConfig, SamplingParams
 
 
 def main(argv=None):
@@ -27,9 +29,9 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--adaptive", action="store_true",
                     help="per-request APSD draft-length adaptation")
+    ap.add_argument("--sample", type=float, default=0.0, metavar="TEMP",
+                    help="decode at this temperature (per-request seeds)")
     ap.add_argument("--no-quant", action="store_true")
-    ap.add_argument("--kv-path", choices=["paged", "host"], default="paged",
-                    help="device-resident pools (default) vs legacy host gather")
     args = ap.parse_args(argv)
 
     print(f"building TLM/DLM pair (quantize={not args.no_quant}) ...")
@@ -40,42 +42,69 @@ def main(argv=None):
         rng.randint(0, target.cfg.vocab, size=rng.randint(3, 8)).astype(np.int32)
         for _ in range(args.requests)
     ]
-    streamed = [[] for _ in prompts]
-    sinks = [streamed[i].append for i in range(len(prompts))]
 
-    cfg = BatchConfig(
+    eng = Engine(target, draft, EngineConfig(
         max_batch=args.max_batch,
         page_size=args.page_size,
-        max_tokens=args.tokens,
         draft_len=3,
         adaptive=args.adaptive,
         short_dl=2,
         long_dl=4,
-        kv_path=args.kv_path,
-    )
+    ))
+
+    # initial burst: everything but the last prompt, which arrives LATE
+    late_prompt = prompts[-1]
+    streamed = {}
+    rids = []
+    for p in prompts[:-1]:
+        rid = eng.add_request(p, SamplingParams(
+            temperature=args.sample, seed=len(rids), max_tokens=args.tokens,
+        ))
+        rids.append(rid)
+        streamed[rid] = []
+
     t0 = time.time()
-    outs, summary = serve_batch(
-        jax.random.PRNGKey(0), target, draft, prompts, cfg, sinks=sinks
-    )
+    late_rid = None
+    steps = 0
+    while eng.has_unfinished() or late_rid is None:
+        if late_rid is None and steps == 2:
+            # the batch is mid-flight (2 rounds deep) — submit anyway: the
+            # engine prefills and schedules it on the NEXT step, no drain
+            late_rid = eng.add_request(late_prompt, SamplingParams(
+                temperature=args.sample, seed=len(rids),
+                max_tokens=args.tokens,
+            ))
+            rids.append(late_rid)
+            streamed[late_rid] = []
+            active = sum(1 for r in rids[:-1]
+                         if not eng.request(r).done)
+            print(f"  [step {steps}] late request req{late_rid} submitted "
+                  f"({active} others still decoding — no drain)")
+        for out in eng.step():
+            streamed[out.request_id].extend(out.new_token_ids)
+            if out.finished:
+                print(f"  [step {steps}] req{out.request_id} finished "
+                      f"({out.outputs[0].finish_reason}, "
+                      f"{len(out.token_ids)} tokens)")
+        steps += 1
     dt = time.time() - t0
 
-    emitted = sum(len(o) for o in outs)
-    print(f"\n{len(prompts)} requests, {emitted} tokens in {dt:.2f}s "
+    emitted = sum(len(s) for s in streamed.values())
+    print(f"\n{len(rids)} requests, {emitted} tokens in {dt:.2f}s "
           f"({emitted / dt:.1f} tok/s aggregate)")
-    for i, out in enumerate(outs):
-        print(f"  req{i} prompt={list(map(int, prompts[i]))} "
-              f"-> {list(map(int, out))}")
-        assert streamed[i] == [int(t) for t in out]  # sinks saw every token
+    for i, rid in enumerate(rids):
+        out = [int(t) for t in eng.output_tokens(rid)]
+        tag = " (late)" if rid == late_rid else ""
+        print(f"  req{rid}{tag} prompt={list(map(int, prompts[i]))} -> {out}")
+        assert streamed[rid] == out  # step() streamed every token
+
+    summary = eng.summary()
     tp = summary["target_pool"]
     print(f"\npool: {tp.high_water_pages}/{tp.num_pages} pages high-water "
           f"(page_size={tp.page_size})")
     print(f"acceptance rate: {summary['acceptance_rate']:.3f}")
-    if summary["kv_path"] == "paged":
-        print(f"kv residency: device pools, 0 host K/V copies "
-              f"(table uploads {summary['table_upload_s'] * 1e3:.1f} ms total)")
-    else:
-        print(f"kv residency: host gather/scatter "
-              f"{summary['kv_copy_s'] * 1e3:.1f} ms total")
+    print(f"kv residency: device pools, 0 host K/V copies "
+          f"(table uploads {summary['table_upload_s'] * 1e3:.1f} ms total)")
     print(f"WDOS cross-request overlap model: "
           f"{summary['wdos_modeled_speedup']:.2f}x vs in-order "
           f"(COMPUTE util {summary['wdos_utilization']['COMPUTE']:.2f})")

@@ -7,13 +7,25 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== serving benchmark (smoke, device-resident paged KV) =="
-python -m benchmarks.bench_serving --smoke --kv-path paged
+echo "== serving benchmark (smoke, Engine over device-resident paged KV) =="
+# Emits machine-readable BENCH_serving.json (tokens/s, rounds, acceptance
+# rate, copy telemetry) so the perf trajectory is tracked across PRs.
+python -m benchmarks.bench_serving --smoke --kv-path paged --json BENCH_serving.json
 
 echo "== paged-path kernel smoke (batch 4, Pallas interpret mode) =="
-# Exercises the kernel-wired decode path end to end every run: serve_batch
+# Exercises the kernel-wired decode path end to end every run: the Engine
 # dispatching decode+verify attention through kernels/paged_attn.py.
-python -m benchmarks.bench_serving --smoke --kv-path paged --paged-attn pallas
+python -m benchmarks.bench_serving --smoke --kv-path paged --paged-attn pallas \
+    --json BENCH_serving_pallas.json
+
+echo "== serving perf record =="
+python - <<'EOF'
+import json
+for p in ("BENCH_serving.json", "BENCH_serving_pallas.json"):
+    r = json.load(open(p))
+    cfgs = {(c["kv_path"], c["max_batch"]): c["tokens_per_s"] for c in r["configs"]}
+    print(p, {k: round(v, 1) for k, v in cfgs.items()})
+EOF
 
 echo "== tier-1 tests (gate) =="
 # Pre-existing mesh/JAX-version-dependent seed failures in test_launch.py /

@@ -18,12 +18,16 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "SDConfig",
     "LMInterface",
     "speculative_sample",
     "speculative_accept_greedy",
+    "speculative_accept_greedy_host",
+    "speculative_sample_host",
+    "sample_token_host",
     "sd_generate",
     "SDStats",
 ]
@@ -127,6 +131,100 @@ def speculative_accept_greedy(
 
 def _probs(logits: jnp.ndarray, temperature: float) -> jnp.ndarray:
     return jax.nn.softmax(logits / max(temperature, 1e-6), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Host-side acceptance rules (the batched serving engine's per-row mirrors)
+# ---------------------------------------------------------------------------
+#
+# The continuous-batching engine (serving/engine.py) runs the draft/verify
+# forwards batched on device but commits per request on the host, where each
+# row has its own draft length, sampling params, and PRNG key stream.  These
+# helpers are the host-side mirrors of the jnp rules above, shared so the
+# engine, the legacy host-gather baseline, and any future scheduler agree on
+# ONE acceptance rule.
+
+
+def speculative_accept_greedy_host(drafts, p_logits, dl: int):
+    """Host mirror of ``speculative_accept_greedy`` for one request's round:
+    accept while draft == argmax(target); emit the bonus/correction token.
+
+    drafts: (>= dl,) int draft tokens; p_logits: (>= dl+1, V) target logits.
+    np.argmax and jnp.argmax share the first-max tie rule, so this is
+    bit-identical to the device rule."""
+    tlm_tok = np.argmax(p_logits, axis=-1)  # (L+1,)
+    n_acc = 0
+    while n_acc < dl and tlm_tok[n_acc] == drafts[n_acc]:
+        n_acc += 1
+    return [int(t) for t in drafts[:n_acc]] + [int(tlm_tok[n_acc])], n_acc
+
+
+def _top_k_filter_host(logits: np.ndarray, top_k: int) -> np.ndarray:
+    """Keep the top-k logits (ties at the threshold all survive — the set is
+    deterministic either way), set the rest to -inf."""
+    if top_k <= 0 or top_k >= logits.shape[-1]:
+        return logits
+    thresh = np.partition(logits, -top_k, axis=-1)[..., -top_k, None]
+    return np.where(logits < thresh, -np.inf, logits)
+
+
+def _softmax_host(logits: np.ndarray) -> np.ndarray:
+    x = logits - np.max(logits, axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / np.sum(e, axis=-1, keepdims=True)
+
+
+def sample_token_host(
+    key: jax.Array, logits: np.ndarray, temperature: float, top_k: int = 0
+) -> int:
+    """Sample one token from (temperature/top-k filtered) logits with an
+    explicit key — the per-request draft-sampling step of the batched
+    engine.  Deterministic in (key, logits, params) only, so a request's
+    draw never depends on its batch composition."""
+    lg = _top_k_filter_host(np.asarray(logits, np.float32), top_k)
+    return int(
+        jax.random.categorical(key, jnp.asarray(lg / max(temperature, 1e-6)))
+    )
+
+
+def speculative_sample_host(
+    key: jax.Array,
+    drafts,  # (>= dl,) int draft tokens sampled via sample_token_host
+    p_logits: np.ndarray,  # (>= dl+1, V) target logits over the window
+    q_logits: np.ndarray,  # (>= dl, V) draft logits at each draft position
+    dl: int,
+    temperature: float,
+    top_k: int = 0,
+) -> Tuple[list, int]:
+    """Host mirror of ``speculative_sample`` for one request's round.
+
+    Applies the same temperature/top-k filter to both distributions that
+    drafting used, accepts the u*q < p prefix, and samples the residual
+    (or bonus) token — all randomness from `key`, so the round is
+    reproducible for a fixed per-request seed.  Returns
+    (committed tokens [n_acc accepted drafts + 1 residual/bonus], n_acc)."""
+    temp = max(temperature, 1e-6)
+    p = _softmax_host(
+        _top_k_filter_host(np.asarray(p_logits[: dl + 1], np.float32), top_k) / temp
+    )
+    q = _softmax_host(
+        _top_k_filter_host(np.asarray(q_logits[:dl], np.float32), top_k) / temp
+    )
+    k_u, k_res = jax.random.split(key)
+    u = np.asarray(jax.random.uniform(k_u, (max(dl, 1),)))
+    idx = np.arange(dl)
+    d = np.asarray(drafts[:dl], np.int64)
+    accept = u[:dl] * q[idx, d] < p[idx, d]  # u < p/q without the divide
+    n_acc = int(np.cumprod(accept.astype(np.int64)).sum()) if dl else 0
+    p_next = p[n_acc]
+    q_next = q[min(n_acc, dl - 1)] if n_acc < dl else np.zeros_like(p_next)
+    residual = np.maximum(p_next - q_next, 0.0)
+    res_sum = float(residual.sum())
+    dist = residual / res_sum if res_sum > 1e-9 else p_next
+    next_tok = int(
+        jax.random.categorical(k_res, jnp.log(jnp.asarray(dist) + 1e-20))
+    )
+    return [int(t) for t in d[:n_acc]] + [next_tok], n_acc
 
 
 def sd_generate(

@@ -1,40 +1,58 @@
-"""Serving runtime: single-request SD/APSD drivers plus the continuous-
-batching multi-request engine (device-resident paged KV pools +
-WDOS-modeled scheduler).
+"""Serving runtime: the stepwise continuous-batching ``Engine`` over
+device-resident paged KV pools, plus the deprecated run-to-drain shims.
 
-Layers, bottom-up:
+The public surface::
+
+    from repro.serving import Engine, EngineConfig, SamplingParams
+
+    eng = Engine(target, draft, EngineConfig(max_batch=4))
+    rid = eng.add_request(prompt, SamplingParams(max_tokens=32))
+    while eng.has_unfinished():
+        for out in eng.step():          # one WDOS-scheduled SD round
+            stream(out.new_token_ids)   # RequestOutput, incremental
+
+Internals (engine-owned, import from their modules if you must):
   paged_cache.PagedKVPool  — block-granular KV pages, free list, reservations
-                             (host allocator; KV bytes in device arrays via
-                             device_pool_init)
-  request.Request          — QUEUED/PREFILL/DECODE/FINISHED + APSD mode state
+  request.Request          — lifecycle + per-request sampling key streams
   batcher.ContinuousBatcher— page-budget admission + WDOS round model
-  engine.serve_batch       — batched draft/verify steps scattering/attending
-                             in place through per-row page tables
-  host_gather.serve_batch_host — legacy gather/scatter loop (bench baseline)
+  host_gather              — frozen legacy gather/scatter loop (bench baseline)
+
+Deprecated shims (each warns once): ``serve_sd``, ``serve_apsd``,
+``serve_batch``, ``serve_batch_host`` — thin wrappers over ``Engine``,
+bit-identical for greedy decoding.
 """
-from repro.serving.batcher import BatchConfig, ContinuousBatcher
+from repro.serving.api import (
+    CompletionOutput,
+    EngineConfig,
+    RequestOutput,
+    SamplingParams,
+    resolve_paged_attn_impl,
+)
 from repro.serving.engine import (
+    BatchConfig,
+    Engine,
     ServingModel,
     make_interface,
     serve_apsd,
     serve_batch,
+    serve_batch_host,
     serve_sd,
 )
-from repro.serving.paged_cache import PagedKVPool, PagedSequence, device_pool_init
-from repro.serving.request import DraftController, Request, RequestState
 
 __all__ = [
-    "BatchConfig",
-    "ContinuousBatcher",
+    # the Engine API
+    "Engine",
+    "EngineConfig",
+    "SamplingParams",
+    "RequestOutput",
+    "CompletionOutput",
     "ServingModel",
     "make_interface",
+    "resolve_paged_attn_impl",
+    # deprecated run-to-drain shims (+ their config type)
+    "serve_sd",
     "serve_apsd",
     "serve_batch",
-    "serve_sd",
-    "PagedKVPool",
-    "PagedSequence",
-    "device_pool_init",
-    "DraftController",
-    "Request",
-    "RequestState",
+    "serve_batch_host",
+    "BatchConfig",
 ]

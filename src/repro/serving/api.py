@@ -1,0 +1,195 @@
+"""Public serving API types: the stepwise ``Engine`` surface.
+
+The serving entry points used to be closed-batch functions (``serve_sd``,
+``serve_batch``, ...) that took a fixed prompt list and ran to drain.  The
+``Engine`` (serving/engine.py) replaces them with the continuous surface the
+paper's out-of-order WDOS scheduler actually wants — work arrives and
+retires at any time:
+
+    eng = Engine(target, draft, EngineConfig(max_batch=4))
+    rid = eng.add_request(prompt, SamplingParams(max_tokens=32))
+    while eng.has_unfinished():
+        for out in eng.step():          # one WDOS-scheduled SD round
+            consume(out.new_token_ids)  # streams as tokens verify
+
+This module holds the request/response types shared by every path:
+
+* ``SamplingParams`` — frozen per-request decode knobs.  ``temperature > 0``
+  selects lossless speculative *rejection sampling* with a per-request PRNG
+  key stream (seeded by ``seed``), so a request's sampled tokens are
+  deterministic regardless of which batch composition it happens to run in.
+* ``RequestOutput`` / ``CompletionOutput`` — the single streaming result
+  type: each ``Engine.step()`` emits one ``RequestOutput`` per request that
+  made progress, carrying the incremental ``new_token_ids`` plus the
+  cumulative completion and finish reason.
+* ``EngineConfig`` — engine-wide scheduling/residency knobs (the per-request
+  knobs moved into ``SamplingParams``).
+
+``resolve_paged_attn_impl`` centralizes the backend auto-selection: the
+Pallas paged-attention kernel is the default on TPU (the backend its
+dialect lowers on), the bit-exact device gather everywhere else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import List, Optional
+
+__all__ = [
+    "SamplingParams",
+    "CompletionOutput",
+    "RequestOutput",
+    "EngineConfig",
+    "resolve_paged_attn_impl",
+]
+
+_PAGED_ATTN_IMPLS = ("gather", "pallas")
+# backends where the paged kernel LOWERS: kernels/paged_attn.py is written
+# against the TPU Pallas dialect (pltpu.PrefetchScalarGridSpec / VMEM
+# scratch) and only interprets elsewhere, so auto-selection must not hand
+# it to GPU — the gather path is the correct default there until a
+# Triton-dialect port lands
+_PALLAS_BACKENDS = ("tpu",)
+
+
+def resolve_paged_attn_impl(
+    impl: Optional[str] = "auto", backend: Optional[str] = None
+) -> str:
+    """Resolve a paged-attention impl choice to ``"gather"`` or ``"pallas"``.
+
+    ``impl`` of ``None``/``"auto"`` auto-selects by accelerator backend:
+    ``"pallas"`` where the kernel compiles (TPU), ``"gather"`` (the
+    bit-exact dense replay) everywhere else.  An explicit
+    ``"gather"``/``"pallas"`` always wins.  ``backend`` overrides
+    ``jax.default_backend()`` (tests)."""
+    if impl in _PAGED_ATTN_IMPLS:
+        return impl
+    if impl not in (None, "auto"):
+        raise ValueError(
+            f"paged_attn_impl must be one of {_PAGED_ATTN_IMPLS + ('auto',)}, "
+            f"got {impl!r}"
+        )
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return "pallas" if backend in _PALLAS_BACKENDS else "gather"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode parameters (frozen — safe to share across requests).
+
+    ``temperature == 0`` is greedy decoding: deterministic, bit-identical to
+    the single-request reference drivers.  ``temperature > 0`` runs lossless
+    speculative rejection sampling: the draft proposes from its own
+    (temperature/top-k filtered) distribution and the target accepts with the
+    Leviathan rule, so emitted tokens are distributed exactly as
+    autoregressive sampling from the target.  All randomness derives from a
+    per-request key stream seeded by ``seed`` and indexed by (round,
+    position), never from shared state — the same (prompt, params) pair
+    yields the same tokens at batch 1 and batch N."""
+
+    temperature: float = 0.0
+    top_k: int = 0  # 0: no truncation; k > 0: sample from the top-k logits
+    seed: int = 0
+    max_tokens: int = 64
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.max_tokens <= 0:
+            raise ValueError(f"max_tokens must be > 0, got {self.max_tokens}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+@dataclasses.dataclass
+class CompletionOutput:
+    """One completion of a request (the engine produces exactly one)."""
+
+    index: int
+    token_ids: List[int]  # cumulative generated tokens, trimmed to the budget
+    finish_reason: Optional[str] = None  # None | "length" | "abort"
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_reason is not None
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Streaming per-request result emitted by ``Engine.step()``.
+
+    ``new_token_ids`` holds only the tokens verified *this* step (what a
+    server would flush to the client); ``outputs[0].token_ids`` is the
+    cumulative completion so far."""
+
+    request_id: int
+    prompt_token_ids: List[int]
+    new_token_ids: List[int]
+    finished: bool
+    outputs: List[CompletionOutput]
+
+    @property
+    def token_ids(self) -> List[int]:
+        return self.outputs[0].token_ids
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-wide knobs: scheduling, paging, and attention residency.
+
+    Per-request knobs (``max_tokens``, ``temperature``) live in
+    ``SamplingParams``; this config is fixed for the engine's lifetime."""
+
+    max_batch: int = 8  # concurrent DECODE slots (batched model rows)
+    page_size: int = 16  # tokens per KV page
+    draft_len: int = 3  # fixed draft window (adaptive=False)
+    adaptive: bool = False  # per-request APSD draft-length adaptation
+    short_dl: int = 2
+    long_dl: int = 6
+    num_pages: Optional[int] = None  # page budget per pool (None: fit
+    # max_batch worst-case requests of max_model_len tokens)
+    max_model_len: Optional[int] = None  # peak cache length a request may
+    # reach (prompt + max_tokens + draft window).  None defaults to the
+    # models' s_max — the honest bound when future requests are unknown,
+    # but it sizes the page tables (and the "gather" impl's attention
+    # span) to the worst case; set it to your real peak when known, as
+    # the deprecated serve_batch wrapper does with its closed prompt list.
+    model_wdos: bool = True  # build the per-round WDOS DAG (stats)
+    # paged decode-attention impl: "gather" | "pallas" | None ("auto").
+    # None resolves per ServingModel (each model's own paged_attn_impl,
+    # itself "auto" by default => pallas where it lowers [TPU], gather
+    # elsewhere); an explicit value here overrides both models.
+    paged_attn_impl: Optional[str] = None
+
+    @property
+    def max_dl(self) -> int:
+        return self.long_dl if self.adaptive else self.draft_len
+
+
+# ---------------------------------------------------------------------------
+# Deprecation bookkeeping for the legacy serve_* wrappers
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_EMITTED: set = set()
+
+
+def warn_deprecated_once(name: str, replacement: str) -> None:
+    """Emit a DeprecationWarning for `name` at most once per process, so a
+    server's log is not flooded by per-request wrapper calls.  (Whether the
+    one emission is *displayed* still follows the active warning filters,
+    as with any ``warnings.warn``.)"""
+    if name in _DEPRECATION_EMITTED:
+        return
+    _DEPRECATION_EMITTED.add(name)
+    warnings.warn(
+        f"{name}() is deprecated; use {replacement}",
+        DeprecationWarning,
+        stacklevel=3,
+    )

@@ -33,7 +33,13 @@ __all__ = ["BatchConfig", "ContinuousBatcher", "WDOSModelStats"]
 
 @dataclasses.dataclass(frozen=True)
 class BatchConfig:
-    """Knobs for ``serve_batch``."""
+    """Knobs for the DEPRECATED ``serve_batch`` wrapper.
+
+    New code should drive ``serving.Engine`` with ``api.EngineConfig``
+    (engine-wide knobs) + per-request ``api.SamplingParams`` — this type
+    survives only so the legacy run-to-drain wrappers keep their exact
+    signature.  ``ContinuousBatcher`` itself accepts either config (it only
+    reads the scheduling fields both share)."""
 
     max_batch: int = 8  # concurrent DECODE slots (vmapped model batch)
     page_size: int = 16  # tokens per KV page
@@ -77,7 +83,7 @@ class ContinuousBatcher:
 
     def __init__(
         self,
-        cfg: BatchConfig,
+        cfg,  # BatchConfig or api.EngineConfig (shared scheduling fields)
         t_pool: PagedKVPool,
         d_pool: PagedKVPool,
         t_layers: int,
@@ -141,12 +147,29 @@ class ContinuousBatcher:
             if r is not None and r.state is RequestState.DECODE
         ]
 
-    def retire(self, slot: int) -> None:
+    def retire(self, slot: int, reason: str = "length") -> None:
         req = self.slots[slot]
         assert req is not None
-        req.finish(self.step_count)
+        req.finish(self.step_count, reason=reason)
         self.finished.append(req)
         self.slots[slot] = None
+
+    def cancel_queued(self, rid: int) -> Optional[Request]:
+        """Drop a not-yet-admitted request from the queue (Engine.abort).
+        Returns the request (finished with reason "abort") or None."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                req.finish(self.step_count, reason="abort")
+                self.finished.append(req)
+                return req
+        return None
+
+    def slot_of(self, rid: int) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                return i
+        return None
 
     def all_done(self) -> bool:
         return not self.queue and all(r is None for r in self.slots)

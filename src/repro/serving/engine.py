@@ -1,56 +1,80 @@
-"""Serving engine: wires real zoo models into the SD / APSD drivers.
+"""Serving engine: the stepwise continuous-batching runtime.
 
-Builds `LMInterface` adapters (prefill / extend / rewind over the functional
-caches) for any of: bf16 `lm.apply_lm`, W4A8 `apply_quantized_lm`, BVQ
-`apply_bvq_lm` — so the full paper configuration
+``Engine`` is the serving surface: requests are admitted at ANY time
+(``add_request``), each ``step()`` runs one WDOS-scheduled draft/verify
+round over whatever is active and streams incremental ``RequestOutput``s,
+and ``abort()`` frees a request's pool pages immediately.  Nothing drains:
+a request submitted after round k is prefilled and scheduled in round k+1
+while the rest of the batch keeps decoding — the continuous arrival/retire
+pattern the paper's out-of-order WDOS scheduler (Fig. 31.1.5) exploits to
+overlap different requests' draft (RERAM) and verify (EMAC) pipelines.
 
-    TLM = W4A8+LRU target model,  DLM = BVQ draft model,  APSD controller
+KV lives in DEVICE-RESIDENT block-granular paged pools
+(serving/paged_cache.py allocator + JAX pool arrays): prefill scatters
+straight into pool pages, each batched draft/verify step scatters new
+tokens in place and attends through per-row page tables, and accept/rewind
+is a per-row length update — no per-round host gather/scatter of K/V.
 
-runs end to end on real weights.  Rewind is O(1): reset the cache length
-(stale slots are overwritten and masked).  On a TPU mesh the draft and
-verify dispatches overlap (the WDOS idea); on CPU they serialize but are
-bit-identical.
+Sampling is per request (``api.SamplingParams``): ``temperature == 0`` is
+greedy and bit-identical per request to the single-request reference
+drivers (batching, paging, and residency change scheduling, never
+sampling); ``temperature > 0`` runs lossless speculative rejection sampling
+from a per-request key stream, so a request's sampled tokens are identical
+at batch 1 and batch N (tests/test_engine_api.py).
 
-`serve_batch` is the multi-request runtime on top of the same models: KV
-lives in DEVICE-RESIDENT block-granular paged pools (serving/paged_cache.py
-allocator + JAX pool arrays), a continuous batcher (serving/batcher.py)
-admits/evicts requests under a page budget, and each draft/verify step runs
-as ONE batched model call over every active request that scatters new
-tokens straight into pool pages and attends through per-row page tables —
-no per-round host gather/scatter of K/V views.  Accept/rewind is a
-per-row length update with zero KV copies.  Greedy outputs are
-bit-identical per request to the single-request ``serve_sd`` path —
-batching and paging change scheduling and residency, never sampling.
-(The pre-refactor host-gather loop survives in serving/host_gather.py as
-the benchmark baseline, selected by ``BatchConfig.kv_path == "host"``.)
+The pre-redesign entry points — ``serve_sd``, ``serve_apsd``,
+``serve_batch``, ``serve_batch_host`` — survive as thin DEPRECATED wrappers
+over ``Engine`` (each warns once); the legacy host-gather loop itself stays
+frozen in serving/host_gather.py as the benchmark baseline.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.apsd import APSDConfig, apsd_generate
-from repro.core.speculative import LMInterface, SDConfig, sd_generate
+from repro.core.apsd import PAR, APSDConfig, APSDStats, RoundRecord
+from repro.core.speculative import (
+    LMInterface,
+    SDConfig,
+    SDStats,
+    sample_token_host,
+    speculative_accept_greedy_host,
+    speculative_sample_host,
+)
 from repro.models import layers as L
 from repro.models import lm
 from repro.models.common import ModelConfig
 from repro.serving import quantized_lm as qlm
+from repro.serving.api import (
+    CompletionOutput,
+    EngineConfig,
+    RequestOutput,
+    SamplingParams,
+    resolve_paged_attn_impl,
+    warn_deprecated_once,
+)
 from repro.serving.batcher import BatchConfig, ContinuousBatcher
 from repro.serving.paged_cache import PagedKVPool, device_pool_init, pages_for
 from repro.serving.request import Request, RequestState
 
 __all__ = [
+    "Engine",
+    "EngineConfig",
+    "SamplingParams",
+    "RequestOutput",
+    "CompletionOutput",
     "make_interface",
     "ServingModel",
     "serve_sd",
     "serve_apsd",
     "serve_batch",
+    "serve_batch_host",
     "BatchConfig",
 ]
 
@@ -63,16 +87,18 @@ class ServingModel:
     mesh: Any = None
     s_max: int = 512
     use_pallas: bool = False
-    # paged decode attention path: "gather" replays the exact dense math
-    # over a device-side page gather (bit-identical to serve_sd); "pallas"
-    # attends in place through the page table with kernels/paged_attn.py
-    # (interpret mode on CPU).
-    paged_attn_impl: str = "gather"
+    # paged decode attention path: "auto" resolves per backend (the Pallas
+    # paged kernel where its TPU dialect lowers, the exact device gather
+    # everywhere else); "gather" replays the exact dense math over a
+    # device-side page gather (bit-identical to the dense cache path);
+    # "pallas" attends in place through the page table with
+    # kernels/paged_attn.py (interpret mode on CPU).
+    paged_attn_impl: str = "auto"
 
     def _apply(self, params, tokens, cache):
         paged_kw = {}
         if cache is not None and "page_table" in cache:
-            paged_kw = dict(paged_impl=self.paged_attn_impl)
+            paged_kw = dict(paged_impl=resolve_paged_attn_impl(self.paged_attn_impl))
         if self.mode == "w4a8":
             return qlm.apply_quantized_lm(
                 params, self.cfg, self.mesh, tokens, cache=cache,
@@ -134,38 +160,8 @@ def make_interface(model: ServingModel) -> LMInterface:
     return LMInterface(prefill=prefill, extend=extend, rewind=rewind)
 
 
-def serve_sd(
-    key: jax.Array,
-    target: ServingModel,
-    draft: ServingModel,
-    prompt: jnp.ndarray,
-    cfg: SDConfig,
-):
-    return sd_generate(
-        key,
-        make_interface(target), target.params,
-        make_interface(draft), draft.params,
-        prompt, cfg,
-    )
-
-
-def serve_apsd(
-    key: jax.Array,
-    target: ServingModel,
-    draft: ServingModel,
-    prompt: jnp.ndarray,
-    cfg: APSDConfig,
-):
-    return apsd_generate(
-        key,
-        make_interface(target), target.params,
-        make_interface(draft), draft.params,
-        prompt, cfg,
-    )
-
-
 # ---------------------------------------------------------------------------
-# Continuous-batching runtime (device-resident paged KV, zero host copies)
+# Shared helpers (the frozen host_gather baseline also imports these)
 # ---------------------------------------------------------------------------
 
 
@@ -178,20 +174,20 @@ def _wdos_costs(mcfg: ModelConfig) -> Tuple[float, float]:
     return load, 0.25 * load
 
 
-def _empty_summary(cfg: BatchConfig) -> dict:
+def _empty_summary(cfg) -> dict:
     return {
         "requests": 0, "rounds": 0, "steps": 0, "emitted": 0,
         "acceptance_rate": 0.0, "target_pool": None, "draft_pool": None,
         "wdos_modeled_speedup": 1.0,
         "wdos_utilization": {},
-        "kv_path": cfg.kv_path,
+        "kv_path": getattr(cfg, "kv_path", "paged"),
         "kv_copy_s": 0.0,
         "table_upload_s": 0.0,
     }
 
 
 def _pool_for(
-    model: ServingModel, cfg: BatchConfig, peaks: Sequence[int],
+    model: ServingModel, cfg, peaks: Sequence[int],
     alloc_storage: bool = True,
 ):
     """Page pool sized to hold `max_batch` worst-case requests (or the
@@ -201,7 +197,7 @@ def _pool_for(
     if mcfg.kv_quant:
         raise NotImplementedError("paged pools hold dense-dtype KV (kv_quant=False)")
     if model.mesh is not None:
-        raise NotImplementedError("serve_batch runs the single-host path (mesh=None)")
+        raise NotImplementedError("the Engine runs the single-host path (mesh=None)")
     if cfg.num_pages is not None:
         num_pages = cfg.num_pages
     else:
@@ -218,14 +214,9 @@ def _pool_for(
     )
 
 
-def _greedy_accept_host(drafts: np.ndarray, p_logits: np.ndarray, dl: int):
-    """Host-side mirror of ``speculative_accept_greedy`` for one request:
-    accept while draft == argmax(target); emit the bonus/correction token."""
-    tlm_tok = np.argmax(p_logits, axis=-1)  # (L+1,), first-max tie rule == jnp
-    n_acc = 0
-    while n_acc < dl and tlm_tok[n_acc] == drafts[n_acc]:
-        n_acc += 1
-    return [int(t) for t in drafts[:n_acc]] + [int(tlm_tok[n_acc])], n_acc
+# host_gather.py (frozen baseline) keeps calling the accept rule through
+# this name; the shared implementation lives in core/speculative.py now.
+_greedy_accept_host = speculative_accept_greedy_host
 
 
 def _make_paged_step(model: ServingModel):
@@ -278,10 +269,10 @@ class _TableSet:
     Page tables only change at admission/retirement (pages are backed
     eagerly, so a request's table is stable for its whole lifetime);
     lengths change every round.  Both are O(B) int32 uploads — the point of
-    the device-resident refactor is that these tiny tables are ALL that
-    crosses the host boundary per round.  `cap_tokens` (the batch's
-    worst-case peak cache length, NOT s_max) sizes the table width, which
-    in turn bounds the attention span the paged forward touches."""
+    the device-resident design is that these tiny tables are ALL that
+    crosses the host boundary per round.  `cap_tokens` (the engine's
+    max_model_len, NOT s_max) sizes the table width, which in turn bounds
+    the attention span the paged forward touches."""
 
     def __init__(self, max_batch: int, pool: PagedKVPool, cap_tokens: int):
         self.max_pages = pages_for(cap_tokens, pool.page_size)
@@ -312,82 +303,146 @@ class _TableSet:
         return self._table_dev, jax.block_until_ready(jnp.asarray(self.lengths))
 
 
-def serve_batch(
-    key: jax.Array,
-    target: ServingModel,
-    draft: ServingModel,
-    prompts: Sequence[Any],  # each (S,) or (1, S) int32, S >= 2
-    cfg: BatchConfig,
-    sinks: Optional[Sequence[Optional[Callable[[int], None]]]] = None,
-) -> Tuple[List[jnp.ndarray], dict]:
-    """Continuously-batched greedy speculative decoding over device-resident
+# ---------------------------------------------------------------------------
+# The stepwise Engine
+# ---------------------------------------------------------------------------
+
+
+class Engine:
+    """Continuous-batching speculative-decoding engine over device-resident
     paged KV pools.
 
-    Admits up to ``cfg.max_batch`` concurrent requests (more queue behind the
-    page budget), runs each SD round as batched draft/verify steps over every
-    active request — prefill scatters straight into pool pages, decode
-    scatters/attends in place through per-row page tables, and accept/rewind
-    is a per-row length update with no KV copy.  Streams tokens to
-    per-request sinks.  Returns the per-request outputs (original submission
-    order) and the batch summary (pool stats + the WDOS cross-request
-    overlap model).
+    Lifecycle::
 
-    ``cfg.kv_path == "host"`` selects the legacy host-gather loop
-    (serving/host_gather.py) kept as the benchmark baseline.
+        eng = Engine(target, draft, EngineConfig(max_batch=4))
+        rid = eng.add_request(prompt, SamplingParams(max_tokens=32))
+        while eng.has_unfinished():
+            for out in eng.step():      # one batched SD round
+                stream(out.new_token_ids)
+        tokens = eng.output_tokens(rid)
 
-    Greedy only: per-request outputs are bit-identical to ``serve_sd`` with
-    the same models (asserted in tests/test_serving_batch.py).
+    ``add_request`` is admissible at any time — between ``step()`` calls a
+    new request joins the queue and is prefilled/scheduled on the next step
+    without draining the active batch.  ``abort`` retires a request
+    immediately and returns its pool pages.  ``run`` is the convenience
+    drain loop the deprecated ``serve_batch`` wrapper uses.
+
+    Greedy requests are bit-identical per request to the single-request
+    dense-cache reference; sampled requests (``temperature > 0``) follow
+    the lossless rejection-sampling rule with per-request key streams.
     """
-    if cfg.kv_path == "host":
-        from repro.serving.host_gather import serve_batch_host
 
-        return serve_batch_host(key, target, draft, prompts, cfg, sinks=sinks)
-    if cfg.kv_path != "paged":
-        raise ValueError(f"kv_path must be 'paged' or 'host', got {cfg.kv_path!r}")
-    del key  # greedy path is deterministic; kept for API symmetry with serve_sd
-    if cfg.temperature != 0.0:
-        raise NotImplementedError("serve_batch currently supports temperature=0.0")
-
-    requests = [
-        Request(
-            rid=i,
-            prompt=np.asarray(p).reshape(-1),
-            max_new_tokens=cfg.max_tokens,
-            sink=sinks[i] if sinks else None,
+    def __init__(
+        self,
+        target: ServingModel,
+        draft: ServingModel,
+        config: Optional[EngineConfig] = None,
+    ):
+        cfg = config if config is not None else EngineConfig()
+        if cfg.paged_attn_impl is not None:
+            impl = resolve_paged_attn_impl(cfg.paged_attn_impl)
+            target = dataclasses.replace(target, paged_attn_impl=impl)
+            draft = dataclasses.replace(draft, paged_attn_impl=impl)
+        self.cfg = cfg
+        self.target = target
+        self.draft = draft
+        self.max_model_len = (
+            cfg.max_model_len
+            if cfg.max_model_len is not None
+            else min(target.s_max, draft.s_max)
         )
-        for i, p in enumerate(prompts)
-    ]
-    if not requests:
-        return [], _empty_summary(cfg)
-    peaks = [r.peak_cache_len(cfg.max_dl) for r in requests]
-    for model in (target, draft):
-        if max(peaks) > model.s_max:
+        for model in (target, draft):
+            if self.max_model_len > model.s_max:
+                raise ValueError(
+                    f"max_model_len {self.max_model_len} exceeds "
+                    f"s_max={model.s_max} of {model.cfg.name}"
+                )
+
+        # host pools are pure allocators; the KV bytes live in device arrays
+        worst = [self.max_model_len] * cfg.max_batch
+        self._t_pool = _pool_for(target, cfg, worst, alloc_storage=False)
+        self._d_pool = _pool_for(draft, cfg, worst, alloc_storage=False)
+        self._t_pk, self._t_pv = device_pool_init(self._t_pool)
+        self._d_pk, self._d_pv = device_pool_init(self._d_pool)
+
+        self._batcher = ContinuousBatcher(
+            cfg, self._t_pool, self._d_pool,
+            t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
+            t_costs=_wdos_costs(target.cfg), d_costs=_wdos_costs(draft.cfg),
+        )
+        self._t_iface, self._d_iface = make_interface(target), make_interface(draft)
+        self._t_step, self._d_step = _make_paged_step(target), _make_paged_step(draft)
+        self._t_tables = _TableSet(cfg.max_batch, self._t_pool, self.max_model_len)
+        self._d_tables = _TableSet(cfg.max_batch, self._d_pool, self.max_model_len)
+        self._table_upload_s = 0.0  # tiny int32 uploads (all that remains)
+        self._requests: Dict[int, Request] = {}
+        self._next_id = 0
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def add_request(
+        self,
+        prompt,
+        sampling_params: Optional[SamplingParams] = None,
+        sink: Optional[Callable[[int], None]] = None,
+    ) -> int:
+        """Submit a prompt; returns its request id.  Admissible at any time
+        — the batcher prefills it on the next ``step()`` once a slot and
+        pages are free, without draining the active batch."""
+        sp = sampling_params if sampling_params is not None else SamplingParams()
+        req = Request(
+            rid=self._next_id,
+            prompt=np.asarray(prompt).reshape(-1),
+            max_new_tokens=sp.max_tokens,
+            sink=sink,
+            sampling=sp,
+        )
+        peak = req.peak_cache_len(self.cfg.max_dl)
+        if peak > self.max_model_len:
             raise ValueError(
-                f"peak cache length {max(peaks)} exceeds s_max={model.s_max} "
-                f"of {model.cfg.name}"
+                f"request peak cache length {peak} (prompt {req.prompt.shape[0]} "
+                f"+ max_tokens {sp.max_tokens} + draft window "
+                f"{self.cfg.max_dl}) exceeds max_model_len={self.max_model_len}"
             )
+        self._next_id += 1
+        self._requests[req.rid] = req
+        self._batcher.submit(req)
+        return req.rid
 
-    # host pools are pure allocators; the KV bytes live in device arrays
-    t_pool = _pool_for(target, cfg, peaks, alloc_storage=False)
-    d_pool = _pool_for(draft, cfg, peaks, alloc_storage=False)
-    t_pk, t_pv = device_pool_init(t_pool)
-    d_pk, d_pv = device_pool_init(d_pool)
+    def abort(self, request_id: int) -> bool:
+        """Cancel a request: a queued one is dropped, an active one retires
+        immediately and its pool pages return to the free list (un-blocking
+        queued admissions on the next step).  Returns False if the id is
+        unknown or already finished."""
+        req = self._requests.get(request_id)
+        if req is None or req.state is RequestState.FINISHED:
+            return False
+        if req.state is RequestState.QUEUED:
+            return self._batcher.cancel_queued(request_id) is not None
+        slot = self._batcher.slot_of(request_id)
+        assert slot is not None, "active request without a slot"
+        self._t_tables.clear_row(slot)
+        self._d_tables.clear_row(slot)
+        self._batcher.retire(slot, reason="abort")
+        return True
 
-    batcher = ContinuousBatcher(
-        cfg, t_pool, d_pool,
-        t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
-        t_costs=_wdos_costs(target.cfg), d_costs=_wdos_costs(draft.cfg),
-    )
-    for r in requests:
-        batcher.submit(r)
+    def has_unfinished(self) -> bool:
+        return not self._batcher.all_done()
 
-    t_iface, d_iface = make_interface(target), make_interface(draft)
-    t_step, d_step = _make_paged_step(target), _make_paged_step(draft)
-    t_tables = _TableSet(cfg.max_batch, t_pool, max(peaks))
-    d_tables = _TableSet(cfg.max_batch, d_pool, max(peaks))
-    table_upload_s = 0.0  # tiny int32 table/length uploads (all that remains)
+    def request(self, request_id: int) -> Request:
+        return self._requests[request_id]
 
-    def _prefill_into(req: Request, iface: LMInterface, params, seq,
+    def output_tokens(self, request_id: int) -> jnp.ndarray:
+        req = self._requests[request_id]
+        return jnp.asarray(req.out[: req.max_new_tokens], jnp.int32)
+
+    def pool_stats(self):
+        """(target PoolStats, draft PoolStats) — page residency right now."""
+        return self._t_pool.stats(), self._d_pool.stats()
+
+    # -- the stepwise round --------------------------------------------------
+
+    def _prefill_into(self, req: Request, iface: LMInterface, params, seq,
                       pool_k, pool_v, tables, slot):
         # same jitted program as the single-request path => bitwise
         # identical prefix KV; the cache rows scatter device->device into
@@ -404,54 +459,85 @@ def serve_batch(
         seq.advance(plen - 1)
         return pool_k, pool_v
 
-    while not batcher.all_done():
-        for slot, req in batcher.admit():
-            t_pk, t_pv = _prefill_into(
-                req, t_iface, target.params, req.t_seq, t_pk, t_pv,
-                t_tables, slot,
+    def step(self) -> List[RequestOutput]:
+        """Admit what fits, then run ONE batched draft/verify round over
+        every active request.  Returns a ``RequestOutput`` per request that
+        progressed, with the incrementally verified tokens."""
+        cfg = self.cfg
+        for slot, req in self._batcher.admit():
+            self._t_pk, self._t_pv = self._prefill_into(
+                req, self._t_iface, self.target.params, req.t_seq,
+                self._t_pk, self._t_pv, self._t_tables, slot,
             )
-            d_pk, d_pv = _prefill_into(
-                req, d_iface, draft.params, req.d_seq, d_pk, d_pv,
-                d_tables, slot,
+            self._d_pk, self._d_pv = self._prefill_into(
+                req, self._d_iface, self.draft.params, req.d_seq,
+                self._d_pk, self._d_pv, self._d_tables, slot,
             )
             req.state = RequestState.DECODE
-        active = batcher.active()
+        active = self._batcher.active()
         if not active:
-            batcher.step_count += 1
-            continue
+            self._batcher.step_count += 1
+            return []
 
         dls = {slot: req.controller.draft_len() for slot, req in active}
+        modes = {slot: req.controller.mode for slot, req in active}
         round_dl = max(dls.values())
+        any_sampled = any(not req.sampling.greedy for _, req in active)
 
         t0 = time.perf_counter()
-        d_table, d_len0 = d_tables.load((s, r.d_seq) for s, r in active)
-        t_table, t_len0 = t_tables.load((s, r.t_seq) for s, r in active)
-        table_upload_s += time.perf_counter() - t0
+        d_table, d_len0 = self._d_tables.load((s, r.d_seq) for s, r in active)
+        t_table, t_len0 = self._t_tables.load((s, r.t_seq) for s, r in active)
+        self._table_upload_s += time.perf_counter() - t0
 
-        # ---- draft phase: round_dl sampled steps + 1 straggler step, all
-        # batched; the draft pool stays on device across the loop.
+        # ---- draft phase: round_dl proposal steps + 1 straggler step, all
+        # batched; the draft pool stays on device across the loop.  Greedy
+        # batches keep the next-token argmax on device; once any active row
+        # samples, each proposal hops through the host so every sampled row
+        # can draw from its own (temperature/top-k, per-request-key) draft
+        # distribution — greedy rows still take the argmax (np and jnp share
+        # the first-max tie rule, so the round stays bit-identical for them).
         cur = np.zeros((cfg.max_batch,), np.int32)
         for slot, req in active:
             cur[slot] = req.last_tok
         cur_dev = jnp.asarray(cur)
-        draft_cols = []
+        draft_cols: List[Any] = []
+        q_cols: List[np.ndarray] = []  # per-position draft logits (sampled rounds)
         for j in range(round_dl + 1):
-            logits, d_pk, d_pv = d_step(
-                draft.params, cur_dev[:, None], d_pk, d_pv, d_table, d_len0 + j
+            logits, self._d_pk, self._d_pv = self._d_step(
+                self.draft.params, cur_dev[:, None], self._d_pk, self._d_pv,
+                d_table, d_len0 + j,
             )
             if j < round_dl:
-                cur_dev = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-                draft_cols.append(cur_dev)
+                if any_sampled:
+                    last = np.asarray(logits[:, -1, :])
+                    q_cols.append(last)
+                    nxt = np.argmax(last, axis=-1).astype(np.int32)
+                    for slot, req in active:
+                        sp = req.sampling
+                        if not sp.greedy:
+                            nxt[slot] = sample_token_host(
+                                req.draft_key(j), last[slot],
+                                sp.temperature, sp.top_k,
+                            )
+                    draft_cols.append(nxt)
+                    cur_dev = jnp.asarray(nxt)
+                else:
+                    cur_dev = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                    draft_cols.append(cur_dev)
             # else: straggler — feeds d_{round_dl-1}, completing the cache for
             # fully-accepted rows; over-written rows rewind it away below.
-        drafts = np.asarray(jnp.stack(draft_cols, axis=1))  # (B, round_dl)
+        if any_sampled:
+            drafts = np.stack(draft_cols, axis=1)  # (B, round_dl)
+        else:
+            drafts = np.asarray(jnp.stack(draft_cols, axis=1))
 
         # ---- verify phase: one batched pass scoring [last_tok, drafts...]
         window = np.zeros((cfg.max_batch, round_dl + 1), np.int32)
         window[:, 0] = cur
         window[:, 1:] = drafts
-        v_logits, t_pk, t_pv = t_step(
-            target.params, jnp.asarray(window), t_pk, t_pv, t_table, t_len0
+        v_logits, self._t_pk, self._t_pv = self._t_step(
+            self.target.params, jnp.asarray(window), self._t_pk, self._t_pv,
+            t_table, t_len0,
         )
         p_logits = np.asarray(v_logits)  # (B, round_dl+1, V)
 
@@ -459,33 +545,280 @@ def serve_batch(
         # the KV was written in place by the steps above, and rewind just
         # drops the tail (stale pool slots are masked, then overwritten)
         work = []
+        progressed: List[Tuple[Request, List[int]]] = []
         for slot, req in active:
             dl = dls[slot]
-            new, n_acc = _greedy_accept_host(drafts[slot], p_logits[slot], dl)
+            sp = req.sampling
+            if sp.greedy:
+                new, n_acc = speculative_accept_greedy_host(
+                    drafts[slot], p_logits[slot], dl
+                )
+            else:
+                q_logits = np.stack([q_cols[j][slot] for j in range(dl)])
+                new, n_acc = speculative_sample_host(
+                    req.accept_key(), drafts[slot], p_logits[slot], q_logits,
+                    dl, sp.temperature, sp.top_k,
+                )
+            prev = min(len(req.out), req.max_new_tokens)
             req.commit(new)
+            req.record_round(modes[slot], dl, n_acc, len(new))
             req.rounds += 1
             req.drafted += dl
             req.accepted += n_acc
             req.controller.observe(n_acc, dl)
             work.append((req, dl))
+            progressed.append((req, req.out[prev: req.max_new_tokens]))
             # both models wrote round_dl+1 positions; keep n_acc + 1
             # (draft invariant: cache == committed[:-1], incl. straggler)
             for seq in (req.t_seq, req.d_seq):
                 seq.advance(round_dl + 1)
                 seq.rewind(round_dl - n_acc, release_pages=False)
-        batcher.model_round(work)
+        self._batcher.model_round(work)
         for slot, req in active:
             if req.done:
-                t_tables.clear_row(slot)
-                d_tables.clear_row(slot)
-                batcher.retire(slot)
-        batcher.step_count += 1
+                self._t_tables.clear_row(slot)
+                self._d_tables.clear_row(slot)
+                self._batcher.retire(slot)
+        self._batcher.step_count += 1
 
-    outputs = [
-        jnp.asarray(r.out[: r.max_new_tokens], jnp.int32) for r in requests
-    ]
-    summary = batcher.summary()
-    summary["kv_path"] = "paged"
-    summary["kv_copy_s"] = 0.0  # no host K/V copies exist on this path
-    summary["table_upload_s"] = table_upload_s
-    return outputs, summary
+        return [
+            RequestOutput(
+                request_id=req.rid,
+                prompt_token_ids=[int(t) for t in req.prompt],
+                new_token_ids=[int(t) for t in delta],
+                finished=req.state is RequestState.FINISHED,
+                outputs=[CompletionOutput(
+                    index=0,
+                    token_ids=[int(t) for t in req.out[: req.max_new_tokens]],
+                    finish_reason=req.finish_reason,
+                )],
+            )
+            for req, delta in progressed
+        ]
+
+    # -- drain / reporting ---------------------------------------------------
+
+    def run(
+        self,
+        prompts: Optional[Sequence[Any]] = None,
+        sampling_params=None,
+        sinks: Optional[Sequence[Optional[Callable[[int], None]]]] = None,
+    ) -> Tuple[List[jnp.ndarray], dict]:
+        """Convenience drain loop: optionally add `prompts` (with one shared
+        or per-prompt ``SamplingParams``), then ``step()`` until nothing is
+        queued or active.  Returns (outputs for the added prompts — or every
+        request this engine has seen — in submission order, summary)."""
+        rids = None
+        if prompts is not None:
+            n = len(prompts)
+            if sampling_params is None:
+                sps = [None] * n
+            elif isinstance(sampling_params, SamplingParams):
+                sps = [sampling_params] * n
+            else:
+                sps = list(sampling_params)
+                if len(sps) != n:
+                    raise ValueError(
+                        f"{len(sps)} sampling_params for {n} prompts"
+                    )
+            rids = [
+                self.add_request(p, sps[i], sink=sinks[i] if sinks else None)
+                for i, p in enumerate(prompts)
+            ]
+        while self.has_unfinished():
+            self.step()
+        ids = rids if rids is not None else sorted(self._requests)
+        return [self.output_tokens(r) for r in ids], self.summary()
+
+    def summary(self) -> dict:
+        s = self._batcher.summary()
+        s["kv_path"] = "paged"
+        s["kv_copy_s"] = 0.0  # no host K/V copies exist on this path
+        s["table_upload_s"] = self._table_upload_s
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Deprecated run-to-drain wrappers (kept bit-identical for greedy decoding)
+# ---------------------------------------------------------------------------
+
+
+def _seed_from_key(key) -> int:
+    """Fold a jax PRNG key into a per-request integer seed (the wrappers'
+    bridge from the old key-threading API to per-request key streams)."""
+    try:
+        data = jax.random.key_data(key)
+    except (AttributeError, TypeError):
+        data = key
+    return int(np.asarray(data).ravel()[-1])
+
+
+def serve_sd(
+    key: jax.Array,
+    target: ServingModel,
+    draft: ServingModel,
+    prompt: jnp.ndarray,
+    cfg: SDConfig,
+):
+    """DEPRECATED: single-request speculative decoding via the Engine.
+
+    Greedy outputs are bit-identical to the historical ``sd_generate``
+    driver.  For ``temperature > 0`` the engine's per-request key stream
+    (seeded from `key`) replaces the old shared key threading, so sampled
+    outputs are equally-distributed but not draw-for-draw identical."""
+    warn_deprecated_once("serve_sd", "Engine.add_request(...) + Engine.step()")
+    prompt_np = np.asarray(prompt).reshape(-1)
+    ecfg = EngineConfig(
+        max_batch=1,
+        draft_len=cfg.draft_len,
+        model_wdos=False,
+        max_model_len=prompt_np.shape[0] + cfg.max_tokens + cfg.draft_len,
+    )
+    eng = Engine(target, draft, ecfg)
+    sp = SamplingParams(
+        temperature=max(cfg.temperature, 0.0),
+        max_tokens=cfg.max_tokens,
+        seed=_seed_from_key(key),
+    )
+    outs, _ = eng.run([prompt_np], sp)
+    req = eng.request(0)
+    stats = SDStats(
+        emitted=jnp.asarray(req.emitted_total),
+        rounds=jnp.asarray(req.rounds),
+        drafted=jnp.asarray(req.drafted),
+        accepted=jnp.asarray(req.accepted),
+    )
+    return outs[0], stats
+
+
+def serve_apsd(
+    key: jax.Array,
+    target: ServingModel,
+    draft: ServingModel,
+    prompt: jnp.ndarray,
+    cfg: APSDConfig,
+):
+    """DEPRECATED: single-request APSD via the Engine's adaptive mode.
+
+    The engine's per-request ``DraftController`` drives the same
+    ``APSDPolicy`` mode machine (short windows while the TLM rejects, long
+    while it accepts), so greedy outputs stay bit-identical (lossless);
+    round stats are rebuilt from the request's round log.  The engine
+    schedules PAR rounds as longer windows rather than the reference
+    driver's draft-during-verify pipelining — the cross-request overlap the
+    batcher's WDOS model prices replaces intra-request pipelining here (the
+    full pipelined reference survives as ``core/apsd.apsd_generate``)."""
+    warn_deprecated_once(
+        "serve_apsd", "Engine with EngineConfig(adaptive=True)"
+    )
+    prompt_np = np.asarray(prompt).reshape(-1)
+    ecfg = EngineConfig(
+        max_batch=1,
+        adaptive=True,
+        short_dl=cfg.short_dl,
+        long_dl=cfg.long_dl,
+        model_wdos=False,
+        max_model_len=prompt_np.shape[0] + cfg.max_tokens + cfg.long_dl,
+    )
+    eng = Engine(target, draft, ecfg)
+    sp = SamplingParams(
+        temperature=max(cfg.temperature, 0.0),
+        max_tokens=cfg.max_tokens,
+        seed=_seed_from_key(key),
+    )
+    outs, _ = eng.run([prompt_np], sp)
+    req = eng.request(0)
+    records = tuple(
+        RoundRecord(mode=m, drafted=d, accepted=a, emitted=e, discarded=0)
+        for m, d, a, e in req.history
+    )
+    stats = APSDStats(
+        emitted=sum(r.emitted for r in records),
+        rounds=len(records),
+        drafted=sum(r.drafted for r in records),
+        accepted=sum(r.accepted for r in records),
+        discarded=0,
+        par_rounds=sum(1 for r in records if r.mode == PAR),
+        records=records,
+    )
+    return outs[0], stats
+
+
+def serve_batch(
+    key: jax.Array,
+    target: ServingModel,
+    draft: ServingModel,
+    prompts: Sequence[Any],  # each (S,) or (1, S) int32, S >= 2
+    cfg: BatchConfig,
+    sinks: Optional[Sequence[Optional[Callable[[int], None]]]] = None,
+) -> Tuple[List[jnp.ndarray], dict]:
+    """DEPRECATED: run-to-drain batch decoding; use ``Engine`` directly.
+
+    Thin wrapper: builds an ``Engine`` sized exactly like the historical
+    closed-batch runtime (pool fits the ``max_batch`` largest submitted
+    requests; table width = the batch's worst-case peak), adds every prompt,
+    and drains.  Greedy outputs are bit-identical per request to the
+    pre-redesign loop (and to ``serve_sd``).  ``cfg.kv_path == "host"``
+    still selects the frozen legacy host-gather loop
+    (serving/host_gather.py) kept as the benchmark baseline."""
+    warn_deprecated_once("serve_batch", "Engine.run(...)")
+    if cfg.kv_path == "host":
+        from repro.serving.host_gather import serve_batch_host as _host_impl
+
+        return _host_impl(key, target, draft, prompts, cfg, sinks=sinks)
+    if cfg.kv_path != "paged":
+        raise ValueError(f"kv_path must be 'paged' or 'host', got {cfg.kv_path!r}")
+    if cfg.temperature != 0.0:
+        raise NotImplementedError(
+            "the deprecated serve_batch wrapper keeps its historical "
+            "greedy-only contract; pass SamplingParams(temperature=...) "
+            "to Engine.add_request for sampled decoding"
+        )
+    del key  # greedy path is deterministic; kept for API symmetry
+    if not len(prompts):
+        return [], _empty_summary(cfg)
+    prompts_np = [np.asarray(p).reshape(-1) for p in prompts]
+    peaks = [p.shape[0] + cfg.max_tokens + cfg.max_dl for p in prompts_np]
+    for model in (target, draft):
+        if max(peaks) > model.s_max:
+            raise ValueError(
+                f"peak cache length {max(peaks)} exceeds s_max={model.s_max} "
+                f"of {model.cfg.name}"
+            )
+    if cfg.num_pages is not None:
+        num_pages = cfg.num_pages
+    else:
+        worst = sorted((pages_for(p, cfg.page_size) for p in peaks), reverse=True)
+        num_pages = sum(worst[: cfg.max_batch])
+    ecfg = EngineConfig(
+        max_batch=cfg.max_batch,
+        page_size=cfg.page_size,
+        draft_len=cfg.draft_len,
+        adaptive=cfg.adaptive,
+        short_dl=cfg.short_dl,
+        long_dl=cfg.long_dl,
+        num_pages=num_pages,
+        max_model_len=max(peaks),
+        model_wdos=cfg.model_wdos,
+    )
+    eng = Engine(target, draft, ecfg)
+    sp = SamplingParams(max_tokens=cfg.max_tokens)
+    return eng.run(prompts_np, sp, sinks=sinks)
+
+
+def serve_batch_host(
+    key: jax.Array,
+    target: ServingModel,
+    draft: ServingModel,
+    prompts: Sequence[Any],
+    cfg: BatchConfig,
+    sinks: Optional[Sequence[Optional[Callable[[int], None]]]] = None,
+) -> Tuple[List[jnp.ndarray], dict]:
+    """DEPRECATED: the legacy host-gather loop, kept only as the benchmark
+    baseline (``bench_serving --kv-path host``)."""
+    warn_deprecated_once(
+        "serve_batch_host", "Engine.run(...) (device-resident paged KV)"
+    )
+    from repro.serving.host_gather import serve_batch_host as _host_impl
+
+    return _host_impl(key, target, draft, prompts, cfg, sinks=sinks)

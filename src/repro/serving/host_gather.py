@@ -11,8 +11,12 @@ the paper's ReRAM-on-logic stacking argues against; it is kept ONLY so
 device-resident path (``serving/engine.py``), which keeps KV on device and
 scatters/attends in place through the page table.
 
-Outputs are bit-identical to both ``serve_sd`` and the paged path (same
-jitted per-row programs, different data residency).
+Outputs are bit-identical to the stepwise ``Engine``'s paged path (and to
+the single-request reference drivers) for greedy decoding — same jitted
+per-row programs, different data residency.  This loop predates the Engine
+API and stays run-to-drain + greedy-only by design; it is reached through
+the deprecated ``serve_batch`` wrapper with ``cfg.kv_path == "host"`` or
+directly by ``benchmarks/bench_serving.py``.
 
 This module is a deliberately FROZEN copy of the pre-refactor loop: it
 shares only the engine's leaf helpers (pool sizing, accept rule, summary

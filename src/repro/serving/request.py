@@ -7,19 +7,31 @@ request per round* (short window while the TLM is rejecting, long window
 while it accepts everything — `core/apsd.APSDPolicy`), so easy and hard
 requests in the same batch draft different amounts.  Tokens stream to an
 optional per-request sink as soon as they commit.
+
+Every request also carries its own ``SamplingParams`` and — for
+``temperature > 0`` — its own PRNG key stream: keys are derived from the
+request's seed and indexed by (stream, round, position), never drawn from a
+shared counter, so a request's sampled tokens are identical no matter which
+batch composition the engine happens to schedule it into.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 from repro.core.apsd import NONPAR, PAR, APSDPolicy
+from repro.serving.api import SamplingParams
 from repro.serving.paged_cache import PagedSequence
 
 __all__ = ["RequestState", "DraftController", "Request"]
+
+# per-request PRNG stream ids (folded into the seed key first)
+_DRAFT_STREAM = 0  # draft-token sampling, indexed by (round, position)
+_ACCEPT_STREAM = 1  # rejection-sampling accept/residual, indexed by round
 
 
 class RequestState(enum.Enum):
@@ -57,6 +69,7 @@ class Request:
     prompt: np.ndarray  # (S,) int32, S >= 2
     max_new_tokens: int
     sink: Optional[Callable[[int], None]] = None  # streaming token callback
+    sampling: Optional[SamplingParams] = None  # None => greedy defaults
 
     state: RequestState = RequestState.QUEUED
     out: List[int] = dataclasses.field(default_factory=list)
@@ -64,19 +77,49 @@ class Request:
     t_seq: Optional[PagedSequence] = None  # target-model KV pages
     d_seq: Optional[PagedSequence] = None  # draft-model KV pages
     controller: Optional[DraftController] = None
+    finish_reason: Optional[str] = None  # "length" | "abort" once FINISHED
 
     # stats
     rounds: int = 0
     drafted: int = 0
     accepted: int = 0
+    emitted_total: int = 0  # committed tokens incl. the final round's overshoot
     admitted_step: int = -1
     finished_step: int = -1
+    # (mode, drafted, accepted, emitted) per round — the APSD round log the
+    # serve_apsd compatibility wrapper rebuilds its stats from
+    history: List[Tuple[int, int, int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.prompt.shape[0] < 2:
             raise ValueError("prompt must have >= 2 tokens (SD invariant)")
         self.last_tok = int(self.prompt[-1])
+        if self.sampling is None:
+            self.sampling = SamplingParams(max_tokens=self.max_new_tokens)
+        self._base_key = None  # lazy: greedy requests never build a key
+
+    # -- sampling key streams ------------------------------------------------
+
+    def _key(self) -> jax.Array:
+        if self._base_key is None:
+            self._base_key = jax.random.PRNGKey(self.sampling.seed)
+        return self._base_key
+
+    def draft_key(self, position: int) -> jax.Array:
+        """Key for sampling the draft token at `position` of the current
+        round (``self.rounds`` — incremented only after the round commits)."""
+        k = jax.random.fold_in(self._key(), _DRAFT_STREAM)
+        return jax.random.fold_in(jax.random.fold_in(k, self.rounds), position)
+
+    def accept_key(self) -> jax.Array:
+        """Key for the current round's rejection-sampling accept/residual."""
+        k = jax.random.fold_in(self._key(), _ACCEPT_STREAM)
+        return jax.random.fold_in(k, self.rounds)
+
+    # -- lifecycle -----------------------------------------------------------
 
     @property
     def committed_len(self) -> int:
@@ -101,11 +144,18 @@ class Request:
             for t in tokens[:keep]:
                 self.sink(int(t))
         self.out.extend(tokens)
+        self.emitted_total += len(tokens)
         if tokens:
             self.last_tok = int(tokens[-1])
 
-    def finish(self, step: int) -> None:
+    def record_round(self, mode: int, drafted: int, accepted: int,
+                     emitted: int) -> None:
+        self.history.append((mode, drafted, accepted, emitted))
+
+    def finish(self, step: int, reason: str = "length") -> None:
         self.state = RequestState.FINISHED
+        if self.finish_reason is None:
+            self.finish_reason = reason
         self.finished_step = step
         self.out = self.out[: self.max_new_tokens]
         for seq in (self.t_seq, self.d_seq):
