@@ -18,6 +18,15 @@ stays visible: `host` pays O(S_max x B) host traffic per round
 (`kv_copy_ms_per_round`), `paged` pays only tiny int32 page-table/length
 uploads (`table_upload_ms_per_round`).
 
+`--par-mode` selects the engine's round execution: `off` (two-phase
+draft-all-then-verify-all), `wdos` (fused cross-request PAR rounds — the
+WDOS planner co-schedules one request's verify with its neighbours' draft
+micro-steps in single fused dispatches), or `both` to additionally A/B the
+two schedulers on a staggered-admission adaptive workload, recording
+rounds-to-drain, fused-slot occupancy, and the modeled-vs-measured overlap
+telemetry (the analytic WDOS costs are validated against the fused rounds
+that actually ran).
+
 Every run also writes machine-readable ``BENCH_serving.json`` (tokens/s,
 rounds, acceptance rate, copy telemetry per configuration) so the perf
 trajectory is tracked across PRs — `scripts/ci.sh` runs the smoke variant
@@ -25,7 +34,7 @@ and archives the file.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
         [--kv-path {paged,host,both}] [--paged-attn {auto,gather,pallas}]
-        [--json PATH]
+        [--par-mode {off,wdos,both}] [--json PATH]
 """
 import argparse
 import dataclasses
@@ -106,7 +115,7 @@ def _copy_telemetry(rows, tag, summary):
 
 
 def _run_paged(target, draft, prompts, bs, max_tokens, page_size=16,
-               warm_engine=None):
+               warm_engine=None, par_mode="off"):
     """One timed drain of the Engine at batch size `bs`.
 
     A fresh engine per drain re-traces its jitted steps, matching the legacy
@@ -125,7 +134,8 @@ def _run_paged(target, draft, prompts, bs, max_tokens, page_size=16,
         ml = max(len(p) for p in prompts) + max_tokens + 3
         eng = Engine(target, draft,
                      EngineConfig(max_batch=bs, page_size=page_size,
-                                  draft_len=3, max_model_len=ml))
+                                  draft_len=3, max_model_len=ml,
+                                  par_mode=par_mode))
     else:
         eng = warm_engine
     t0 = time.perf_counter()
@@ -147,8 +157,62 @@ def _run_host(target, draft, prompts, bs, max_tokens, page_size=16):
     return outs, summary, time.perf_counter() - t0, None
 
 
+def _par_ab(target, draft, prompts, max_tokens, rows, record):
+    """A/B the two round schedulers on a staggered-admission adaptive
+    workload (one request joins per step, short/long windows mixed by the
+    per-request controllers): rounds-to-drain and the fused telemetry —
+    occupancy (fraction of slots where one request verified WHILE another
+    drafted in the same dispatch) plus the modeled overlap the 4-queue WDOS
+    claims over in-order issue on exactly the slots that ran, validated
+    against the measured serialized slot cost on this backend."""
+    from repro.serving import Engine, EngineConfig, SamplingParams
+
+    record["par"] = {}
+    for mode in ("off", "wdos"):
+        eng = Engine(target, draft, EngineConfig(
+            max_batch=len(prompts), page_size=16,
+            adaptive=True, short_dl=2, long_dl=6, par_mode=mode,
+        ))
+        t0 = time.perf_counter()
+        for p in prompts:
+            eng.add_request(p, SamplingParams(max_tokens=max_tokens))
+            eng.step()
+        while eng.has_unfinished():
+            eng.step()
+        dt = time.perf_counter() - t0
+        summary = eng.summary()
+        entry = {
+            "rounds_to_drain": summary["rounds"],
+            "emitted": summary["emitted"],
+            "wall_s": dt,
+            "wdos_modeled_speedup": summary["wdos_modeled_speedup"],
+        }
+        if "fused" in summary:
+            entry["fused"] = summary["fused"]
+            f = summary["fused"]
+            rows.append((
+                f"serving_par_{mode}_staggered", 0.0,
+                f"{summary['rounds']} rounds; occupancy {f['occupancy']:.2f} "
+                f"({f['fused_slots']}/{f['slots']} fused slots); modeled "
+                f"overlap {f['modeled_overlap_speedup']:.2f}x vs in-order",
+            ))
+        else:
+            rows.append((
+                f"serving_par_{mode}_staggered", 0.0,
+                f"{summary['rounds']} rounds (two-phase)",
+            ))
+        record["par"][mode] = entry
+    off_r = record["par"]["off"]["rounds_to_drain"]
+    wd_r = record["par"]["wdos"]["rounds_to_drain"]
+    rows.append((
+        "serving_par_rounds_saved", 0.0,
+        f"{off_r} -> {wd_r} rounds "
+        f"({(1 - wd_r / max(off_r, 1)) * 100:.0f}% fewer, same tokens)",
+    ))
+
+
 def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
-        json_path: str = None):
+        par_mode: str = "off", json_path: str = None):
     from repro.launch.serve import build_pair
     from repro.serving import Engine, EngineConfig, SamplingParams
 
@@ -159,6 +223,7 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
             "smoke": smoke,
             "kv_path": kv_path,
             "paged_attn": paged_attn,
+            "par_mode": par_mode,
         },
         "configs": [],
     }
@@ -187,7 +252,12 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
     # --- continuous batching at increasing batch sizes, per kv path
     batch_tps = {}
     round_ms = {}
-    runners = {"paged": _run_paged, "host": _run_host}
+    # "both" A/Bs the schedulers in their own section; the sweep runs "off"
+    sweep_par = par_mode if par_mode in ("off", "wdos") else "off"
+    runners = {
+        "paged": lambda *a, **k: _run_paged(*a, par_mode=sweep_par, **k),
+        "host": _run_host,
+    }
     for path in paths:
         for bs in ([2, n_req] if smoke else [2, 4, n_req]):
             outs, summary, dt, eng = runners[path](
@@ -201,8 +271,9 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
                 f"{tps:.1f} tok/s; {round_ms[(path, bs)]:.1f} ms/round; "
                 f"wdos-model {summary['wdos_modeled_speedup']:.2f}x",
             ))
-            record["configs"].append({
+            cfg_rec = {
                 "kv_path": path,
+                "par_mode": summary.get("par_mode", "off"),
                 "max_batch": bs,
                 "requests": n_req,
                 "max_tokens": max_tokens,
@@ -213,7 +284,10 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
                 "wdos_modeled_speedup": summary["wdos_modeled_speedup"],
                 "kv_copy_s": summary["kv_copy_s"],
                 "table_upload_s": summary.get("table_upload_s", 0.0),
-            })
+            }
+            if "fused" in summary:
+                cfg_rec["fused"] = summary["fused"]
+            record["configs"].append(cfg_rec)
             if bs == n_req:
                 _copy_telemetry(rows, f"serving_{path}_b{bs}", summary)
             if path == "paged" and bs == n_req:
@@ -280,6 +354,10 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
             "num_pages": st.num_pages,
         })
 
+    # --- PAR scheduler A/B (fused cross-request rounds vs two-phase)
+    if par_mode == "both":
+        _par_ab(target, draft, prompts, max_tokens, rows, record)
+
     _bench_paged_attn_rows(rows, record)
     if json_path:
         with open(json_path, "w") as f:
@@ -301,6 +379,12 @@ def main(argv=None):
              "gather on CPU), exact device gather, or the Pallas kernel",
     )
     ap.add_argument(
+        "--par-mode", choices=["off", "wdos", "both"], default="off",
+        help="round scheduler: two-phase draft-then-verify, fused "
+             "cross-request PAR (WDOS mixed phase plans), or 'both' to "
+             "also A/B them on a staggered-admission workload",
+    )
+    ap.add_argument(
         "--json", default="BENCH_serving.json", metavar="PATH",
         help="machine-readable output (perf trajectory across PRs); "
              "'' disables",
@@ -309,7 +393,7 @@ def main(argv=None):
     print("name,us_per_call,derived")
     for n, us, derived in run(
         smoke=args.smoke, kv_path=args.kv_path, paged_attn=args.paged_attn,
-        json_path=args.json or None,
+        par_mode=args.par_mode, json_path=args.json or None,
     ):
         print(f"{n},{us:.1f},{derived}")
     return 0

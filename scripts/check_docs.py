@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Docs link/reference checker (scripts/ci.sh gate).
+
+Two classes of rot this catches:
+
+1. Internal markdown links — every relative ``[text](target)`` in
+   ``docs/*.md`` and ``README.md`` must point at an existing file
+   (anchors and external URLs are skipped).
+2. Module references — every backticked ``*.py`` path in the checked
+   files (e.g. the paper-concept table in docs/ARCHITECTURE.md) must
+   resolve to a real file, either repo-relative (``src/repro/core/...``)
+   or serving-relative shorthand (``serving/engine.py`` ->
+   ``src/repro/serving/engine.py``).
+
+Exit 0 when clean, 1 with a listing of every dangling reference.
+"""
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PYREF_RE = re.compile(r"`([\w\-./]*\w\.py)\b")
+
+
+def _resolve_pyref(ref: str):
+    """A backticked module path resolves repo-relative or under src/repro."""
+    candidates = [REPO / ref, REPO / "src" / "repro" / ref]
+    return any(c.is_file() for c in candidates)
+
+
+def check_file(path: Path):
+    errors = []
+    text = path.read_text()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        resolved = (path.parent / target.split("#")[0]).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    for ref in PYREF_RE.findall(text):
+        if not _resolve_pyref(ref):
+            errors.append(
+                f"{path.relative_to(REPO)}: references missing module `{ref}`"
+            )
+    return errors
+
+
+def main():
+    files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    errors = []
+    for f in files:
+        if f.exists():
+            errors.extend(check_file(f))
+    if not (REPO / "docs" / "ARCHITECTURE.md").exists():
+        errors.append("docs/ARCHITECTURE.md is missing")
+    if not (REPO / "docs" / "SERVING.md").exists():
+        errors.append("docs/SERVING.md is missing")
+    if errors:
+        print("docs check FAILED:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs check OK ({len(files)} files, links + module references)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

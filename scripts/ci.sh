@@ -7,10 +7,17 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+echo "== docs check (internal links + paper-concept table module refs) =="
+python scripts/check_docs.py
+
 echo "== serving benchmark (smoke, Engine over device-resident paged KV) =="
 # Emits machine-readable BENCH_serving.json (tokens/s, rounds, acceptance
 # rate, copy telemetry) so the perf trajectory is tracked across PRs.
-python -m benchmarks.bench_serving --smoke --kv-path paged --json BENCH_serving.json
+# --par-mode both also A/Bs the fused cross-request PAR scheduler against
+# two-phase rounds on a staggered workload (the PAR smoke: rounds-to-drain
+# + fused-slot occupancy land in the JSON).
+python -m benchmarks.bench_serving --smoke --kv-path paged --par-mode both \
+    --json BENCH_serving.json
 
 echo "== paged-path kernel smoke (batch 4, Pallas interpret mode) =="
 # Exercises the kernel-wired decode path end to end every run: the Engine
@@ -25,6 +32,12 @@ for p in ("BENCH_serving.json", "BENCH_serving_pallas.json"):
     r = json.load(open(p))
     cfgs = {(c["kv_path"], c["max_batch"]): c["tokens_per_s"] for c in r["configs"]}
     print(p, {k: round(v, 1) for k, v in cfgs.items()})
+par = json.load(open("BENCH_serving.json")).get("par")
+if par:
+    print("PAR A/B rounds-to-drain:",
+          {m: par[m]["rounds_to_drain"] for m in par},
+          "fused occupancy:",
+          round(par["wdos"].get("fused", {}).get("occupancy", 0.0), 3))
 EOF
 
 echo "== tier-1 tests (gate) =="

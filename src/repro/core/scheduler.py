@@ -19,6 +19,18 @@ On the TPU re-host the WDOS *idea* becomes: draft and verify dispatched in a
 single XLA program on disjoint mesh slices so their compute/collectives
 overlap (launch/serve.py); the simulator stays as the faithful model of the
 silicon behaviour.
+
+Since the fused PAR serving mode (``EngineConfig(par_mode="wdos")``,
+serving/engine.py) the scheduler is no longer just a pricing model: the
+*mixed phase plan* emitter below (``RowPhase`` / ``MixedSlotPlan`` /
+``plan_mixed_slot``) decides, per fused dispatch slot, which batch rows run
+a DLM draft micro-step and which run their TLM verify window — out of order
+across requests, by per-row readiness.  The engine executes one plan as ONE
+fused XLA dispatch (draft and verify subgraphs in the same program, the
+TPU analogue of issuing to decoupled RERAM/EMAC queues), and
+``mixed_slot_instrs`` prices exactly that slot so the modeled overlap can
+be validated against the engine's measured fused-round telemetry
+(benchmarks/bench_serving.py).
 """
 from __future__ import annotations
 
@@ -33,6 +45,10 @@ __all__ = [
     "wdos_schedule",
     "inorder_schedule",
     "layer_pipeline_instrs",
+    "RowPhase",
+    "MixedSlotPlan",
+    "plan_mixed_slot",
+    "mixed_slot_instrs",
 ]
 
 
@@ -165,3 +181,98 @@ def layer_pipeline_instrs(
 
 def new_builder() -> _Builder:
     return _Builder()
+
+
+# ---------------------------------------------------------------------------
+# Mixed phase plans: cross-request PAR (fused draft+verify) scheduling
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPhase:
+    """One batch row's position inside its current draft/verify cycle.
+
+    ``window`` is the draft length its APSD controller chose for the
+    in-flight window; ``drafted`` counts proposals made so far.  A row is
+    ready to VERIFY exactly when the window is full — until then its next
+    unit of work is one more DLM draft micro-step."""
+
+    slot: int
+    window: int
+    drafted: int
+
+    @property
+    def verify_ready(self) -> bool:
+        return self.drafted >= self.window
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedSlotPlan:
+    """Role assignment for ONE fused dispatch slot.
+
+    ``draft_rows`` propose their next draft token (DLM, RERAM-fed);
+    ``verify_rows`` score their full window (TLM, EMAC-fed) while their
+    DLM side feeds the window's final straggler token — so a verify row
+    occupies BOTH queues, which is what makes the slot a true PAR round.
+    The two sets are disjoint; rows in neither set are idle this slot."""
+
+    draft_rows: Tuple[int, ...]
+    verify_rows: Tuple[int, ...]
+
+    @property
+    def fused(self) -> bool:
+        """True when DIFFERENT requests' draft and verify work co-reside in
+        the dispatch — the cross-request PAR overlap the paper's WDOS buys.
+        (A verify row's own straggler also keeps the draft queue busy, but
+        that is intra-request overlap; it is not counted here.)"""
+        return bool(self.verify_rows) and bool(self.draft_rows)
+
+    @property
+    def rows(self) -> Tuple[int, ...]:
+        return tuple(self.draft_rows) + tuple(self.verify_rows)
+
+
+def plan_mixed_slot(rows: Sequence[RowPhase]) -> MixedSlotPlan:
+    """Emit the next slot's mixed phase plan, out of order by readiness.
+
+    Every window-full row verifies NOW (verification never benefits from
+    waiting: the TLM pass is batched, so co-scheduling all ready rows costs
+    one EMAC pipeline) and every other row advances its draft window by one
+    token — request A verifies while request B drafts, the paper's
+    Fig. 31.1.5 overlap lifted to cross-request granularity.  The plan is a
+    pure function of row readiness, so the engine's execution and the
+    discrete-event pricing (``mixed_slot_instrs``) see the same schedule."""
+    verify = tuple(sorted(r.slot for r in rows if r.verify_ready))
+    draft = tuple(sorted(r.slot for r in rows if not r.verify_ready))
+    return MixedSlotPlan(draft_rows=draft, verify_rows=verify)
+
+
+def mixed_slot_instrs(
+    builder: _Builder,
+    plan: MixedSlotPlan,
+    t_layers: int,
+    d_layers: int,
+    t_costs: Tuple[float, float],  # (per-layer EMAC load, per-layer compute)
+    d_costs: Tuple[float, float],  # (per-layer RERAM load, per-layer compute)
+    verify_width: int,
+) -> None:
+    """Price ONE fused slot: a RERAM-fed DLM pipeline per drafting row
+    (plus the straggler pipeline each verifying row's DLM side runs) and an
+    EMAC-fed TLM pipeline per verifying row, all sharing no edges — the DAG
+    the 4-queue WDOS overlaps and the in-order baseline serializes."""
+    d_load, d_comp = d_costs
+    t_load, t_comp = t_costs
+    for slot in plan.draft_rows:
+        layer_pipeline_instrs(
+            builder, d_layers, Queue.RERAM, d_load, d_comp,
+            tag=f"s{slot}.draft",
+        )
+    for slot in plan.verify_rows:
+        layer_pipeline_instrs(
+            builder, d_layers, Queue.RERAM, d_load, d_comp,
+            tag=f"s{slot}.straggler",
+        )
+        layer_pipeline_instrs(
+            builder, t_layers, Queue.EMAC, t_load, t_comp * verify_width,
+            tag=f"s{slot}.verify",
+        )

@@ -31,6 +31,27 @@ Layout (one grid step = one (request, kv-head) pair x one page):
 TPU note: real-hardware efficiency wants hd a multiple of 128 and
 page_size a multiple of the sublane tile; interpret mode (CPU tests) takes
 any shape.
+
+Invariants (the contract with the serving engine):
+
+* **Page-table lifetime stability** — the scalar-prefetched table is read
+  fresh every call but the engine uploads each request's row exactly once
+  per lifetime (pages are backed at admission and never move); unused table
+  slots must hold ANY in-range page id (the engine points them at its
+  scratch page) because the grid dereferences every slot and relies on the
+  length mask, not the table, for validity.
+* **Causal padding** — the fused PAR path always calls with the engine-wide
+  fixed window W = max_dl + 1 and per-row lengths counting exactly the
+  tokens written; rows whose real window is shorter arrive zero-padded.
+  Query w's horizon is ``length - W + w``, so padded tail queries only ever
+  produce garbage in their OWN output rows — earlier positions' outputs are
+  bitwise independent of the padding, which is what makes fixed-width
+  compilation safe.
+* **Role-masked rows** — rows excluded from a fused dispatch arrive with
+  an all-scratch table row and length 0: every kv position masks out, the
+  softmax degenerates to uniform over -1e30 scores, and the finite garbage
+  output is ignored by the caller.  The kernel itself never needs a role
+  input.
 """
 from __future__ import annotations
 

@@ -146,6 +146,11 @@ class PagedCache:
       * "pallas" — attend in place through the page table with
         ``kernels/paged_attn.paged_decode_attention_pallas`` (interpret mode
         on CPU), zero gather materialization.
+
+    Rows excluded from a fused PAR dispatch arrive here already diverted:
+    ``forward_cache_ctx`` applies the per-row role mask upstream by
+    rewriting the masked rows' table entries to the scratch page and their
+    lengths to 0, so this type never needs to know about roles.
     """
 
     k: jnp.ndarray  # (P(+scratch), page_size, kvh, hd)
@@ -164,13 +169,33 @@ def forward_cache_ctx(cache, b: int, s: int, paged_impl: str):
     kvh, hd), ...}}``): offset is the per-row length vector and paged_ctx
     the ``(page_table, impl)`` pair the per-layer attention needs.  A
     dense cache (or None) yields the scalar offset and
-    ``paged_ctx = None``."""
+    ``paged_ctx = None``.
+
+    Role-mask semantics (fused cross-request PAR dispatches): an optional
+    ``"role_mask"`` (B,) bool entry selects which rows PARTICIPATE in this
+    forward.  Masked-out rows are routed entirely to the pool's scratch
+    page (their page-table row is replaced by the scratch id and their
+    length by 0), so their KV writes land where no request reads and their
+    attention output is garbage the caller ignores.  This is what lets the
+    serving engine run the draft model and the target model over the SAME
+    batch in ONE fused program — each row's role mask decides which of the
+    two forwards actually touches its pages — without any row ever
+    polluting the pool of a model it is not using this slot."""
     if cache is not None and "page_table" in cache:
         offset = cache["lengths"]  # (B,)
+        table = cache["page_table"]
+        mask = cache.get("role_mask")
+        if mask is not None:
+            # pool device arrays carry one trailing scratch page the
+            # allocator never hands out — divert masked rows' table + length
+            # there so their scatter/attend is inert (dup writes harmless)
+            scratch = cache["attn"]["k"].shape[1] - 1
+            offset = jnp.where(mask, offset, 0)
+            table = jnp.where(mask[:, None], table, scratch)
         positions = jnp.broadcast_to(
             offset[:, None] + jnp.arange(s)[None, :], (b, s)
         )
-        return offset, positions, (cache["page_table"], paged_impl)
+        return offset, positions, (table, paged_impl)
     offset = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
     positions = jnp.broadcast_to(offset + jnp.arange(s)[None, :], (b, s))
     return offset, positions, None

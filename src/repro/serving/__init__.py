@@ -11,6 +11,13 @@ The public surface::
         for out in eng.step():          # one WDOS-scheduled SD round
             stream(out.new_token_ids)   # RequestOutput, incremental
 
+``EngineConfig(par_mode="wdos")`` switches the rounds from two-phase
+(draft-all-then-verify-all) to FUSED cross-request PAR: the WDOS phase
+planner co-schedules one request's verify with its neighbours' draft
+micro-steps in single fused dispatches — bit-identical tokens, fewer
+rounds on heterogeneous workloads.  docs/SERVING.md is the API reference;
+docs/ARCHITECTURE.md maps the stack.
+
 Internals (engine-owned, import from their modules if you must):
   paged_cache.PagedKVPool  — block-granular KV pages, free list, reservations
   request.Request          — lifecycle + per-request sampling key streams

@@ -167,6 +167,27 @@ class EngineConfig:
     # itself "auto" by default => pallas where it lowers [TPU], gather
     # elsewhere); an explicit value here overrides both models.
     paged_attn_impl: Optional[str] = None
+    # cross-request PAR execution:
+    #   "off"  — two-phase rounds: every active row drafts in lockstep,
+    #            then one batched verify pass scores everyone (the
+    #            pre-PAR behaviour, kept bit-identical);
+    #   "wdos" — fused rounds: each engine step runs a horizon of FUSED
+    #            dispatches in which the WDOS phase planner
+    #            (core/scheduler.plan_mixed_slot) picks, per slot, which
+    #            rows run a draft micro-step and which verify their full
+    #            window — request A verifies while request B drafts in
+    #            ONE XLA program, so rows cycle out of phase and a
+    #            fast-accepting row commits multiple windows per step.
+    # Greedy AND sampled outputs are bit-identical across the two modes
+    # (per-row math and key streams are unchanged; only the grouping of
+    # work into dispatches differs) — tests/test_par_mode.py.
+    par_mode: str = "off"
+
+    def __post_init__(self):
+        if self.par_mode not in ("off", "wdos"):
+            raise ValueError(
+                f"par_mode must be 'off' or 'wdos', got {self.par_mode!r}"
+            )
 
     @property
     def max_dl(self) -> int:

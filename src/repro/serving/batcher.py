@@ -16,6 +16,21 @@ overlaps request A's verify (EMAC+COMPUTE) with request B's drafting
 (RERAM+COMPUTE).  That is the paper's Fig. 31.1.5 mechanism lifted from
 intra-request (APSD PAR mode) to cross-request scheduling; the modeled
 speedup vs. the in-order baseline is reported in the batch summary.
+
+With ``par_mode="wdos"`` the overlap is no longer only priced — the engine
+EXECUTES the mixed phase plans (core/scheduler.plan_mixed_slot) as fused
+dispatches, and this module additionally accumulates the *measured*
+fused-slot telemetry (``FusedTelemetry``: slot counts, per-role row
+occupancy, wall seconds by slot kind, and the discrete-event pricing of the
+exact slots that ran).  ``bench_serving.py`` reports the analytic model and
+the measurement side by side so the model stays validated against reality.
+
+Invariants this module owns: a request is admitted only when BOTH pools can
+reserve its worst case (so an active request can never OOM mid-flight);
+admission is head-of-line FIFO (a too-big head blocks the queue rather than
+being overtaken); pages release at retirement, never mid-flight; and every
+(slot, request) binding is stable from admission to retirement — the page
+tables the engine uploads stay valid for the request's whole lifetime.
 """
 from __future__ import annotations
 
@@ -24,11 +39,16 @@ from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import scheduler as sch
-from repro.core.scheduler import Queue
+from repro.core.scheduler import MixedSlotPlan, Queue
 from repro.serving.paged_cache import PagedKVPool, pages_for
 from repro.serving.request import DraftController, Request, RequestState
 
-__all__ = ["BatchConfig", "ContinuousBatcher", "WDOSModelStats"]
+__all__ = [
+    "BatchConfig",
+    "ContinuousBatcher",
+    "WDOSModelStats",
+    "FusedTelemetry",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +98,64 @@ class WDOSModelStats:
         return self.busy[q] / self.wdos_makespan if self.wdos_makespan else 0.0
 
 
+@dataclasses.dataclass
+class FusedTelemetry:
+    """Measured + modeled record of the fused PAR slots actually executed.
+
+    ``slots`` counts every dispatched slot; ``fused_slots`` those where
+    different requests' draft and verify work co-resided in one program
+    (the cross-request overlap itself); ``draft_row_slots`` /
+    ``verify_row_slots`` sum per-slot role occupancy.  Wall seconds are
+    split by which program the slot dispatched — the draft-only micro-step
+    vs the draft+verify fused program (``verify_wall_s`` counts every slot
+    with a verify pass, whether or not a neighbour drafted alongside, so
+    it is deliberately a superset of the ``fused_slots`` numerator) — so
+    the bench can compare the measured serialized cost on this backend
+    against what the WDOS pricing (accumulated into
+    ``modeled_*_makespan`` from the very plans that ran) says decoupled
+    queues would overlap."""
+
+    slots: int = 0
+    fused_slots: int = 0
+    draft_row_slots: int = 0
+    verify_row_slots: int = 0
+    draft_only_wall_s: float = 0.0
+    verify_wall_s: float = 0.0
+    modeled_wdos_makespan: float = 0.0
+    modeled_inorder_makespan: float = 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slots with true cross-request draft/verify overlap."""
+        return self.fused_slots / self.slots if self.slots else 0.0
+
+    @property
+    def mean_rows_per_slot(self) -> float:
+        busy = self.draft_row_slots + self.verify_row_slots
+        return busy / self.slots if self.slots else 0.0
+
+    @property
+    def modeled_overlap_speedup(self) -> float:
+        """What the 4-queue WDOS would save over in-order issue on the
+        slots that actually ran (1.0 when nothing has been recorded)."""
+        if not self.modeled_wdos_makespan:
+            return 1.0
+        return self.modeled_inorder_makespan / self.modeled_wdos_makespan
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "slots": self.slots,
+            "fused_slots": self.fused_slots,
+            "occupancy": self.occupancy,
+            "draft_row_slots": self.draft_row_slots,
+            "verify_row_slots": self.verify_row_slots,
+            "mean_rows_per_slot": self.mean_rows_per_slot,
+            "draft_only_wall_s": self.draft_only_wall_s,
+            "verify_wall_s": self.verify_wall_s,
+            "modeled_overlap_speedup": self.modeled_overlap_speedup,
+        }
+
+
 class ContinuousBatcher:
     """Slot/queue bookkeeping + page-budget admission + WDOS round model."""
 
@@ -105,6 +183,7 @@ class ContinuousBatcher:
         self.admitted = 0
         self.finished: List[Request] = []
         self.wdos = WDOSModelStats()
+        self.fused = FusedTelemetry()
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -205,12 +284,43 @@ class ContinuousBatcher:
         for q in Queue:
             self.wdos.busy[q] += s.busy[q]
 
+    # -- fused PAR slot telemetry (par_mode="wdos") --------------------------
+
+    def record_fused_slot(
+        self, plan: MixedSlotPlan, wall_s: float, verify_width: int
+    ) -> None:
+        """Account one executed fused slot: measured wall time by slot kind
+        plus the discrete-event pricing of exactly this plan (so the model
+        and the measurement always describe the same schedule)."""
+        self.fused.slots += 1
+        self.fused.draft_row_slots += len(plan.draft_rows)
+        self.fused.verify_row_slots += len(plan.verify_rows)
+        if plan.fused:
+            self.fused.fused_slots += 1
+        if plan.verify_rows:
+            self.fused.verify_wall_s += wall_s
+        else:
+            self.fused.draft_only_wall_s += wall_s
+        if not self.cfg.model_wdos:
+            return
+        b = sch.new_builder()
+        sch.mixed_slot_instrs(
+            b, plan, self.t_layers, self.d_layers,
+            self.t_costs, self.d_costs, verify_width,
+        )
+        if not b.instrs:
+            return
+        s = sch.wdos_schedule(b.instrs)
+        base = sch.inorder_schedule(b.instrs)
+        self.fused.modeled_wdos_makespan += s.makespan
+        self.fused.modeled_inorder_makespan += base.makespan
+
     # -- reporting ----------------------------------------------------------
 
     def summary(self) -> Dict[str, object]:
         reqs = self.finished
         drafted = sum(r.drafted for r in reqs)
-        return {
+        out = {
             "requests": len(reqs),
             "rounds": self.rounds,
             "steps": self.step_count,
@@ -221,3 +331,6 @@ class ContinuousBatcher:
             "wdos_modeled_speedup": self.wdos.modeled_speedup,
             "wdos_utilization": {q.name: self.wdos.utilization(q) for q in Queue},
         }
+        if self.fused.slots:
+            out["fused"] = self.fused.as_dict()
+        return out

@@ -9,11 +9,43 @@ while the rest of the batch keeps decoding — the continuous arrival/retire
 pattern the paper's out-of-order WDOS scheduler (Fig. 31.1.5) exploits to
 overlap different requests' draft (RERAM) and verify (EMAC) pipelines.
 
+Two execution modes (``EngineConfig.par_mode``, outputs bit-identical):
+
+* ``"off"`` — two-phase rounds: every active row drafts its window in
+  lockstep micro-steps, then ONE batched verify pass scores everyone.
+* ``"wdos"`` — fused cross-request PAR: each step executes a horizon of
+  mixed phase plans emitted by the WDOS planner
+  (core/scheduler.plan_mixed_slot).  Per slot, window-full rows VERIFY
+  (target model, full window) while the other rows DRAFT their next
+  proposal (draft model, one token) — in one fused XLA dispatch whose
+  per-row role masks keep each model's pool writes confined to the rows
+  that actually use it.  Rows cycle out of phase, so a fast-accepting
+  request commits several windows inside one engine round while a
+  long-window neighbour is still drafting; requests carry mid-window
+  phase state across steps (serving/request.py).
+
 KV lives in DEVICE-RESIDENT block-granular paged pools
 (serving/paged_cache.py allocator + JAX pool arrays): prefill scatters
 straight into pool pages, each batched draft/verify step scatters new
 tokens in place and attends through per-row page tables, and accept/rewind
 is a per-row length update — no per-round host gather/scatter of K/V.
+
+Invariants the hot loop relies on (see docs/ARCHITECTURE.md for the map):
+
+* page-table lifetime stability — a request's pages are reserved AND
+  backed at admission, so its table row uploads once and stays valid from
+  prefill to retirement; only lengths change per round;
+* rewind bounds — a round writes at most ``max_dl + 1`` positions past the
+  committed prefix and always rewinds back to ``committed - 1`` tokens, so
+  the admission-time reservation (prompt + max_tokens + max_dl) is never
+  exceeded and stale tail slots are masked-then-overwritten, never read;
+* role-mask semantics — in fused dispatches a row participates in a model's
+  forward iff its mask bit is set; masked rows are diverted to the pool's
+  scratch page inside the traced forward (models/layers.forward_cache_ctx),
+  so a drafting row can never pollute the target pool and vice versa;
+* per-request determinism — draft/accept PRNG keys are indexed by
+  (request seed, round, position) and rounds count COMMITS, so scheduling
+  (batch composition, two-phase vs fused) never shifts a request's tokens.
 
 Sampling is per request (``api.SamplingParams``): ``temperature == 0`` is
 greedy and bit-identical per request to the single-request reference
@@ -38,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import scheduler as sch
 from repro.core.apsd import PAR, APSDConfig, APSDStats, RoundRecord
 from repro.core.speculative import (
     LMInterface,
@@ -180,6 +213,7 @@ def _empty_summary(cfg) -> dict:
         "acceptance_rate": 0.0, "target_pool": None, "draft_pool": None,
         "wdos_modeled_speedup": 1.0,
         "wdos_utilization": {},
+        "par_mode": getattr(cfg, "par_mode", "off"),
         "kv_path": getattr(cfg, "kv_path", "paged"),
         "kv_copy_s": 0.0,
         "table_upload_s": 0.0,
@@ -242,6 +276,64 @@ def _make_paged_step(model: ServingModel):
     return step
 
 
+def _make_fused_step(target: ServingModel, draft: ServingModel):
+    """jit of ONE fused PAR dispatch: the target model's verify pass (width
+    ``max_dl + 1``, rows selected by `v_mask`) and the draft model's
+    micro-step (width 1, rows selected by `d_mask`) in a SINGLE XLA
+    program.  The two subgraphs share no values, so the compiler is free to
+    overlap them — the TPU analogue of the chip issuing TLM work to the
+    EMAC queue while DLM work streams from RERAM.  Masked rows are diverted
+    to each pool's scratch page inside the traced forward
+    (models/layers.forward_cache_ctx role-mask semantics), so a drafting
+    row never writes the target pool and a verifying row's target writes
+    never leak into its neighbour's pages.  Widths are FIXED per engine
+    (verify always max_dl + 1, causally padded), so the program compiles
+    once, not per round shape."""
+
+    @partial(jax.jit, donate_argnums=(4, 5, 6, 7))
+    def step(t_params, d_params, v_tokens, d_tokens,
+             t_pk, t_pv, d_pk, d_pv,
+             t_table, t_len, d_table, d_len, v_mask, d_mask):
+        t_cache = {
+            "lengths": t_len,
+            "page_table": t_table,
+            "role_mask": v_mask,
+            "attn": {"k": t_pk, "v": t_pv},
+        }
+        v_logits, t_nc = target._apply(t_params, v_tokens, t_cache)
+        d_cache = {
+            "lengths": d_len,
+            "page_table": d_table,
+            "role_mask": d_mask,
+            "attn": {"k": d_pk, "v": d_pv},
+        }
+        d_logits, d_nc = draft._apply(d_params, d_tokens, d_cache)
+        return (v_logits, d_logits,
+                t_nc["attn"]["k"], t_nc["attn"]["v"],
+                d_nc["attn"]["k"], d_nc["attn"]["v"])
+
+    return step
+
+
+def _make_masked_draft_step(draft: ServingModel):
+    """jit of a draft-only PAR slot (no row is window-full): one draft
+    micro-step with the per-row role mask, so rows retired mid-step stay
+    inert without re-uploading the page table."""
+
+    @partial(jax.jit, donate_argnums=(2, 3))
+    def step(params, tokens, pool_k, pool_v, page_table, lengths, mask):
+        cache = {
+            "lengths": lengths,
+            "page_table": page_table,
+            "role_mask": mask,
+            "attn": {"k": pool_k, "v": pool_v},
+        }
+        logits, nc = draft._apply(params, tokens, cache)
+        return logits, nc["attn"]["k"], nc["attn"]["v"]
+
+    return step
+
+
 @partial(jax.jit, donate_argnums=(0, 1))
 def _scatter_prefill(pool_k, pool_v, k_dense, v_dense, pages, n):
     """Scatter a freshly prefilled request's first `n` cache rows straight
@@ -298,9 +390,15 @@ class _TableSet:
         self.lengths[:] = 0
         for slot, seq in rows:
             self.lengths[slot] = seq.length
+        return self.table_dev(), jax.block_until_ready(jnp.asarray(self.lengths))
+
+    def table_dev(self):
+        """The cached device page table alone (fused PAR slots build their
+        per-slot lengths/masks themselves; the table row for every active
+        request is lifetime-stable, so one upload serves the whole step)."""
         if self._table_dev is None:
             self._table_dev = jax.block_until_ready(jnp.asarray(self.table))
-        return self._table_dev, jax.block_until_ready(jnp.asarray(self.lengths))
+        return self._table_dev
 
 
 # ---------------------------------------------------------------------------
@@ -372,6 +470,9 @@ class Engine:
         )
         self._t_iface, self._d_iface = make_interface(target), make_interface(draft)
         self._t_step, self._d_step = _make_paged_step(target), _make_paged_step(draft)
+        if cfg.par_mode == "wdos":
+            self._fused_step = _make_fused_step(target, draft)
+            self._draft_slot_step = _make_masked_draft_step(draft)
         self._t_tables = _TableSet(cfg.max_batch, self._t_pool, self.max_model_len)
         self._d_tables = _TableSet(cfg.max_batch, self._d_pool, self.max_model_len)
         self._table_upload_s = 0.0  # tiny int32 uploads (all that remains)
@@ -459,11 +560,8 @@ class Engine:
         seq.advance(plen - 1)
         return pool_k, pool_v
 
-    def step(self) -> List[RequestOutput]:
-        """Admit what fits, then run ONE batched draft/verify round over
-        every active request.  Returns a ``RequestOutput`` per request that
-        progressed, with the incrementally verified tokens."""
-        cfg = self.cfg
+    def _admit(self) -> None:
+        """Admit whatever fits and prefill it into both pools."""
         for slot, req in self._batcher.admit():
             self._t_pk, self._t_pv = self._prefill_into(
                 req, self._t_iface, self.target.params, req.t_seq,
@@ -474,6 +572,22 @@ class Engine:
                 self._d_pk, self._d_pv, self._d_tables, slot,
             )
             req.state = RequestState.DECODE
+
+    def step(self) -> List[RequestOutput]:
+        """Admit what fits, then run ONE engine round over every active
+        request — a two-phase draft-all-then-verify-all round
+        (``par_mode="off"``) or a horizon of WDOS-planned fused PAR
+        dispatches (``par_mode="wdos"``).  Returns a ``RequestOutput`` per
+        request that progressed, with the incrementally verified tokens.
+        The two modes emit bit-identical tokens; "wdos" may commit more
+        than one window per request per round."""
+        if self.cfg.par_mode == "wdos":
+            return self._step_fused()
+        return self._step_two_phase()
+
+    def _step_two_phase(self) -> List[RequestOutput]:
+        cfg = self.cfg
+        self._admit()
         active = self._batcher.active()
         if not active:
             self._batcher.step_count += 1
@@ -596,6 +710,196 @@ class Engine:
             for req, delta in progressed
         ]
 
+    # -- the fused cross-request PAR round (par_mode="wdos") -----------------
+
+    def _step_fused(self) -> List[RequestOutput]:
+        """One engine round as a horizon of FUSED dispatches.
+
+        The horizon is ``max_dl + 2`` slots — the same dispatch budget a
+        two-phase round spends (``round_dl + 1`` draft micro-steps plus one
+        verify pass) — but rows are no longer in lockstep: each slot the
+        WDOS planner (core/scheduler.plan_mixed_slot) sends window-full
+        rows to VERIFY and everyone else to DRAFT, both executed in one
+        fused XLA program.  A short-window row therefore verifies, commits,
+        opens its next window and keeps drafting while a long-window
+        neighbour is still proposing — which is exactly how the fused mode
+        drains staggered/heterogeneous workloads in fewer rounds than the
+        two-phase scheduler (tests/test_par_mode.py asserts both the
+        round count and bit-identical tokens).  Mid-window phase state
+        carries across steps; every active row completes at least one
+        verify per round (its remaining cycle is at most ``max_dl + 1``
+        slots), so each round streams tokens for every active request."""
+        cfg = self.cfg
+        self._admit()
+        if not self._batcher.active():
+            self._batcher.step_count += 1
+            return []
+        wv = cfg.max_dl + 1  # fixed verify width: one compiled program
+        horizon = cfg.max_dl + 2
+        b = cfg.max_batch
+        touched: Dict[int, Request] = {
+            req.rid: req for _, req in self._batcher.active()
+        }
+        prev_out = {
+            rid: min(len(req.out), req.max_new_tokens)
+            for rid, req in touched.items()
+        }
+        work: List[Tuple[Request, int]] = []
+
+        # page tables are lifetime-stable: one cached upload serves every
+        # slot of the step (rows retired mid-step are inert via the masks)
+        t0 = time.perf_counter()
+        d_table = self._d_tables.table_dev()
+        t_table = self._t_tables.table_dev()
+        self._table_upload_s += time.perf_counter() - t0
+
+        for _ in range(horizon):
+            active = self._batcher.active()
+            if not active:
+                break
+            by_slot = dict(active)
+            for _, req in active:
+                if req.pending_dl is None:
+                    req.begin_window(req.controller.draft_len())
+            plan = sch.plan_mixed_slot([
+                sch.RowPhase(slot=s, window=r.pending_dl,
+                             drafted=len(r.pending))
+                for s, r in active
+            ])
+
+            # assemble the slot's per-row inputs (O(B) int32 host work)
+            d_tok = np.zeros((b, 1), np.int32)
+            d_len = np.zeros((b,), np.int32)
+            d_mask = np.zeros((b,), bool)
+            for slot in plan.draft_rows:
+                req = by_slot[slot]
+                d_tok[slot, 0] = req.draft_tip
+                d_len[slot] = req.d_seq.length + len(req.pending)
+                d_mask[slot] = True
+            for slot in plan.verify_rows:
+                # the window's straggler: the draft side feeds the final
+                # proposal WHILE the target verifies — intra-request overlap
+                # riding along in the same fused program
+                req = by_slot[slot]
+                d_tok[slot, 0] = int(req.pending[-1])
+                d_len[slot] = req.d_seq.length + req.pending_dl
+                d_mask[slot] = True
+
+            slot_t0 = time.perf_counter()
+            if plan.verify_rows:
+                v_tok = np.zeros((b, wv), np.int32)
+                t_len = np.zeros((b,), np.int32)
+                v_mask = np.zeros((b,), bool)
+                for slot in plan.verify_rows:
+                    req = by_slot[slot]
+                    v_tok[slot, 0] = req.last_tok
+                    v_tok[slot, 1: 1 + req.pending_dl] = req.pending
+                    t_len[slot] = req.t_seq.length
+                    v_mask[slot] = True
+                (v_logits, d_logits, self._t_pk, self._t_pv,
+                 self._d_pk, self._d_pv) = self._fused_step(
+                    self.target.params, self.draft.params,
+                    jnp.asarray(v_tok), jnp.asarray(d_tok),
+                    self._t_pk, self._t_pv, self._d_pk, self._d_pv,
+                    t_table, jnp.asarray(t_len),
+                    d_table, jnp.asarray(d_len),
+                    jnp.asarray(v_mask), jnp.asarray(d_mask),
+                )
+                v_np = np.asarray(v_logits)
+            else:
+                d_logits, self._d_pk, self._d_pv = self._draft_slot_step(
+                    self.draft.params, jnp.asarray(d_tok),
+                    self._d_pk, self._d_pv,
+                    d_table, jnp.asarray(d_len), jnp.asarray(d_mask),
+                )
+                v_np = None
+            # only drafting rows consume draft logits; skip the (B, V)
+            # device->host pull on all-verify slots
+            d_np = np.asarray(d_logits[:, -1, :]) if plan.draft_rows else None
+            self._batcher.record_fused_slot(
+                plan, time.perf_counter() - slot_t0, wv
+            )
+
+            # draft rows: append the next proposal (same argmax/sampling
+            # rule and the same (round, position) key indices as the
+            # two-phase path, so tokens are bit-identical across modes)
+            for slot in plan.draft_rows:
+                req = by_slot[slot]
+                sp = req.sampling
+                row = d_np[slot]
+                if sp.greedy:
+                    nxt = int(np.argmax(row))
+                else:
+                    nxt = sample_token_host(
+                        req.draft_key(len(req.pending)), row,
+                        sp.temperature, sp.top_k,
+                    )
+                    req.pending_q.append(row.copy())
+                req.pending.append(nxt)
+
+            # verify rows: per-row accept/commit, then advance/rewind both
+            # sequences back to committed-1 (the rewind-bounds invariant)
+            for slot in plan.verify_rows:
+                req = by_slot[slot]
+                dl = req.pending_dl
+                sp = req.sampling
+                mode = req.controller.mode
+                drafts = np.asarray(req.pending, np.int64)
+                if sp.greedy:
+                    new, n_acc = speculative_accept_greedy_host(
+                        drafts, v_np[slot], dl
+                    )
+                else:
+                    new, n_acc = speculative_sample_host(
+                        req.accept_key(), drafts, v_np[slot],
+                        np.stack(req.pending_q), dl,
+                        sp.temperature, sp.top_k,
+                    )
+                req.commit(new)
+                req.record_round(mode, dl, n_acc, len(new))
+                req.rounds += 1
+                req.drafted += dl
+                req.accepted += n_acc
+                req.controller.observe(n_acc, dl)
+                work.append((req, dl))
+                # target wrote wv positions, draft dl + 1 (incl. straggler);
+                # both keep exactly n_acc + 1
+                req.t_seq.advance(wv)
+                req.t_seq.rewind(wv - 1 - n_acc, release_pages=False)
+                req.d_seq.advance(dl + 1)
+                req.d_seq.rewind(dl - n_acc, release_pages=False)
+                req.clear_window()
+                if req.done:
+                    # retire MID-STEP: the freed slot's mask bits go False
+                    # for the remaining slots (its stale table rows are
+                    # never dereferenced), and its pages are free for the
+                    # next step's admissions
+                    self._t_tables.clear_row(slot)
+                    self._d_tables.clear_row(slot)
+                    self._batcher.retire(slot)
+
+        self._batcher.model_round(work)
+        self._batcher.step_count += 1
+
+        progressed = [
+            (req, req.out[prev_out[rid]: req.max_new_tokens])
+            for rid, req in touched.items()
+        ]
+        return [
+            RequestOutput(
+                request_id=req.rid,
+                prompt_token_ids=[int(t) for t in req.prompt],
+                new_token_ids=[int(t) for t in delta],
+                finished=req.state is RequestState.FINISHED,
+                outputs=[CompletionOutput(
+                    index=0,
+                    token_ids=[int(t) for t in req.out[: req.max_new_tokens]],
+                    finish_reason=req.finish_reason,
+                )],
+            )
+            for req, delta in progressed
+        ]
+
     # -- drain / reporting ---------------------------------------------------
 
     def run(
@@ -633,6 +937,7 @@ class Engine:
     def summary(self) -> dict:
         s = self._batcher.summary()
         s["kv_path"] = "paged"
+        s["par_mode"] = self.cfg.par_mode
         s["kv_copy_s"] = 0.0  # no host K/V copies exist on this path
         s["table_upload_s"] = self._table_upload_s
         return s

@@ -30,6 +30,29 @@ Two storage modes:
 
 The Pallas ``kernels/paged_attn.py`` kernel attends *in place* through the
 page table (no gather) — same page layout either way.
+
+Invariants (what the engine's hot loop is allowed to assume):
+
+* **Page-table lifetime stability** — in device-resident mode a sequence's
+  pages are reserved at admission AND backed eagerly (``ensure_backed``),
+  so ``pages`` never changes between admission and release: the engine
+  uploads each request's table row once and reuses it for every dispatch
+  of the request's lifetime, including whole fused-PAR steps.
+* **Rewind bounds** — ``rewind(n)`` requires ``0 <= n <= length`` (both
+  validated); with ``release_pages=False`` it is a pure O(1) length update
+  that never touches pages or data.  Callers may transiently ``advance``
+  up to the reservation's capacity (a draft/verify window past the
+  committed prefix) before rewinding back — the admission-time reservation
+  (prompt + max_new_tokens + max draft window) is exactly the high-water
+  bound that makes this safe.
+* **Stale slots are write-before-read** — data past ``length`` is garbage
+  by contract; every consumer masks by length and every new write lands at
+  ``length``-relative positions, so rewound windows are overwritten before
+  they could ever be attended.
+* **Scratch page** — the device arrays carry one extra page (index
+  ``num_pages``) the allocator never hands out; inactive or role-masked
+  batch rows write there (duplicate writes are harmless because nothing
+  reads it).
 """
 from __future__ import annotations
 

@@ -13,6 +13,18 @@ Every request also carries its own ``SamplingParams`` and — for
 request's seed and indexed by (stream, round, position), never drawn from a
 shared counter, so a request's sampled tokens are identical no matter which
 batch composition the engine happens to schedule it into.
+
+Under fused cross-request PAR execution (``EngineConfig(par_mode="wdos")``)
+a request additionally carries its PHASE state: the draft window currently
+in flight (``begin_window`` / ``pending`` / ``window_full``).  Phase state
+persists ACROSS engine steps — a request may end a step mid-draft and
+resume proposing where it left off while a neighbouring row verifies — and
+is what lets the WDOS planner schedule rows out of order.  Invariants: the
+window's proposals are exactly the tokens whose draft-model KV has been
+scattered at positions ``d_seq.length + [0, len(pending))``; a window is
+verified only when full; ``rounds`` (the key-stream round index) increments
+only at commit, so draft/accept keys are identical whether the engine runs
+two-phase or fused rounds.
 """
 from __future__ import annotations
 
@@ -92,6 +104,15 @@ class Request:
         default_factory=list
     )
 
+    # -- fused-PAR phase state (par_mode="wdos"): the draft window in flight.
+    # pending_dl is None between windows; pending holds the proposals made so
+    # far (their draft KV sits at d_seq.length + [0, len(pending))); pending_q
+    # mirrors pending with the draft logits sampled rows need for the
+    # rejection rule.  Survives across engine steps (mid-draft carry-over).
+    pending_dl: Optional[int] = None
+    pending: List[int] = dataclasses.field(default_factory=list)
+    pending_q: List[np.ndarray] = dataclasses.field(default_factory=list)
+
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.prompt.shape[0] < 2:
@@ -118,6 +139,32 @@ class Request:
         """Key for the current round's rejection-sampling accept/residual."""
         k = jax.random.fold_in(self._key(), _ACCEPT_STREAM)
         return jax.random.fold_in(k, self.rounds)
+
+    # -- fused-PAR window phase ----------------------------------------------
+
+    def begin_window(self, dl: int) -> None:
+        """Open a fresh draft window of `dl` proposals (fused-PAR mode)."""
+        if dl < 1:
+            raise ValueError(f"draft window must be >= 1, got {dl}")
+        self.pending_dl = dl
+        self.pending = []
+        self.pending_q = []
+
+    def clear_window(self) -> None:
+        self.pending_dl = None
+        self.pending = []
+        self.pending_q = []
+
+    @property
+    def window_full(self) -> bool:
+        """Ready to verify: every proposal of the open window is drafted."""
+        return self.pending_dl is not None and len(self.pending) >= self.pending_dl
+
+    @property
+    def draft_tip(self) -> int:
+        """Token the next draft micro-step consumes: the last proposal of
+        the open window, or the committed tip when the window is empty."""
+        return int(self.pending[-1]) if self.pending else self.last_tok
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -154,6 +201,7 @@ class Request:
 
     def finish(self, step: int, reason: str = "length") -> None:
         self.state = RequestState.FINISHED
+        self.clear_window()
         if self.finish_reason is None:
             self.finish_reason = reason
         self.finished_step = step
