@@ -1,0 +1,211 @@
+"""Open-loop latency benchmark of the async serving front-end.
+
+The paper's headline is tokens/s *delivered to a consumer*; this harness
+measures what a consumer actually sees under live traffic.  An open-loop
+Poisson load generator fires requests at the ``AsyncEngine`` at a fixed
+arrival rate — arrivals do NOT wait for completions, so queueing delay is
+measured honestly rather than hidden by a closed loop — and records, per
+request:
+
+* **TTFT** — time from arrival to the first streamed token (admission wait
+  + prefill + the first committed round);
+* **ITL** — inter-token latency between streamed chunks (tokens committed
+  by the same round share an arrival instant: speculative decoding's
+  bursty delivery is part of the signal, not noise);
+* **E2E** — arrival to final token.
+
+p50/p95/p99 of each, plus aggregate tokens/s over the makespan, at several
+arrival rates, A/B across ``par_mode={off,wdos}`` — the fused WDOS rounds
+exist precisely to drain staggered arrival faster, and this harness is the
+first driver that actually generates that workload shape (HADES-style
+serving-layer saturation).
+
+Results merge into ``BENCH_serving.json`` under ``"async_load"`` (the file
+``bench_serving.py`` starts; run that first, or point ``--json``
+elsewhere) so the latency trajectory is tracked across PRs alongside the
+throughput rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_server [--smoke]
+        [--par-mode {off,wdos,both}] [--rates 2,8] [--json PATH]
+"""
+import argparse
+import asyncio
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _percentiles(xs):
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    return {
+        "p50": float(np.percentile(xs, 50)),
+        "p95": float(np.percentile(xs, 95)),
+        "p99": float(np.percentile(xs, 99)),
+    }
+
+
+async def _one_request(aeng, prompt, sp, rec):
+    """Drive one request and record its arrival-relative latencies."""
+    t_arrival = time.perf_counter()
+    token_times = []
+    async for out in aeng.generate(prompt, sp):
+        now = time.perf_counter()
+        token_times.extend([now] * len(out.new_token_ids))
+    if not token_times:
+        return
+    rec["ttft"].append(token_times[0] - t_arrival)
+    rec["e2e"].append(token_times[-1] - t_arrival)
+    rec["itl"].extend(
+        b - a for a, b in zip(token_times[:-1], token_times[1:])
+    )
+    rec["tokens"] += len(token_times)
+
+
+async def _load(aeng, prompts, sps, arrivals, rec):
+    """Open loop: each request fires at its Poisson arrival offset,
+    regardless of how far behind the engine is running."""
+    t0 = time.perf_counter()
+
+    async def fire(i):
+        delay = arrivals[i] - (time.perf_counter() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        await _one_request(aeng, prompts[i], sps[i], rec)
+
+    await asyncio.gather(*[fire(i) for i in range(len(prompts))])
+    rec["makespan_s"] = time.perf_counter() - t0
+
+
+def _run_mode(par_mode, rates, n_req, max_tokens, target, draft, seed=0):
+    """One engine per par_mode, reused across rates (steady-state jits —
+    the state a long-lived server runs in)."""
+    from repro.serving import (
+        AsyncEngine, Engine, EngineConfig, SamplingParams,
+    )
+
+    rng = np.random.RandomState(seed)
+    prompts = [
+        rng.randint(0, target.cfg.vocab, size=rng.randint(3, 8)).astype(np.int32)
+        for _ in range(n_req)
+    ]
+    sps = [SamplingParams(max_tokens=max_tokens) for _ in range(n_req)]
+    engine = Engine(target, draft, EngineConfig(
+        max_batch=4, page_size=16, adaptive=True, short_dl=2, long_dl=6,
+        par_mode=par_mode,
+    ))
+    results = {}
+
+    async def _all_rates():
+        async with AsyncEngine(engine, max_queued=n_req) as aeng:
+            # warmup: trace the jitted steps once so the first measured
+            # rate reports steady-state latency, not compile time
+            warm = {"ttft": [], "itl": [], "e2e": [], "tokens": 0}
+            await _load(aeng, prompts[:2], sps[:2], np.zeros(2), warm)
+            for rate in rates:
+                arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_req))
+                rec = {"ttft": [], "itl": [], "e2e": [], "tokens": 0}
+                await _load(aeng, prompts, sps, arrivals, rec)
+                results[rate] = {
+                    "rate_req_s": rate,
+                    "requests": n_req,
+                    "max_tokens": max_tokens,
+                    "tokens_per_s": rec["tokens"] / max(rec["makespan_s"], 1e-9),
+                    "makespan_s": rec["makespan_s"],
+                    "ttft_s": _percentiles(rec["ttft"]),
+                    "itl_s": _percentiles(rec["itl"]),
+                    "e2e_s": _percentiles(rec["e2e"]),
+                }
+
+    asyncio.run(_all_rates())
+    return results
+
+
+def run(smoke: bool = False, par_mode: str = "both", rates=None,
+        json_path: str = None):
+    from repro.launch.serve import build_pair
+
+    n_req = 6 if smoke else 16
+    max_tokens = 8 if smoke else 24
+    if rates is None:
+        rates = [2.0, 8.0] if smoke else [1.0, 4.0, 16.0]
+    modes = ["off", "wdos"] if par_mode == "both" else [par_mode]
+
+    target, draft = build_pair(seed=0, s_max=256, quantize=False)
+    rows = []
+    record = {
+        "meta": {"smoke": smoke, "rates_req_s": list(rates), "modes": modes},
+    }
+    for mode in modes:
+        record[mode] = {}
+        per_rate = _run_mode(mode, rates, n_req, max_tokens, target, draft)
+        for rate, entry in per_rate.items():
+            record[mode][str(rate)] = entry
+            rows.append((
+                f"server_load_{mode}_r{rate:g}", 0.0,
+                f"{entry['tokens_per_s']:.1f} tok/s; "
+                f"TTFT p50/p99 {entry['ttft_s']['p50'] * 1e3:.0f}/"
+                f"{entry['ttft_s']['p99'] * 1e3:.0f} ms; "
+                f"ITL p50 {entry['itl_s']['p50'] * 1e3:.0f} ms; "
+                f"E2E p99 {entry['e2e_s']['p99'] * 1e3:.0f} ms",
+            ))
+    if len(modes) == 2:
+        hi = max(rates)
+        off_p99 = record["off"][str(hi)]["e2e_s"]["p99"]
+        wd_p99 = record["wdos"][str(hi)]["e2e_s"]["p99"]
+        rows.append((
+            "server_load_wdos_e2e_p99_vs_off", 0.0,
+            f"{off_p99 * 1e3:.0f} -> {wd_p99 * 1e3:.0f} ms at "
+            f"{hi:g} req/s (same tokens)",
+        ))
+
+    if json_path:
+        # merge into the serving trajectory file bench_serving.py starts
+        merged = {}
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as f:
+                    merged = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        merged["async_load"] = record
+        with open(json_path, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        rows.append(("server_load_json", 0.0, json_path))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument(
+        "--par-mode", choices=["off", "wdos", "both"], default="both",
+        help="A/B the two round schedulers under identical Poisson load",
+    )
+    ap.add_argument(
+        "--rates", default=None,
+        help="comma-separated arrival rates in req/s (default: sized to "
+             "--smoke)",
+    )
+    ap.add_argument(
+        "--json", default="BENCH_serving.json", metavar="PATH",
+        help="merge latency percentiles into this trajectory file under "
+             "'async_load'; '' disables",
+    )
+    args = ap.parse_args(argv)
+    rates = (
+        [float(r) for r in args.rates.split(",")] if args.rates else None
+    )
+    print("name,us_per_call,derived")
+    for n, us, derived in run(
+        smoke=args.smoke, par_mode=args.par_mode, rates=rates,
+        json_path=args.json or None,
+    ):
+        print(f"{n},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

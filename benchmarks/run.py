@@ -15,7 +15,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     from benchmarks import (
         bench_apsd, bench_bvq, bench_e2e, bench_kernels, bench_lru,
-        bench_serving, roofline_report,
+        bench_server, bench_serving, roofline_report,
     )
 
     suites = {
@@ -25,6 +25,7 @@ def main(argv=None):
         "e2e": bench_e2e,
         "kernels": bench_kernels,
         "serving": bench_serving,
+        "server": bench_server,
         "roofline": roofline_report,
     }
     if args.only:

@@ -25,6 +25,17 @@ echo "== paged-path kernel smoke (batch 4, Pallas interpret mode) =="
 python -m benchmarks.bench_serving --smoke --kv-path paged --paged-attn pallas \
     --json BENCH_serving_pallas.json
 
+echo "== HTTP serving front-end smoke (stream, stop/top_p, disconnect->abort, 429) =="
+# Spins up serving/server.py over asyncio streams and drives it with raw
+# socket clients: SSE bit-identity vs Engine.run, a mid-stream disconnect
+# that must return every pool page, and a fail-fast 429 under saturation.
+python scripts/server_smoke.py
+
+echo "== open-loop Poisson load harness (TTFT/ITL/E2E percentiles) =="
+# Appends "async_load" latency percentiles (A/B par_mode off vs wdos at
+# several arrival rates) into the BENCH_serving.json written above.
+python -m benchmarks.bench_server --smoke --json BENCH_serving.json
+
 echo "== serving perf record =="
 python - <<'EOF'
 import json
@@ -38,6 +49,14 @@ if par:
           {m: par[m]["rounds_to_drain"] for m in par},
           "fused occupancy:",
           round(par["wdos"].get("fused", {}).get("occupancy", 0.0), 3))
+load = json.load(open("BENCH_serving.json")).get("async_load")
+if load:
+    for mode in load["meta"]["modes"]:
+        for rate, e in sorted(load[mode].items(), key=lambda kv: float(kv[0])):
+            print(f"async {mode} @{rate} req/s:",
+                  f"{e['tokens_per_s']:.1f} tok/s,",
+                  f"TTFT p99 {e['ttft_s']['p99']*1e3:.0f} ms,",
+                  f"E2E p99 {e['e2e_s']['p99']*1e3:.0f} ms")
 EOF
 
 echo "== tier-1 tests (gate) =="

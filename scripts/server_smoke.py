@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""CI smoke for the HTTP serving front-end (scripts/ci.sh gate).
+
+Spins up ``CompletionServer`` on a free port over the smoke-scale toy pair
+and drives it with raw-socket HTTP clients:
+
+1. **bit-identity through the wire** — a streamed SSE completion and a
+   non-streamed one must both reproduce the synchronous ``Engine.run``
+   tokens exactly (greedy, fixed seed);
+2. **stop + top_p end-to-end** — the sampling satellites applied via the
+   HTTP payload;
+3. **disconnect → abort** — a client hangs up mid-stream; ``/stats`` must
+   show every pool page returned;
+4. **backpressure** — an over-limit ``"wait": false`` submit must get
+   HTTP 429 while the queue is saturated.
+
+Exit 0 on success, non-zero (with an assertion message) on any failure.
+
+    PYTHONPATH=src python scripts/server_smoke.py
+"""
+import asyncio
+import json
+import sys
+
+import numpy as np
+
+
+async def _request(port, method, path, payload=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps(payload).encode() if payload is not None else b""
+    writer.write(
+        (
+            f"{method} {path} HTTP/1.1\r\nHost: ci\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n"
+        ).encode() + body
+    )
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    return status, rest
+
+
+async def _stream(port, payload):
+    """POST a streaming completion; return (status, [chunk dicts])."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps(dict(payload, stream=True)).encode()
+    writer.write(
+        (
+            "POST /v1/completions HTTP/1.1\r\nHost: ci\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n"
+        ).encode() + body
+    )
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    if status != 200:
+        return status, []
+    events = [e for e in rest.decode().split("\n\n") if e.strip()]
+    assert events[-1] == "data: [DONE]", f"missing [DONE]: {events[-1]!r}"
+    assert all(e.startswith("data: ") for e in events), "bad SSE framing"
+    return status, [json.loads(e[len("data: "):]) for e in events[:-1]]
+
+
+async def main():
+    from repro.launch.serve import build_pair
+    from repro.serving import (
+        AsyncEngine, CompletionServer, Engine, EngineConfig, SamplingParams,
+    )
+
+    print("building smoke pair ...")
+    target, draft = build_pair(seed=0, s_max=128, quantize=False)
+    rng = np.random.RandomState(0)
+    prompts = [
+        [int(t) for t in rng.randint(0, 512, size=5)] for _ in range(4)
+    ]
+
+    # synchronous reference for the bit-identity check
+    ref_eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+    ref_outs, _ = ref_eng.run([np.asarray(prompts[0], np.int32)],
+                              SamplingParams(max_tokens=10))
+    ref = [int(t) for t in ref_outs[0]]
+
+    engine = Engine(target, draft, EngineConfig(
+        max_batch=2, page_size=8, max_model_len=128,
+    ))
+    server = CompletionServer(AsyncEngine(engine, max_queued=1))
+    await server.start(port=0)
+    port = server.port
+    serve_task = asyncio.ensure_future(server.serve_forever())
+    print(f"server up on :{port}")
+
+    status, body = await _request(port, "GET", "/healthz")
+    assert status == 200 and json.loads(body)["status"] == "ok"
+
+    # 1. bit-identity: streamed and whole completions == Engine.run
+    status, chunks = await _stream(
+        port, {"prompt": prompts[0], "max_tokens": 10}
+    )
+    toks = [c["token"] for c in chunks if c["token"] is not None]
+    assert status == 200 and toks == ref, f"SSE tokens {toks} != ref {ref}"
+    assert chunks[-1]["finish_reason"] == "length"
+    status, body = await _request(
+        port, "POST", "/v1/completions",
+        {"prompt": prompts[0], "max_tokens": 10},
+    )
+    assert status == 200 and json.loads(body)["token_ids"] == ref
+    print("bit-identity through HTTP OK")
+
+    # 2. stop + top_p through the payload
+    stop_s = f"{ref[4]} "
+    status, body = await _request(
+        port, "POST", "/v1/completions",
+        {"prompt": prompts[0], "max_tokens": 10, "stop": stop_s},
+    )
+    obj = json.loads(body)
+    assert obj["token_ids"] == ref[:4] and obj["finish_reason"] == "stop", obj
+    status, body = await _request(
+        port, "POST", "/v1/completions",
+        {"prompt": prompts[0], "max_tokens": 10,
+         "temperature": 0.8, "top_p": 1e-6, "seed": 3},
+    )
+    assert json.loads(body)["token_ids"] == ref  # nucleus->argmax == greedy
+    print("stop + top_p through HTTP OK")
+
+    # 3. disconnect mid-stream -> abort -> pages return
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps({
+        "prompt": prompts[1], "max_tokens": 100, "stream": True,
+    }).encode()
+    writer.write(
+        (
+            "POST /v1/completions HTTP/1.1\r\nHost: ci\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n"
+        ).encode() + body
+    )
+    await writer.drain()
+    await reader.readuntil(b"\r\n\r\n")
+    await reader.readuntil(b"\n\n")  # first token chunk
+    writer.close()  # hang up mid-generation
+    st = {}
+    for _ in range(200):
+        status, body = await _request(port, "GET", "/stats")
+        st = json.loads(body)
+        if st["target_pool"]["used_pages"] == 0 and st["active"] == 0:
+            break
+        await asyncio.sleep(0.05)
+    assert st["target_pool"]["used_pages"] == 0, st["target_pool"]
+    assert st["target_pool"]["reserved_pages"] == 0, st["target_pool"]
+    assert st["draft_pool"]["used_pages"] == 0, st["draft_pool"]
+    print("disconnect -> abort returned every pool page OK")
+
+    # 4. backpressure: saturate the 1-deep admission queue, expect 429
+    hog_tasks = [
+        asyncio.ensure_future(_stream(
+            port, {"prompt": prompts[i], "max_tokens": 40, "seed": i}
+        ))
+        for i in range(3)  # 2 slots + 1 queued = gate full
+    ]
+    got_429 = False
+    for _ in range(200):
+        status, _chunks = await _stream(
+            port, {"prompt": prompts[3], "max_tokens": 4, "wait": False}
+        )
+        if status == 429:
+            got_429 = True
+            break
+        await asyncio.sleep(0.02)
+    await asyncio.gather(*hog_tasks)
+    assert got_429, "never observed HTTP 429 while the queue was saturated"
+    print("backpressure 429 OK")
+
+    serve_task.cancel()
+    try:
+        await serve_task
+    except asyncio.CancelledError:
+        pass
+    await server.stop()
+    print("server smoke PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(asyncio.run(main()))

@@ -168,6 +168,28 @@ def _top_k_filter_host(logits: np.ndarray, top_k: int) -> np.ndarray:
     return np.where(logits < thresh, -np.inf, logits)
 
 
+def _top_p_filter_host(logits: np.ndarray, top_p: float) -> np.ndarray:
+    """Nucleus filter: keep the minimal set of tokens whose probability mass
+    reaches ``top_p``, set the rest to -inf.
+
+    Applied to temperature-scaled logits (the nucleus depends on the
+    sampling temperature, unlike top-k).  Ties are broken by token id via a
+    stable sort, so the kept set is deterministic — a request's nucleus
+    never depends on batch composition.  ``top_p >= 1`` is the identity."""
+    if top_p >= 1.0:
+        return logits
+    probs = _softmax_host(np.asarray(logits, np.float32))
+    order = np.argsort(-probs, axis=-1, kind="stable")  # desc, low id first
+    sorted_p = np.take_along_axis(probs, order, axis=-1)
+    cum = np.cumsum(sorted_p, axis=-1)
+    # keep while the mass BEFORE a token is < top_p: the minimal prefix
+    # whose inclusive mass reaches top_p (the top token always survives)
+    keep_sorted = (cum - sorted_p) < top_p
+    keep = np.zeros(probs.shape, bool)
+    np.put_along_axis(keep, order, keep_sorted, axis=-1)
+    return np.where(keep, logits, -np.inf)
+
+
 def _softmax_host(logits: np.ndarray) -> np.ndarray:
     x = logits - np.max(logits, axis=-1, keepdims=True)
     e = np.exp(x)
@@ -175,16 +197,19 @@ def _softmax_host(logits: np.ndarray) -> np.ndarray:
 
 
 def sample_token_host(
-    key: jax.Array, logits: np.ndarray, temperature: float, top_k: int = 0
+    key: jax.Array, logits: np.ndarray, temperature: float, top_k: int = 0,
+    top_p: float = 1.0,
 ) -> int:
-    """Sample one token from (temperature/top-k filtered) logits with an
-    explicit key — the per-request draft-sampling step of the batched
+    """Sample one token from (temperature/top-k/top-p filtered) logits with
+    an explicit key — the per-request draft-sampling step of the batched
     engine.  Deterministic in (key, logits, params) only, so a request's
-    draw never depends on its batch composition."""
+    draw never depends on its batch composition.  ``top_p == 1`` leaves the
+    historical temperature/top-k path bitwise untouched."""
     lg = _top_k_filter_host(np.asarray(logits, np.float32), top_k)
-    return int(
-        jax.random.categorical(key, jnp.asarray(lg / max(temperature, 1e-6)))
-    )
+    lg = lg / max(temperature, 1e-6)
+    if top_p < 1.0:
+        lg = _top_p_filter_host(lg, top_p)
+    return int(jax.random.categorical(key, jnp.asarray(lg)))
 
 
 def speculative_sample_host(
@@ -195,21 +220,28 @@ def speculative_sample_host(
     dl: int,
     temperature: float,
     top_k: int = 0,
+    top_p: float = 1.0,
 ) -> Tuple[list, int]:
     """Host mirror of ``speculative_sample`` for one request's round.
 
-    Applies the same temperature/top-k filter to both distributions that
-    drafting used, accepts the u*q < p prefix, and samples the residual
-    (or bonus) token — all randomness from `key`, so the round is
-    reproducible for a fixed per-request seed.  Returns
+    Applies the same temperature/top-k/top-p filter to both distributions
+    that drafting used (filtering q exactly as ``sample_token_host`` drew
+    the proposals keeps the rejection rule LOSSLESS: accepted-or-residual
+    tokens are distributed exactly as nucleus sampling from the target),
+    accepts the u*q < p prefix, and samples the residual (or bonus) token —
+    all randomness from `key`, so the round is reproducible for a fixed
+    per-request seed.  Returns
     (committed tokens [n_acc accepted drafts + 1 residual/bonus], n_acc)."""
     temp = max(temperature, 1e-6)
-    p = _softmax_host(
-        _top_k_filter_host(np.asarray(p_logits[: dl + 1], np.float32), top_k) / temp
-    )
-    q = _softmax_host(
-        _top_k_filter_host(np.asarray(q_logits[:dl], np.float32), top_k) / temp
-    )
+
+    def _filtered(logits):
+        lg = _top_k_filter_host(np.asarray(logits, np.float32), top_k) / temp
+        if top_p < 1.0:
+            lg = _top_p_filter_host(lg, top_p)
+        return _softmax_host(lg)
+
+    p = _filtered(p_logits[: dl + 1])
+    q = _filtered(q_logits[:dl])
     k_u, k_res = jax.random.split(key)
     u = np.asarray(jax.random.uniform(k_u, (max(dl, 1),)))
     idx = np.arange(dl)

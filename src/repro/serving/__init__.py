@@ -18,6 +18,21 @@ micro-steps in single fused dispatches — bit-identical tokens, fewer
 rounds on heterogeneous workloads.  docs/SERVING.md is the API reference;
 docs/ARCHITECTURE.md maps the stack.
 
+The ASYNC front-end turns the engine into a service::
+
+    async with AsyncEngine(eng, max_queued=32) as aeng:
+        async for out in aeng.generate(prompt, sp):   # one iterator per
+            send(out.new_token_ids)                   # request, tokens
+                                                      # bit-identical to
+                                                      # Engine.run()
+
+``async_engine.AsyncEngine`` runs the step loop on a worker thread with
+per-request streams, cancellation -> ``Engine.abort`` (pages freed
+immediately), and a bounded admission queue (``QueueFullError`` on
+fail-fast overflow); ``server.CompletionServer`` serves it over HTTP
+(``POST /v1/completions`` with SSE streaming, ``/healthz``, ``/stats``)
+on stdlib asyncio streams — no framework dependency.
+
 Internals (engine-owned, import from their modules if you must):
   paged_cache.PagedKVPool  — block-granular KV pages, free list, reservations
   request.Request          — lifecycle + per-request sampling key streams
@@ -33,8 +48,10 @@ from repro.serving.api import (
     EngineConfig,
     RequestOutput,
     SamplingParams,
+    default_detokenize,
     resolve_paged_attn_impl,
 )
+from repro.serving.async_engine import AsyncEngine, QueueFullError
 from repro.serving.engine import (
     BatchConfig,
     Engine,
@@ -45,6 +62,7 @@ from repro.serving.engine import (
     serve_batch_host,
     serve_sd,
 )
+from repro.serving.server import CompletionServer
 
 __all__ = [
     # the Engine API
@@ -56,6 +74,11 @@ __all__ = [
     "ServingModel",
     "make_interface",
     "resolve_paged_attn_impl",
+    "default_detokenize",
+    # the async front-end
+    "AsyncEngine",
+    "QueueFullError",
+    "CompletionServer",
     # deprecated run-to-drain shims (+ their config type)
     "serve_sd",
     "serve_apsd",

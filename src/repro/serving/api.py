@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import List, Optional
+from typing import List, Optional, Tuple, Union
 
 __all__ = [
     "SamplingParams",
@@ -41,7 +41,18 @@ __all__ = [
     "RequestOutput",
     "EngineConfig",
     "resolve_paged_attn_impl",
+    "default_detokenize",
 ]
+
+
+def default_detokenize(token_id: int) -> str:
+    """The repo's toy LMs decode over an untextured integer vocab, so the
+    default "detokenizer" renders each token as its decimal id plus a
+    trailing space (``[5, 17] -> "5 17 "``).  Stop-string matching
+    (``SamplingParams.stop``) and the HTTP server's ``text`` fields run on
+    this stream; pass a real detokenizer to ``Engine``/``AsyncEngine`` when
+    serving a real vocabulary."""
+    return f"{token_id} "
 
 _PAGED_ATTN_IMPLS = ("gather", "pallas")
 # backends where the paged kernel LOWERS: kernels/paged_attn.py is written
@@ -83,25 +94,45 @@ class SamplingParams:
     ``temperature == 0`` is greedy decoding: deterministic, bit-identical to
     the single-request reference drivers.  ``temperature > 0`` runs lossless
     speculative rejection sampling: the draft proposes from its own
-    (temperature/top-k filtered) distribution and the target accepts with the
-    Leviathan rule, so emitted tokens are distributed exactly as
-    autoregressive sampling from the target.  All randomness derives from a
-    per-request key stream seeded by ``seed`` and indexed by (round,
-    position), never from shared state — the same (prompt, params) pair
-    yields the same tokens at batch 1 and batch N."""
+    (temperature/top-k/top-p filtered) distribution and the target accepts
+    with the Leviathan rule, so emitted tokens are distributed exactly as
+    autoregressive sampling from the target — including nucleus (``top_p``)
+    truncation, which filters BOTH distributions identically so the rule
+    stays lossless.  All randomness derives from a per-request key stream
+    seeded by ``seed`` and indexed by (round, position), never from shared
+    state — the same (prompt, params) pair yields the same tokens at batch 1
+    and batch N.
+
+    ``stop`` holds stop strings matched against the request's detokenized
+    output stream (the engine's ``detokenize`` callable renders tokens to
+    text): generation ends with ``finish_reason="stop"`` at the first match,
+    and the final output is truncated so the stop string itself is excluded
+    (tokens whose text overlaps the match are dropped)."""
 
     temperature: float = 0.0
     top_k: int = 0  # 0: no truncation; k > 0: sample from the top-k logits
+    top_p: float = 1.0  # nucleus mass; 1.0: no truncation
     seed: int = 0
     max_tokens: int = 64
+    stop: Tuple[str, ...] = ()  # stop strings over the detokenized stream
 
     def __post_init__(self):
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.max_tokens <= 0:
             raise ValueError(f"max_tokens must be > 0, got {self.max_tokens}")
+        stop: Union[str, Tuple[str, ...]] = self.stop
+        if isinstance(stop, str):
+            stop = (stop,)
+        stop = tuple(stop)
+        for s in stop:
+            if not isinstance(s, str) or not s:
+                raise ValueError(f"stop entries must be non-empty strings, got {s!r}")
+        object.__setattr__(self, "stop", stop)
 
     @property
     def greedy(self) -> bool:
@@ -114,7 +145,7 @@ class CompletionOutput:
 
     index: int
     token_ids: List[int]  # cumulative generated tokens, trimmed to the budget
-    finish_reason: Optional[str] = None  # None | "length" | "abort"
+    finish_reason: Optional[str] = None  # None | "length" | "stop" | "abort"
 
     @property
     def finished(self) -> bool:

@@ -181,7 +181,14 @@ class ContinuousBatcher:
         self.step_count = 0
         self.rounds = 0
         self.admitted = 0
-        self.finished: List[Request] = []
+        # aggregate counters over retired requests — deliberately NOT a
+        # list of Request objects: a long-lived server retires requests
+        # forever, so per-request state must be droppable (Engine.
+        # release_request) without losing the summary
+        self.finished_count = 0
+        self.finished_emitted = 0
+        self.finished_drafted = 0
+        self.finished_accepted = 0
         self.wdos = WDOSModelStats()
         self.fused = FusedTelemetry()
 
@@ -226,21 +233,35 @@ class ContinuousBatcher:
             if r is not None and r.state is RequestState.DECODE
         ]
 
+    def _tally_finished(self, req: Request) -> None:
+        self.finished_count += 1
+        self.finished_emitted += len(req.out)
+        self.finished_drafted += req.drafted
+        self.finished_accepted += req.accepted
+
     def retire(self, slot: int, reason: str = "length") -> None:
         req = self.slots[slot]
         assert req is not None
         req.finish(self.step_count, reason=reason)
-        self.finished.append(req)
+        self._tally_finished(req)
         self.slots[slot] = None
 
     def cancel_queued(self, rid: int) -> Optional[Request]:
         """Drop a not-yet-admitted request from the queue (Engine.abort).
-        Returns the request (finished with reason "abort") or None."""
-        for req in self.queue:
+        Returns the request (finished with reason "abort") or None.
+
+        Scans a snapshot, not the live deque: the async front-end calls
+        this on its worker thread while ``submit`` may append from the
+        event-loop thread, and direct deque iteration raises on concurrent
+        mutation.  ``list(deque)`` and ``deque.remove`` are single C-level
+        operations (atomic under the GIL), so the snapshot-then-remove
+        pair is safe; a request cannot leave the queue between the two
+        except through this thread's own admit/cancel calls."""
+        for req in list(self.queue):
             if req.rid == rid:
                 self.queue.remove(req)
                 req.finish(self.step_count, reason="abort")
-                self.finished.append(req)
+                self._tally_finished(req)
                 return req
         return None
 
@@ -318,14 +339,14 @@ class ContinuousBatcher:
     # -- reporting ----------------------------------------------------------
 
     def summary(self) -> Dict[str, object]:
-        reqs = self.finished
-        drafted = sum(r.drafted for r in reqs)
         out = {
-            "requests": len(reqs),
+            "requests": self.finished_count,
             "rounds": self.rounds,
             "steps": self.step_count,
-            "emitted": sum(len(r.out) for r in reqs),
-            "acceptance_rate": sum(r.accepted for r in reqs) / max(drafted, 1),
+            "emitted": self.finished_emitted,
+            "acceptance_rate": (
+                self.finished_accepted / max(self.finished_drafted, 1)
+            ),
             "target_pool": self.t_pool.stats(),
             "draft_pool": self.d_pool.stats(),
             "wdos_modeled_speedup": self.wdos.modeled_speedup,

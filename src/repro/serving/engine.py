@@ -89,6 +89,7 @@ from repro.serving.api import (
     EngineConfig,
     RequestOutput,
     SamplingParams,
+    default_detokenize,
     resolve_paged_attn_impl,
     warn_deprecated_once,
 )
@@ -435,6 +436,7 @@ class Engine:
         target: ServingModel,
         draft: ServingModel,
         config: Optional[EngineConfig] = None,
+        detokenize: Optional[Callable[[int], str]] = None,
     ):
         cfg = config if config is not None else EngineConfig()
         if cfg.paged_attn_impl is not None:
@@ -478,6 +480,11 @@ class Engine:
         self._table_upload_s = 0.0  # tiny int32 uploads (all that remains)
         self._requests: Dict[int, Request] = {}
         self._next_id = 0
+        # token -> text for SamplingParams.stop matching (and the HTTP
+        # server's text fields); defaults to the toy decimal renderer
+        self._detokenize = (
+            detokenize if detokenize is not None else default_detokenize
+        )
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -497,6 +504,7 @@ class Engine:
             max_new_tokens=sp.max_tokens,
             sink=sink,
             sampling=sp,
+            detokenize=self._detokenize,
         )
         peak = req.peak_cache_len(self.cfg.max_dl)
         if peak > self.max_model_len:
@@ -527,8 +535,29 @@ class Engine:
         self._batcher.retire(slot, reason="abort")
         return True
 
+    def release_request(self, request_id: int) -> bool:
+        """Drop a FINISHED request's bookkeeping (its ``Request`` object,
+        including the output buffer).  A run-to-drain caller never needs
+        this — ``output_tokens``/``request`` stay valid until released —
+        but a long-lived server must release retired requests or the
+        engine's request map grows without bound (the batcher's summary
+        counters are aggregates and survive the release)."""
+        req = self._requests.get(request_id)
+        if req is None or req.state is not RequestState.FINISHED:
+            return False
+        del self._requests[request_id]
+        return True
+
     def has_unfinished(self) -> bool:
         return not self._batcher.all_done()
+
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (QUEUED, not yet in a batch slot)."""
+        return len(self._batcher.queue)
+
+    def num_active(self) -> int:
+        """Requests currently holding a decode slot."""
+        return sum(1 for r in self._batcher.slots if r is not None)
 
     def request(self, request_id: int) -> Request:
         return self._requests[request_id]
@@ -631,7 +660,7 @@ class Engine:
                         if not sp.greedy:
                             nxt[slot] = sample_token_host(
                                 req.draft_key(j), last[slot],
-                                sp.temperature, sp.top_k,
+                                sp.temperature, sp.top_k, sp.top_p,
                             )
                     draft_cols.append(nxt)
                     cur_dev = jnp.asarray(nxt)
@@ -659,7 +688,7 @@ class Engine:
         # the KV was written in place by the steps above, and rewind just
         # drops the tail (stale pool slots are masked, then overwritten)
         work = []
-        progressed: List[Tuple[Request, List[int]]] = []
+        progressed: List[Request] = []
         for slot, req in active:
             dl = dls[slot]
             sp = req.sampling
@@ -671,9 +700,8 @@ class Engine:
                 q_logits = np.stack([q_cols[j][slot] for j in range(dl)])
                 new, n_acc = speculative_sample_host(
                     req.accept_key(), drafts[slot], p_logits[slot], q_logits,
-                    dl, sp.temperature, sp.top_k,
+                    dl, sp.temperature, sp.top_k, sp.top_p,
                 )
-            prev = min(len(req.out), req.max_new_tokens)
             req.commit(new)
             req.record_round(modes[slot], dl, n_acc, len(new))
             req.rounds += 1
@@ -681,7 +709,7 @@ class Engine:
             req.accepted += n_acc
             req.controller.observe(n_acc, dl)
             work.append((req, dl))
-            progressed.append((req, req.out[prev: req.max_new_tokens]))
+            progressed.append(req)
             # both models wrote round_dl+1 positions; keep n_acc + 1
             # (draft invariant: cache == committed[:-1], incl. straggler)
             for seq in (req.t_seq, req.d_seq):
@@ -695,20 +723,26 @@ class Engine:
                 self._batcher.retire(slot)
         self._batcher.step_count += 1
 
-        return [
-            RequestOutput(
-                request_id=req.rid,
-                prompt_token_ids=[int(t) for t in req.prompt],
-                new_token_ids=[int(t) for t in delta],
-                finished=req.state is RequestState.FINISHED,
-                outputs=[CompletionOutput(
-                    index=0,
-                    token_ids=[int(t) for t in req.out[: req.max_new_tokens]],
-                    finish_reason=req.finish_reason,
-                )],
-            )
-            for req, delta in progressed
-        ]
+        return [self._output_for(req) for req in progressed]
+
+    @staticmethod
+    def _output_for(req: Request) -> RequestOutput:
+        """One streaming RequestOutput: the newly deliverable tokens since
+        the last step (``Request.take_delta`` — stop-string holdback may
+        defer tokens, never retract them) plus the cumulative deliverable
+        completion."""
+        delta = req.take_delta()
+        return RequestOutput(
+            request_id=req.rid,
+            prompt_token_ids=[int(t) for t in req.prompt],
+            new_token_ids=delta,
+            finished=req.state is RequestState.FINISHED,
+            outputs=[CompletionOutput(
+                index=0,
+                token_ids=[int(t) for t in req.out[: req.emittable_len()]],
+                finish_reason=req.finish_reason,
+            )],
+        )
 
     # -- the fused cross-request PAR round (par_mode="wdos") -----------------
 
@@ -739,10 +773,6 @@ class Engine:
         b = cfg.max_batch
         touched: Dict[int, Request] = {
             req.rid: req for _, req in self._batcher.active()
-        }
-        prev_out = {
-            rid: min(len(req.out), req.max_new_tokens)
-            for rid, req in touched.items()
         }
         work: List[Tuple[Request, int]] = []
 
@@ -832,7 +862,7 @@ class Engine:
                 else:
                     nxt = sample_token_host(
                         req.draft_key(len(req.pending)), row,
-                        sp.temperature, sp.top_k,
+                        sp.temperature, sp.top_k, sp.top_p,
                     )
                     req.pending_q.append(row.copy())
                 req.pending.append(nxt)
@@ -853,7 +883,7 @@ class Engine:
                     new, n_acc = speculative_sample_host(
                         req.accept_key(), drafts, v_np[slot],
                         np.stack(req.pending_q), dl,
-                        sp.temperature, sp.top_k,
+                        sp.temperature, sp.top_k, sp.top_p,
                     )
                 req.commit(new)
                 req.record_round(mode, dl, n_acc, len(new))
@@ -881,24 +911,7 @@ class Engine:
         self._batcher.model_round(work)
         self._batcher.step_count += 1
 
-        progressed = [
-            (req, req.out[prev_out[rid]: req.max_new_tokens])
-            for rid, req in touched.items()
-        ]
-        return [
-            RequestOutput(
-                request_id=req.rid,
-                prompt_token_ids=[int(t) for t in req.prompt],
-                new_token_ids=[int(t) for t in delta],
-                finished=req.state is RequestState.FINISHED,
-                outputs=[CompletionOutput(
-                    index=0,
-                    token_ids=[int(t) for t in req.out[: req.max_new_tokens]],
-                    finish_reason=req.finish_reason,
-                )],
-            )
-            for req, delta in progressed
-        ]
+        return [self._output_for(req) for req in touched.values()]
 
     # -- drain / reporting ---------------------------------------------------
 

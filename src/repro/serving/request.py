@@ -14,6 +14,15 @@ request's seed and indexed by (stream, round, position), never drawn from a
 shared counter, so a request's sampled tokens are identical no matter which
 batch composition the engine happens to schedule it into.
 
+``SamplingParams.stop`` is enforced here at commit time: each committed
+token's detokenized text extends the request's generated-text stream, the
+stream is scanned for the earliest new stop match, and on a hit the output
+truncates at the token boundary before the match (the stop string itself
+is excluded) with ``finish_reason="stop"``.  The cache bookkeeping is
+untouched — the engine's advance/rewind depends only on the round's
+acceptance count — so a stopped request retires and frees its pages
+through the exact same path as a length-finished one.
+
 Under fused cross-request PAR execution (``EngineConfig(par_mode="wdos")``)
 a request additionally carries its PHASE state: the draft window currently
 in flight (``begin_window`` / ``pending`` / ``window_full``).  Phase state
@@ -28,6 +37,7 @@ two-phase or fused rounds.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import enum
 from typing import Callable, List, Optional, Tuple
@@ -82,6 +92,9 @@ class Request:
     max_new_tokens: int
     sink: Optional[Callable[[int], None]] = None  # streaming token callback
     sampling: Optional[SamplingParams] = None  # None => greedy defaults
+    # token -> text, used only when sampling.stop is non-empty (the engine
+    # injects its detokenizer at add_request)
+    detokenize: Optional[Callable[[int], str]] = None
 
     state: RequestState = RequestState.QUEUED
     out: List[int] = dataclasses.field(default_factory=list)
@@ -112,6 +125,19 @@ class Request:
     pending_dl: Optional[int] = None
     pending: List[int] = dataclasses.field(default_factory=list)
     pending_q: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    # -- stop-sequence state (sampling.stop non-empty): the detokenized
+    # generated text plus each output token's cumulative text end offset,
+    # so a match maps back to a token-boundary truncation point.  The two
+    # watermarks implement the HOLDBACK rule: a token whose text could
+    # still become the start of a stop match is not delivered (sink or
+    # RequestOutput delta) until later text proves it safe — so a stop
+    # string spanning a round boundary never retracts a delivered token.
+    stop_hit: bool = False
+    _gen_text: str = ""
+    _text_ends: List[int] = dataclasses.field(default_factory=list)
+    _stream_mark: int = 0  # sink watermark (stop path only)
+    _delta_mark: int = 0  # RequestOutput-delta watermark (engine)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -175,7 +201,7 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return len(self.out) >= self.max_new_tokens
+        return self.stop_hit or len(self.out) >= self.max_new_tokens
 
     def peak_cache_len(self, max_dl: int) -> int:
         """Worst-case cache length: committed-1 positions plus a full
@@ -185,7 +211,19 @@ class Request:
     def commit(self, tokens: List[int]) -> None:
         """Append verified tokens; stream them (up to the budget); update the
         tip.  A round may overshoot max_new_tokens — the overshoot is kept
-        for cache bookkeeping and trimmed at finish, like ``sd_generate``."""
+        for cache bookkeeping and trimmed at finish, like ``sd_generate``.
+
+        When ``sampling.stop`` is set, each token's detokenized text extends
+        the request's generated-text stream and the stream is scanned for
+        the earliest stop match; on a hit the output is truncated at the
+        token boundary BEFORE the match (the stop string is excluded),
+        ``finish_reason`` becomes "stop", and the engine retires the request
+        at the end of the round — the cache advance/rewind bookkeeping is
+        untouched (it depends only on the round's acceptance count), so the
+        pages free through the normal retirement path."""
+        if self.sampling is not None and self.sampling.stop:
+            self._commit_with_stop(tokens)
+            return
         keep = max(0, self.max_new_tokens - len(self.out))
         if self.sink is not None:
             for t in tokens[:keep]:
@@ -194,6 +232,93 @@ class Request:
         self.emitted_total += len(tokens)
         if tokens:
             self.last_tok = int(tokens[-1])
+
+    def _commit_with_stop(self, tokens: List[int]) -> None:
+        detok = self.detokenize
+        if detok is None:
+            from repro.serving.api import default_detokenize as detok
+        stops = self.sampling.stop
+        self.emitted_total += len(tokens)
+        if tokens:
+            # the committed-window tip, pre-truncation: cache bookkeeping
+            # (advance/rewind in the engine) sees the same tip it always did
+            self.last_tok = int(tokens[-1])
+        for t in tokens:
+            if self.stop_hit:
+                break
+            if len(self.out) >= self.max_new_tokens:
+                # overshoot past the budget: kept for cache bookkeeping
+                # only (trimmed at finish) — it is NOT part of the
+                # delivered completion, so it must not extend the text
+                # stream nor fire a stop the user would never have seen
+                self.out.append(int(t))
+                continue
+            tail_start = len(self._gen_text)
+            self.out.append(int(t))
+            self._gen_text += detok(int(t))
+            self._text_ends.append(len(self._gen_text))
+            # a NEW match must end inside this token's text: scanning from
+            # tail_start - (max stop len - 1) covers matches that began in
+            # earlier tokens without re-finding old text
+            start = None
+            for s in stops:
+                lo = max(0, tail_start - len(s) + 1)
+                m = self._gen_text.find(s, lo)
+                if m >= 0 and (start is None or m < start):
+                    start = m
+            if start is not None:
+                # keep tokens whose text ends at or before the match start
+                n_keep = bisect.bisect_right(self._text_ends, start)
+                self.out = self.out[:n_keep]
+                self.stop_hit = True
+                self.finish_reason = "stop"
+        # stream only what is SAFE: survived truncation, fits the budget,
+        # and cannot still become part of a future cross-round stop match
+        if self.sink is not None:
+            hi = self.emittable_len()
+            for t in self.out[self._stream_mark: hi]:
+                self.sink(int(t))
+            self._stream_mark = max(self._stream_mark, hi)
+
+    def _held_tail_chars(self) -> int:
+        """Chars at the end of the generated text that are a proper prefix
+        of some stop string — i.e. could still become the beginning of a
+        match once more tokens arrive (the holdback window)."""
+        best = 0
+        text = self._gen_text
+        for s in self.sampling.stop:
+            for l in range(min(len(s) - 1, len(text)), best, -1):
+                if text.endswith(s[:l]):
+                    best = l
+                    break
+        return best
+
+    def emittable_len(self) -> int:
+        """Output tokens safe to DELIVER right now (sink / RequestOutput):
+        everything committed up to the budget, minus — while stop matching
+        is still live — the held tail whose text could yet become part of
+        a match.  Once the request resolves (stop hit, or the budget is
+        reached so no further match can truncate delivered tokens) the
+        holdback flushes.  For requests without stop strings this is
+        simply min(len(out), max_new_tokens) — the historical slice."""
+        n = min(len(self.out), self.max_new_tokens)
+        if not self.sampling.stop or self.stop_hit or n >= self.max_new_tokens:
+            return n
+        held = self._held_tail_chars()
+        if not held:
+            return n
+        safe_char = len(self._gen_text) - held
+        return min(n, bisect.bisect_right(self._text_ends, safe_char))
+
+    def take_delta(self) -> List[int]:
+        """Newly deliverable tokens since the last call — what the engine
+        puts in ``RequestOutput.new_token_ids``.  Monotone: held-back
+        tokens are only ever delivered late, never retracted, so the
+        concatenation of deltas always equals the final output."""
+        hi = self.emittable_len()
+        lo = min(self._delta_mark, hi)
+        self._delta_mark = hi
+        return [int(t) for t in self.out[lo:hi]]
 
     def record_round(self, mode: int, drafted: int, accepted: int,
                      emitted: int) -> None:
@@ -206,6 +331,8 @@ class Request:
             self.finish_reason = reason
         self.finished_step = step
         self.out = self.out[: self.max_new_tokens]
+        self._gen_text = ""  # stop-matching buffers are dead weight now
+        self._text_ends = []
         for seq in (self.t_seq, self.d_seq):
             if seq is not None and not seq.released:
                 seq.release()

@@ -1,0 +1,350 @@
+"""AsyncEngine: per-request async streams over the stepwise Engine.
+
+The acceptance bar for the async front-end is the serving stack's standing
+contract — the layer may change WHEN work runs (arrival interleaving,
+admission order, abort timing), never WHAT a request computes.  So the
+suite checks (1) bit-identity of async streams against solo synchronous
+``Engine.run`` under concurrent staggered submits, including sampled and
+quantized rows; (2) cancellation mid-stream frees every pool page; and
+(3) the bounded admission gate's two overflow behaviours.
+"""
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import build_pair
+from repro.serving import (
+    AsyncEngine,
+    Engine,
+    EngineConfig,
+    QueueFullError,
+    SamplingParams,
+)
+
+
+def _prompts(n, seed=0, vocab=512):
+    rng = np.random.RandomState(seed)
+    return [
+        rng.randint(0, vocab, size=rng.randint(3, 7)).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return build_pair(seed=0, s_max=128, quantize=False)
+
+
+@pytest.fixture(scope="module")
+def qpair():
+    """W4A8 target + BVQ draft — the paper's quantized serving pair."""
+    return build_pair(seed=0, s_max=128, quantize=True)
+
+
+def _sync_ref(pair, prompt, sp):
+    """Solo synchronous reference: one request, its own engine."""
+    target, draft = pair
+    eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+    outs, _ = eng.run([prompt], sp)
+    return [int(t) for t in outs[0]]
+
+
+async def _consume(aeng, prompt, sp, delay=0.0):
+    """Stream one request; returns (tokens, finish_reason) with the
+    streaming invariants asserted along the way."""
+    if delay:
+        await asyncio.sleep(delay)
+    toks, final = [], None
+    async for out in aeng.generate(prompt, sp):
+        toks.extend(int(t) for t in out.new_token_ids)
+        assert out.token_ids == toks  # cumulative == concatenated deltas
+        final = out
+    assert final is not None and final.finished
+    return toks, final.outputs[0].finish_reason
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: async staggered concurrency vs solo synchronous runs
+# ---------------------------------------------------------------------------
+
+
+def test_async_streams_bit_identical_to_sync_under_staggered_load(pair):
+    """Four concurrent coroutines submit at staggered times (arrival
+    mid-flight, mixed greedy + sampled rows) — every stream must equal its
+    solo Engine.run reference token for token."""
+    target, draft = pair
+    prompts = _prompts(4, seed=1)
+    sps = [
+        SamplingParams(max_tokens=10),
+        SamplingParams(temperature=0.8, seed=7, max_tokens=10),
+        SamplingParams(max_tokens=8),
+        SamplingParams(temperature=0.9, top_p=0.8, seed=11, max_tokens=8),
+    ]
+    refs = [_sync_ref(pair, p, sp) for p, sp in zip(prompts, sps)]
+
+    async def scenario():
+        eng = Engine(target, draft, EngineConfig(max_batch=2, page_size=8))
+        async with AsyncEngine(eng, max_queued=8) as aeng:
+            return await asyncio.gather(*[
+                _consume(aeng, prompts[i], sps[i], delay=0.05 * i)
+                for i in range(4)
+            ])
+
+    results = asyncio.run(scenario())
+    for i, (toks, reason) in enumerate(results):
+        assert toks == refs[i], f"request {i} diverged from sync reference"
+        assert reason == "length"
+
+
+def test_async_bit_identity_quantized_pair_and_wdos(qpair):
+    """The quantized pair (W4A8 target, BVQ draft) through the async layer
+    under par_mode="wdos" fused rounds — still bit-identical to solo
+    synchronous drains."""
+    target, draft = qpair
+    prompts = _prompts(3, seed=2)
+    sps = [
+        SamplingParams(max_tokens=6),
+        SamplingParams(temperature=0.7, seed=3, max_tokens=6),
+        SamplingParams(max_tokens=6),
+    ]
+    refs = [_sync_ref(qpair, p, sp) for p, sp in zip(prompts, sps)]
+
+    async def scenario():
+        eng = Engine(target, draft, EngineConfig(
+            max_batch=3, page_size=8, par_mode="wdos",
+        ))
+        async with AsyncEngine(eng, max_queued=4) as aeng:
+            return await asyncio.gather(*[
+                _consume(aeng, prompts[i], sps[i], delay=0.04 * i)
+                for i in range(3)
+            ])
+
+    results = asyncio.run(scenario())
+    for i, (toks, reason) in enumerate(results):
+        assert toks == refs[i], f"quantized request {i} diverged"
+        assert reason == "length"
+
+
+# ---------------------------------------------------------------------------
+# Cancellation -> abort -> pages freed
+# ---------------------------------------------------------------------------
+
+
+def test_cancellation_mid_stream_frees_pool_pages(pair):
+    target, draft = pair
+
+    async def scenario():
+        eng = Engine(target, draft, EngineConfig(
+            max_batch=2, page_size=8, max_model_len=128,
+        ))
+        async with AsyncEngine(eng, max_queued=4) as aeng:
+            p_victim, p_survivor = _prompts(2, seed=3)
+            sp_survivor = SamplingParams(max_tokens=10)
+            ref = _sync_ref(pair, p_survivor, sp_survivor)
+            got_first = asyncio.get_running_loop().create_future()
+
+            async def victim():
+                async for _ in aeng.generate(
+                    p_victim, SamplingParams(max_tokens=100)
+                ):
+                    if not got_first.done():
+                        got_first.set_result(None)
+
+            vtask = asyncio.ensure_future(victim())
+            survivor = asyncio.ensure_future(
+                _consume(aeng, p_survivor, sp_survivor)
+            )
+            await got_first
+            vtask.cancel()  # mid-stream: tokens already flowing
+            with pytest.raises(asyncio.CancelledError):
+                await vtask
+            toks, _ = await survivor
+            # a cancelled neighbour must not perturb the survivor
+            assert toks == ref
+            # the abort ran on the worker; poll until its step retires
+            for _ in range(200):
+                st = aeng.stats()
+                if (
+                    st["target_pool"]["used_pages"] == 0
+                    and st["active"] == 0
+                ):
+                    break
+                await asyncio.sleep(0.02)
+            return aeng.stats()
+
+    st = asyncio.run(scenario())
+    for pool in ("target_pool", "draft_pool"):
+        assert st[pool]["used_pages"] == 0, (pool, st[pool])
+        assert st[pool]["reserved_pages"] == 0, (pool, st[pool])
+    assert st["active"] == 0 and st["queued"] == 0
+
+
+def test_abort_by_id_ends_the_stream(pair):
+    target, draft = pair
+
+    async def scenario():
+        eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+        async with AsyncEngine(eng, max_queued=2) as aeng:
+            (prompt,) = _prompts(1, seed=4)
+            seen = []
+            got_first = asyncio.get_running_loop().create_future()
+
+            async def consume():
+                async for out in aeng.generate(
+                    prompt, SamplingParams(max_tokens=100)
+                ):
+                    seen.extend(out.new_token_ids)
+                    if not got_first.done():
+                        got_first.set_result(out.request_id)
+
+            task = asyncio.ensure_future(consume())
+            rid = await got_first
+            await aeng.abort(rid)
+            await asyncio.wait_for(task, timeout=30)  # stream ENDS, no hang
+            assert 0 < len(seen) < 100
+            return aeng.stats()
+
+    st = asyncio.run(scenario())
+    assert st["target_pool"]["used_pages"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_fail_fast_and_wait(pair):
+    """max_queued=1: with one request decoding and one QUEUED, a
+    ``wait=False`` submit raises QueueFullError while a ``wait=True``
+    submit parks until the permit frees and then completes."""
+    target, draft = pair
+    prompts = _prompts(4, seed=5)
+
+    async def scenario():
+        eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+        async with AsyncEngine(eng, max_queued=1) as aeng:
+            a = asyncio.ensure_future(
+                _consume(aeng, prompts[0], SamplingParams(max_tokens=24))
+            )
+            # wait until A holds the only decode slot (permit released)
+            for _ in range(500):
+                st = aeng.stats()
+                if st["active"] == 1 and aeng.queue_depth() == 0:
+                    break
+                await asyncio.sleep(0.01)
+            assert aeng.stats()["active"] == 1
+            b = asyncio.ensure_future(
+                _consume(aeng, prompts[1], SamplingParams(max_tokens=4))
+            )
+            # B occupies the single admission permit
+            for _ in range(500):
+                if aeng.queue_depth() == 1:
+                    break
+                await asyncio.sleep(0.01)
+            assert aeng.queue_depth() == 1
+
+            async def fail_fast():
+                agen = aeng.generate(
+                    prompts[2], SamplingParams(max_tokens=4), wait=False
+                )
+                async for _ in agen:
+                    pass
+
+            with pytest.raises(QueueFullError):
+                await fail_fast()
+            # wait=True parks and eventually completes
+            c = asyncio.ensure_future(
+                _consume(aeng, prompts[3], SamplingParams(max_tokens=4))
+            )
+            await asyncio.gather(a, b, c)
+            return aeng.stats()
+
+    st = asyncio.run(scenario())
+    assert st["finished_requests"] >= 3
+    assert st["target_pool"]["used_pages"] == 0
+
+
+def test_max_queued_validation(pair):
+    target, draft = pair
+    eng = Engine(target, draft, EngineConfig(max_batch=1))
+    with pytest.raises(ValueError, match="max_queued"):
+        AsyncEngine(eng, max_queued=0)
+
+
+def test_cancelled_waiter_does_not_mint_phantom_permit(pair):
+    """Cancelling a task parked on the admission gate must WITHDRAW its
+    wait, not release a permit it never held: the queue depth stays at the
+    limit and fail-fast still rejects (regression: fut.done() is true for
+    a cancelled future, which used to decrement the permit count)."""
+    target, draft = pair
+    prompts = _prompts(4, seed=6)
+
+    async def scenario():
+        eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+        async with AsyncEngine(eng, max_queued=1) as aeng:
+            a = asyncio.ensure_future(
+                _consume(aeng, prompts[0], SamplingParams(max_tokens=30))
+            )
+            for _ in range(500):
+                if aeng.stats()["active"] == 1 and aeng.queue_depth() == 0:
+                    break
+                await asyncio.sleep(0.01)
+            b = asyncio.ensure_future(
+                _consume(aeng, prompts[1], SamplingParams(max_tokens=4))
+            )
+            for _ in range(500):
+                if aeng.queue_depth() == 1:
+                    break
+                await asyncio.sleep(0.01)
+            assert aeng.queue_depth() == 1
+            # park a waiter behind the full gate, then cancel it
+            parked = asyncio.ensure_future(
+                _consume(aeng, prompts[2], SamplingParams(max_tokens=4))
+            )
+            await asyncio.sleep(0.05)
+            parked.cancel()
+            with pytest.raises(asyncio.CancelledError):
+                await parked
+            # the permit count must be unchanged: still saturated
+            assert aeng.queue_depth() == 1
+
+            async def fail_fast():
+                agen = aeng.generate(
+                    prompts[3], SamplingParams(max_tokens=4), wait=False
+                )
+                async for _ in agen:
+                    pass
+
+            with pytest.raises(QueueFullError):
+                await fail_fast()
+            await asyncio.gather(a, b)
+            return aeng.queue_depth()
+
+    assert asyncio.run(scenario()) == 0
+
+
+def test_finished_requests_are_released_not_retained(pair):
+    """A long-lived server must not accumulate Request objects: once a
+    stream completes (or aborts), the engine's request map drops the
+    record while the summary counters keep counting."""
+    target, draft = pair
+    prompts = _prompts(3, seed=7)
+
+    async def scenario():
+        eng = Engine(target, draft, EngineConfig(max_batch=2, page_size=8))
+        async with AsyncEngine(eng, max_queued=4) as aeng:
+            for p in prompts:
+                await _consume(aeng, p, SamplingParams(max_tokens=4))
+            # give the worker a beat to process the release commands
+            for _ in range(200):
+                if not eng._requests:
+                    break
+                await asyncio.sleep(0.02)
+            return dict(aeng.stats()), len(eng._requests)
+
+    st, retained = asyncio.run(scenario())
+    assert retained == 0
+    assert st["finished_requests"] == 3
+    assert st["emitted_tokens"] == 12

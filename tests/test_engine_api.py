@@ -334,3 +334,237 @@ def test_deprecated_wrappers_warn_exactly_once(pair):
     assert sorted(str(w.message).split("(")[0] for w in deps) == [
         "serve_batch", "serve_sd"
     ]
+
+
+# ---------------------------------------------------------------------------
+# top_p (nucleus) sampling through the Engine
+# ---------------------------------------------------------------------------
+
+
+def test_top_p_deterministic_across_batch_compositions(pair):
+    """Nucleus sampling keeps the per-request determinism contract: the
+    same (prompt, seed, top_p) yields the same tokens solo and batched."""
+    target, draft = pair
+    prompts = _prompts(3, seed=12)
+    sp0 = SamplingParams(temperature=0.8, top_p=0.8, seed=55, max_tokens=8)
+    others = [
+        SamplingParams(temperature=0.8, top_p=0.9, seed=60 + i, max_tokens=8)
+        for i in range(2)
+    ]
+    solo = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+    out_solo, _ = solo.run([prompts[0]], sp0)
+    eng = Engine(target, draft, EngineConfig(max_batch=3, page_size=8))
+    out_batch, _ = eng.run(prompts, [sp0] + others)
+    assert bool(jnp.all(out_batch[0] == out_solo[0]))
+
+
+def test_top_p_tiny_collapses_to_greedy(pair):
+    """top_p -> 0 keeps only the argmax in both distributions, so sampled
+    decoding degenerates to the greedy output exactly (like top_k=1)."""
+    target, draft = pair
+    prompts = _prompts(1, seed=13)
+    eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+    outs, _ = eng.run(
+        prompts,
+        SamplingParams(temperature=0.9, top_p=1e-6, seed=17, max_tokens=8),
+    )
+    ref = _sd_ref(target, draft, prompts[0], 8)
+    assert bool(jnp.all(outs[0] == ref))
+
+
+def test_top_p_self_draft_lossless_acceptance(pair):
+    """draft == target with a shared nucleus filter => q' == p', so the
+    rejection rule accepts every draft — top_p is lossless end to end."""
+    target, _ = pair
+    prompts = _prompts(2, seed=14)
+    eng = Engine(target, target, EngineConfig(max_batch=2, page_size=8))
+    _, summary = eng.run(
+        prompts,
+        SamplingParams(temperature=0.9, top_p=0.7, seed=5, max_tokens=10),
+    )
+    assert summary["acceptance_rate"] == 1.0
+
+
+def test_top_p_validation():
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+
+
+# ---------------------------------------------------------------------------
+# stop sequences (SamplingParams.stop over the detokenized stream)
+# ---------------------------------------------------------------------------
+
+
+def _stop_ref(target, draft, prompt, max_tokens):
+    ref = _sd_ref(target, draft, prompt, max_tokens)
+    return [int(t) for t in ref]
+
+
+@pytest.mark.parametrize("par_mode", ["off", "wdos"])
+def test_stop_string_truncates_and_frees_pages(pair, par_mode):
+    """Generation ends at the first stop match with finish_reason="stop";
+    the stop string is excluded from the output; the request's pages
+    return through normal retirement — in BOTH round schedulers."""
+    target, draft = pair
+    prompts = _prompts(2, seed=15)
+    ref = _stop_ref(target, draft, prompts[0], 12)
+    stop_s = f"{ref[5]} "  # the 6th token's detokenized text
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=2, page_size=8, par_mode=par_mode,
+    ))
+    outs, _ = eng.run(prompts, [
+        SamplingParams(max_tokens=12, stop=(stop_s,)),
+        SamplingParams(max_tokens=12),  # untouched neighbour
+    ])
+    assert [int(t) for t in outs[0]] == ref[:5]
+    assert eng.request(0).finish_reason == "stop"
+    # the neighbour is unperturbed by the early retirement
+    ref1 = _stop_ref(target, draft, prompts[1], 12)
+    assert [int(t) for t in outs[1]] == ref1
+    t_stats, d_stats = eng.pool_stats()
+    assert t_stats.used_pages == 0 and d_stats.used_pages == 0
+
+
+def test_stop_string_spanning_token_boundary(pair):
+    """A stop string covering two adjacent tokens' text truncates at the
+    FIRST token of the match (both are excluded)."""
+    target, draft = pair
+    prompts = _prompts(1, seed=16)
+    ref = _stop_ref(target, draft, prompts[0], 12)
+    stop_s = f"{ref[3]} {ref[4]} "  # spans tokens 3 and 4
+    eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+    outs, _ = eng.run(prompts, SamplingParams(max_tokens=12, stop=(stop_s,)))
+    assert [int(t) for t in outs[0]] == ref[:3]
+    assert eng.request(0).finish_reason == "stop"
+
+
+def test_stop_earliest_of_multiple_stops_wins(pair):
+    target, draft = pair
+    prompts = _prompts(1, seed=17)
+    ref = _stop_ref(target, draft, prompts[0], 12)
+    eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+    outs, _ = eng.run(prompts, SamplingParams(
+        max_tokens=12, stop=(f"{ref[7]} ", f"{ref[2]} "),
+    ))
+    assert [int(t) for t in outs[0]] == ref[:2]
+
+
+def test_stop_streams_only_surviving_tokens(pair):
+    """The per-request sink must never emit a token that the stop
+    truncation later removes (within-round holdback)."""
+    target, draft = pair
+    prompts = _prompts(1, seed=18)
+    ref = _stop_ref(target, draft, prompts[0], 12)
+    stop_s = f"{ref[4]} "
+    eng = Engine(target, draft, EngineConfig(max_batch=1, page_size=8))
+    streamed = []
+    eng.add_request(
+        prompts[0], SamplingParams(max_tokens=12, stop=(stop_s,)),
+        sink=streamed.append,
+    )
+    while eng.has_unfinished():
+        eng.step()
+    assert streamed == ref[:4]
+
+
+def test_stop_validation_and_custom_detokenizer(pair):
+    with pytest.raises(ValueError, match="stop"):
+        SamplingParams(stop=("",))
+    # a bare string is promoted to a 1-tuple
+    assert SamplingParams(stop="x ").stop == ("x ",)
+    # a custom detokenizer changes what the stop strings match against
+    target, draft = pair
+    prompts = _prompts(1, seed=19)
+    ref = _stop_ref(target, draft, prompts[0], 8)
+    eng = Engine(
+        target, draft, EngineConfig(max_batch=1, page_size=8),
+        detokenize=lambda t: f"<{t}>",
+    )
+    outs, _ = eng.run(prompts, SamplingParams(
+        max_tokens=8, stop=(f"<{ref[3]}>",),
+    ))
+    assert [int(t) for t in outs[0]] == ref[:3]
+
+
+def test_stop_holdback_never_retracts_streamed_tokens():
+    """A stop string spanning a ROUND boundary (committed across two
+    commit() calls) must not retract tokens already delivered: the
+    holdback rule defers at-risk tokens instead (reviewer repro: without
+    holdback the sink saw [5, 7] but the final output was [5])."""
+    from repro.serving.api import default_detokenize
+    from repro.serving.request import Request
+
+    seen = []
+    req = Request(
+        rid=0, prompt=np.array([1, 2], np.int32), max_new_tokens=16,
+        sink=seen.append,
+        sampling=SamplingParams(max_tokens=16, stop=("7 9 ",)),
+        detokenize=default_detokenize,
+    )
+    req.commit([5, 7])  # "7 " is a prefix of the stop string: 7 is at risk
+    assert seen == [5]
+    assert req.take_delta() == [5]
+    req.commit([9, 3])  # completes "7 9 " -> stop; 7 was never delivered
+    assert req.stop_hit and req.finish_reason == "stop"
+    assert [int(t) for t in req.out] == [5]
+    assert seen == [5]  # nothing retracted, nothing leaked
+    assert req.take_delta() == []
+    # and a held token that turns out SAFE flushes late, not never
+    seen2 = []
+    req2 = Request(
+        rid=1, prompt=np.array([1, 2], np.int32), max_new_tokens=16,
+        sink=seen2.append,
+        sampling=SamplingParams(max_tokens=16, stop=("7 9 ",)),
+        detokenize=default_detokenize,
+    )
+    req2.commit([5, 7])
+    assert seen2 == [5]
+    req2.commit([8])  # "7 8 " breaks the partial match: 7 becomes safe
+    assert seen2 == [5, 7, 8]
+    assert req2.take_delta() == [5, 7, 8]
+
+
+def test_stop_spanning_round_boundary_engine_invariants(pair):
+    """End to end with draft_len=1 (1-2 tokens per round) and a 3-token
+    stop string: whatever the round split, the concatenated deltas and the
+    per-step cumulative token_ids must agree with the final output — no
+    retraction through the streaming surface."""
+    target, draft = pair
+    prompts = _prompts(1, seed=20)
+    ref = [int(t) for t in _sd_ref(target, draft, prompts[0], 14, dl=1)]
+    stop_s = f"{ref[5]} {ref[6]} {ref[7]} "
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=1, page_size=8, draft_len=1,
+    ))
+    eng.add_request(prompts[0], SamplingParams(max_tokens=14, stop=(stop_s,)))
+    streamed = []
+    while eng.has_unfinished():
+        for out in eng.step():
+            streamed.extend(out.new_token_ids)
+            assert out.token_ids == streamed  # cumulative == deltas so far
+    assert streamed == ref[:5]
+    assert eng.request(0).finish_reason == "stop"
+
+
+def test_stop_never_fires_on_overshoot_beyond_budget():
+    """A speculative round can commit past max_tokens; those overshoot
+    tokens are never delivered, so a stop string completed only by them
+    must NOT fire (regression: the scan used to read the overshoot)."""
+    from repro.serving.api import default_detokenize
+    from repro.serving.request import Request
+
+    req = Request(
+        rid=0, prompt=np.array([1, 2], np.int32), max_new_tokens=2,
+        sampling=SamplingParams(max_tokens=2, stop=("7 9 ",)),
+        detokenize=default_detokenize,
+    )
+    req.commit([5, 7, 9])  # 9 is overshoot: the user only ever sees "5 7 "
+    assert not req.stop_hit
+    assert req.finish_reason is None
+    assert req.done  # by budget
+    assert req.emittable_len() == 2
+    req.finish(step=0)
+    assert req.finish_reason == "length"
+    assert [int(t) for t in req.out] == [5, 7]

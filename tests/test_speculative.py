@@ -103,3 +103,107 @@ def test_policy_transitions():
     assert P.next_mode(apsd.PAR, True, True) == apsd.PAR
     assert P.next_mode(apsd.PAR, True, False) == apsd.NONPAR
     assert P.next_mode(apsd.PAR, False, True) == apsd.NONPAR
+
+
+# ---------------------------------------------------------------------------
+# top-p (nucleus) host-side filter — the SamplingParams.top_p satellite
+# ---------------------------------------------------------------------------
+
+
+def test_top_p_filter_keeps_minimal_nucleus():
+    """The filter keeps exactly the smallest top-probability set whose mass
+    reaches top_p (inclusive), -inf elsewhere, deterministically."""
+    logits = np.log(np.array([0.4, 0.3, 0.2, 0.1], np.float32))
+    kept = sd._top_p_filter_host(logits, 0.5)  # 0.4 < 0.5 <= 0.4+0.3
+    assert np.isfinite(kept[:2]).all() and np.isinf(kept[2:]).all()
+    kept = sd._top_p_filter_host(logits, 0.71)  # needs three tokens
+    assert np.isfinite(kept[:3]).all() and np.isinf(kept[3:]).all()
+    # top_p >= 1 is the identity (object-level: the fast path)
+    assert sd._top_p_filter_host(logits, 1.0) is logits
+    # the top token always survives, however small top_p is
+    kept = sd._top_p_filter_host(logits, 1e-9)
+    assert np.isfinite(kept[0]) and np.isinf(kept[1:]).all()
+
+
+def test_top_p_filter_batched_rows_independent():
+    rng = np.random.RandomState(0)
+    logits = rng.randn(5, 32).astype(np.float32)
+    whole = sd._top_p_filter_host(logits, 0.6)
+    for i in range(5):
+        row = sd._top_p_filter_host(logits[i], 0.6)
+        assert np.array_equal(whole[i], row)
+
+
+def test_sample_token_host_top_p_one_is_bitwise_unchanged():
+    """top_p=1.0 must leave the historical (temperature, top_k) draw
+    untouched — the bit-identity contract for every existing request."""
+    rng = np.random.RandomState(1)
+    logits = rng.randn(64).astype(np.float32)
+    for i in range(10):
+        key = jax.random.PRNGKey(i)
+        a = sd.sample_token_host(key, logits, 0.8, top_k=8)
+        b = sd.sample_token_host(key, logits, 0.8, top_k=8, top_p=1.0)
+        assert a == b
+
+
+def test_sample_token_host_tiny_top_p_is_argmax():
+    rng = np.random.RandomState(2)
+    logits = rng.randn(64).astype(np.float32)
+    for i in range(10):
+        tok = sd.sample_token_host(
+            jax.random.PRNGKey(i), logits, 1.3, top_p=1e-9
+        )
+        assert tok == int(np.argmax(logits))
+
+
+def test_speculative_sample_host_top_p_self_draft_accepts_all():
+    """q == p with a shared top_p filter: the rejection rule must accept
+    every draft (u*q < p for u in [0,1)) — losslessness of the filtered
+    pair, mirroring the engine's self-draft acceptance test."""
+    rng = np.random.RandomState(3)
+    dl, vs = 4, 32
+    logits = rng.randn(dl + 1, vs).astype(np.float32)
+    for i in range(20):
+        key = jax.random.PRNGKey(100 + i)
+        drafts = [
+            sd.sample_token_host(
+                jax.random.fold_in(key, j), logits[j], 0.9, top_p=0.7
+            )
+            for j in range(dl)
+        ]
+        _, n_acc = sd.speculative_sample_host(
+            jax.random.fold_in(key, 99), np.asarray(drafts),
+            logits, logits[:dl], dl, 0.9, top_p=0.7,
+        )
+        assert n_acc == dl
+
+
+def test_speculative_sample_host_top_p_residual_stays_in_nucleus():
+    """Every emitted token (accepted or residual) must come from the
+    TARGET's nucleus — tokens outside the top_p set have p' == 0 and can
+    never be accepted nor sampled from the residual."""
+    rng = np.random.RandomState(4)
+    dl, vs, top_p = 3, 16, 0.6
+    p_logits = rng.randn(dl + 1, vs).astype(np.float32)
+    q_logits = rng.randn(dl, vs).astype(np.float32)
+    temp = 1.1
+    nucleus = [
+        set(np.nonzero(np.isfinite(
+            sd._top_p_filter_host(p_logits[j] / temp, top_p)
+        ))[0].tolist())
+        for j in range(dl + 1)
+    ]
+    for i in range(50):
+        key = jax.random.PRNGKey(200 + i)
+        drafts = [
+            sd.sample_token_host(
+                jax.random.fold_in(key, j), q_logits[j], temp, top_p=top_p
+            )
+            for j in range(dl)
+        ]
+        out, n_acc = sd.speculative_sample_host(
+            jax.random.fold_in(key, 99), np.asarray(drafts),
+            p_logits, q_logits, dl, temp, top_p=top_p,
+        )
+        for j, tok in enumerate(out):
+            assert tok in nucleus[j], (i, j, tok)
