@@ -30,11 +30,14 @@ that actually ran).
 Every run also writes machine-readable ``BENCH_serving.json`` (tokens/s,
 rounds, acceptance rate, copy telemetry per configuration) so the perf
 trajectory is tracked across PRs — `scripts/ci.sh` runs the smoke variant
-and archives the file.
+and archives the file.  With ``--par-mode both``, ``--trace-out PATH``
+additionally records the wdos arm with the span tracer and exports the
+staggered round timeline as Chrome-trace JSON (open in
+https://ui.perfetto.dev; see docs/OBSERVABILITY.md).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
         [--kv-path {paged,host,both}] [--paged-attn {auto,gather,pallas}]
-        [--par-mode {off,wdos,both}] [--json PATH]
+        [--par-mode {off,wdos,both}] [--json PATH] [--trace-out PATH]
 """
 import argparse
 import dataclasses
@@ -157,22 +160,30 @@ def _run_host(target, draft, prompts, bs, max_tokens, page_size=16):
     return outs, summary, time.perf_counter() - t0, None
 
 
-def _par_ab(target, draft, prompts, max_tokens, rows, record):
+def _par_ab(target, draft, prompts, max_tokens, rows, record,
+            trace_out=None):
     """A/B the two round schedulers on a staggered-admission adaptive
     workload (one request joins per step, short/long windows mixed by the
     per-request controllers): rounds-to-drain and the fused telemetry —
     occupancy (fraction of slots where one request verified WHILE another
     drafted in the same dispatch) plus the modeled overlap the 4-queue WDOS
     claims over in-order issue on exactly the slots that ran, validated
-    against the measured serialized slot cost on this backend."""
-    from repro.serving import Engine, EngineConfig, SamplingParams
+    against the measured serialized slot cost on this backend.
+
+    ``trace_out`` additionally records the wdos arm with a span tracer and
+    exports the staggered round schedule as Chrome-trace JSON (one track
+    per request row — load it in https://ui.perfetto.dev)."""
+    from repro.serving import (
+        Engine, EngineConfig, SamplingParams, Tracer, validate_chrome_trace,
+    )
 
     record["par"] = {}
     for mode in ("off", "wdos"):
+        tracer = Tracer() if (trace_out and mode == "wdos") else None
         eng = Engine(target, draft, EngineConfig(
             max_batch=len(prompts), page_size=16,
             adaptive=True, short_dl=2, long_dl=6, par_mode=mode,
-        ))
+        ), trace=tracer)
         t0 = time.perf_counter()
         for p in prompts:
             eng.add_request(p, SamplingParams(max_tokens=max_tokens))
@@ -202,6 +213,20 @@ def _par_ab(target, draft, prompts, max_tokens, rows, record):
                 f"{summary['rounds']} rounds (two-phase)",
             ))
         record["par"][mode] = entry
+        if tracer is not None:
+            trace = tracer.to_chrome_trace()
+            problems = validate_chrome_trace(trace)
+            assert not problems, f"trace schema violations: {problems[:3]}"
+            tracer.export(trace_out)
+            n_ev = len(trace["traceEvents"])
+            assert n_ev > len(prompts), "trace unexpectedly empty"
+            rows.append((
+                "serving_wdos_trace", 0.0,
+                f"{n_ev} events -> {trace_out} (Perfetto-loadable)",
+            ))
+            record["par"][mode]["trace"] = {
+                "path": trace_out, "events": n_ev,
+            }
     off_r = record["par"]["off"]["rounds_to_drain"]
     wd_r = record["par"]["wdos"]["rounds_to_drain"]
     rows.append((
@@ -212,7 +237,7 @@ def _par_ab(target, draft, prompts, max_tokens, rows, record):
 
 
 def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
-        par_mode: str = "off", json_path: str = None):
+        par_mode: str = "off", json_path: str = None, trace_out: str = None):
     from repro.launch.serve import build_pair
     from repro.serving import Engine, EngineConfig, SamplingParams
 
@@ -356,7 +381,11 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
 
     # --- PAR scheduler A/B (fused cross-request rounds vs two-phase)
     if par_mode == "both":
-        _par_ab(target, draft, prompts, max_tokens, rows, record)
+        _par_ab(target, draft, prompts, max_tokens, rows, record,
+                trace_out=trace_out)
+    elif trace_out:
+        rows.append(("serving_wdos_trace", 0.0,
+                     "skipped: --trace-out needs --par-mode both"))
 
     _bench_paged_attn_rows(rows, record)
     if json_path:
@@ -389,11 +418,18 @@ def main(argv=None):
         help="machine-readable output (perf trajectory across PRs); "
              "'' disables",
     )
+    ap.add_argument(
+        "--trace-out", default="", metavar="PATH",
+        help="with --par-mode both: record the wdos arm with the span "
+             "tracer and export the staggered round timeline as "
+             "Chrome-trace JSON (open in https://ui.perfetto.dev)",
+    )
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for n, us, derived in run(
         smoke=args.smoke, kv_path=args.kv_path, paged_attn=args.paged_attn,
         par_mode=args.par_mode, json_path=args.json or None,
+        trace_out=args.trace_out or None,
     ):
         print(f"{n},{us:.1f},{derived}")
     return 0

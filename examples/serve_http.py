@@ -26,33 +26,18 @@ import numpy as np
 
 from repro.launch.serve import build_pair
 from repro.serving import AsyncEngine, CompletionServer, Engine, EngineConfig
-
-
-async def _post(port, payload):
-    reader, writer = await asyncio.open_connection("127.0.0.1", port)
-    body = json.dumps(payload).encode()
-    writer.write(
-        (
-            "POST /v1/completions HTTP/1.1\r\nHost: demo\r\n"
-            f"Content-Length: {len(body)}\r\n\r\n"
-        ).encode() + body
-    )
-    await writer.drain()
-    return reader, writer
+from repro.serving import http_client as hc
 
 
 async def _stream_client(name, port, prompt, delay, **kw):
     await asyncio.sleep(delay)
-    reader, writer = await _post(
-        port, {"prompt": prompt, "stream": True, **kw}
+    reader, writer = await hc.open_request(
+        port, "POST", "/v1/completions",
+        {"prompt": prompt, "stream": True, **kw},
     )
-    await reader.readuntil(b"\r\n\r\n")  # response head
+    await hc.read_head(reader)
     toks, reason = [], None
-    while True:
-        event = (await reader.readuntil(b"\n\n")).decode().strip()
-        if event == "data: [DONE]":
-            break
-        chunk = json.loads(event[len("data: "):])
+    async for chunk in hc.iter_sse(reader):  # live, chunk by chunk
         if chunk["token"] is not None:
             toks.append(chunk["token"])
             print(f"  [{name}] +{chunk['text']!r}", flush=True)
@@ -63,22 +48,14 @@ async def _stream_client(name, port, prompt, delay, **kw):
 
 
 async def _disconnecting_client(port, prompt):
-    reader, writer = await _post(
-        port, {"prompt": prompt, "stream": True, "max_tokens": 200}
+    reader, writer = await hc.open_request(
+        port, "POST", "/v1/completions",
+        {"prompt": prompt, "stream": True, "max_tokens": 200},
     )
-    await reader.readuntil(b"\r\n\r\n")
+    await hc.read_head(reader)
     await reader.readuntil(b"\n\n")  # one chunk, then hang up mid-stream
     writer.close()
     print("  [quitter] disconnected after 1 chunk (server aborts the request)")
-
-
-async def _stats(port):
-    reader, writer = await asyncio.open_connection("127.0.0.1", port)
-    writer.write(b"GET /stats HTTP/1.1\r\nHost: demo\r\n\r\n")
-    await writer.drain()
-    raw = await reader.read()
-    writer.close()
-    return json.loads(raw.partition(b"\r\n\r\n")[2])
 
 
 async def scene(args):
@@ -116,7 +93,7 @@ async def scene(args):
         seed=7, stop=["7 "],
     )
 
-    st = await _stats(server.port)
+    _, st = await hc.get_json(server.port, "/stats")
     print("\n/stats:", json.dumps({
         k: st[k] for k in (
             "requests_served", "finished_requests", "emitted_tokens",
@@ -125,6 +102,15 @@ async def scene(args):
     }, indent=2))
     print("target pool pages used:", st["target_pool"]["used_pages"],
           "(0 = every page returned, including the aborted request's)")
+
+    _, _, body = await hc.request(server.port, "GET", "/metrics")
+    wanted = ("serving_ttft_seconds_sum", "serving_ttft_seconds_count",
+              "serving_itl_seconds_sum", "serving_itl_seconds_count",
+              "serving_requests_finished_total")
+    print("\n/metrics (excerpt):")
+    for line in body.decode().splitlines():
+        if line.startswith(wanted):
+            print(" ", line)
 
     serve_task.cancel()
     try:

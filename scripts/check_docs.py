@@ -57,6 +57,8 @@ def main():
         errors.append("docs/ARCHITECTURE.md is missing")
     if not (REPO / "docs" / "SERVING.md").exists():
         errors.append("docs/SERVING.md is missing")
+    if not (REPO / "docs" / "OBSERVABILITY.md").exists():
+        errors.append("docs/OBSERVABILITY.md is missing")
     if errors:
         print("docs check FAILED:")
         for e in errors:

@@ -15,9 +15,11 @@ echo "== serving benchmark (smoke, Engine over device-resident paged KV) =="
 # rate, copy telemetry) so the perf trajectory is tracked across PRs.
 # --par-mode both also A/Bs the fused cross-request PAR scheduler against
 # two-phase rounds on a staggered workload (the PAR smoke: rounds-to-drain
-# + fused-slot occupancy land in the JSON).
+# + fused-slot occupancy land in the JSON).  --trace-out records the wdos
+# arm with the span tracer and exports the staggered round timeline as
+# Perfetto-loadable Chrome-trace JSON (validated below).
 python -m benchmarks.bench_serving --smoke --kv-path paged --par-mode both \
-    --json BENCH_serving.json
+    --json BENCH_serving.json --trace-out TRACE_wdos.json
 
 echo "== paged-path kernel smoke (batch 4, Pallas interpret mode) =="
 # Exercises the kernel-wired decode path end to end every run: the Engine
@@ -25,11 +27,13 @@ echo "== paged-path kernel smoke (batch 4, Pallas interpret mode) =="
 python -m benchmarks.bench_serving --smoke --kv-path paged --paged-attn pallas \
     --json BENCH_serving_pallas.json
 
-echo "== HTTP serving front-end smoke (stream, stop/top_p, disconnect->abort, 429) =="
-# Spins up serving/server.py over asyncio streams and drives it with raw
-# socket clients: SSE bit-identity vs Engine.run, a mid-stream disconnect
-# that must return every pool page, and a fail-fast 429 under saturation.
-python scripts/server_smoke.py
+echo "== HTTP serving front-end smoke (stream, stop/top_p, disconnect->abort, 429, /metrics) =="
+# Spins up serving/server.py over asyncio streams and drives it through the
+# shared serving/http_client.py: SSE bit-identity vs Engine.run, a
+# mid-stream disconnect that must return every pool page, a fail-fast 429
+# under saturation, and a GET /metrics scrape asserting the core Prometheus
+# series; headline observability gauges merge into BENCH_serving.json.
+python scripts/server_smoke.py --json BENCH_serving.json
 
 echo "== open-loop Poisson load harness (TTFT/ITL/E2E percentiles) =="
 # Appends "async_load" latency percentiles (A/B par_mode off vs wdos at
@@ -57,6 +61,27 @@ if load:
                   f"{e['tokens_per_s']:.1f} tok/s,",
                   f"TTFT p99 {e['ttft_s']['p99']*1e3:.0f} ms,",
                   f"E2E p99 {e['e2e_s']['p99']*1e3:.0f} ms")
+obs = json.load(open("BENCH_serving.json")).get("observability")
+if obs:
+    print("observability:", {k: round(v, 4) if isinstance(v, float) else v
+                             for k, v in sorted(obs.items())})
+EOF
+
+echo "== wdos round-timeline trace (Chrome-trace schema gate) =="
+# The bench's --trace-out must round-trip through the Chrome-trace schema
+# checker non-empty — the same JSON a developer drops into Perfetto.
+python - <<'EOF'
+import json
+from repro.serving import validate_chrome_trace
+trace = json.load(open("TRACE_wdos.json"))
+problems = validate_chrome_trace(trace)
+assert not problems, problems[:5]
+events = trace["traceEvents"]
+assert len(events) > 10, f"trace suspiciously small: {len(events)} events"
+tracks = {e["args"]["name"] for e in events if e["ph"] == "M"}
+assert "engine" in tracks and any(t.startswith("row") for t in tracks), tracks
+print(f"TRACE_wdos.json OK: {len(events)} events across "
+      f"{len(tracks)} tracks {sorted(tracks)}")
 EOF
 
 echo "== tier-1 tests (gate) =="

@@ -2,7 +2,8 @@
 """CI smoke for the HTTP serving front-end (scripts/ci.sh gate).
 
 Spins up ``CompletionServer`` on a free port over the smoke-scale toy pair
-and drives it with raw-socket HTTP clients:
+and drives it through the shared ``repro.serving.http_client`` — the same
+raw HTTP/1.1 protocol layer the tests and examples use:
 
 1. **bit-identity through the wire** — a streamed SSE completion and a
    non-streamed one must both reproduce the synchronous ``Engine.run``
@@ -12,64 +13,69 @@ and drives it with raw-socket HTTP clients:
 3. **disconnect → abort** — a client hangs up mid-stream; ``/stats`` must
    show every pool page returned;
 4. **backpressure** — an over-limit ``"wait": false`` submit must get
-   HTTP 429 while the queue is saturated.
+   HTTP 429 while the queue is saturated;
+5. **observability** — ``GET /metrics`` serves Prometheus text with the
+   core series populated by the traffic above; the headline gauges merge
+   into ``BENCH_serving.json`` under ``"observability"``.
 
 Exit 0 on success, non-zero (with an assertion message) on any failure.
 
-    PYTHONPATH=src python scripts/server_smoke.py
+    PYTHONPATH=src python scripts/server_smoke.py [--json BENCH_serving.json]
 """
+import argparse
 import asyncio
 import json
+import os
 import sys
 
 import numpy as np
 
-
-async def _request(port, method, path, payload=None):
-    reader, writer = await asyncio.open_connection("127.0.0.1", port)
-    body = json.dumps(payload).encode() if payload is not None else b""
-    writer.write(
-        (
-            f"{method} {path} HTTP/1.1\r\nHost: ci\r\n"
-            f"Content-Length: {len(body)}\r\n\r\n"
-        ).encode() + body
-    )
-    await writer.drain()
-    raw = await reader.read()
-    writer.close()
-    head, _, rest = raw.partition(b"\r\n\r\n")
-    status = int(head.split(b" ", 2)[1])
-    return status, rest
-
-
-async def _stream(port, payload):
-    """POST a streaming completion; return (status, [chunk dicts])."""
-    reader, writer = await asyncio.open_connection("127.0.0.1", port)
-    body = json.dumps(dict(payload, stream=True)).encode()
-    writer.write(
-        (
-            "POST /v1/completions HTTP/1.1\r\nHost: ci\r\n"
-            f"Content-Length: {len(body)}\r\n\r\n"
-        ).encode() + body
-    )
-    await writer.drain()
-    raw = await reader.read()
-    writer.close()
-    head, _, rest = raw.partition(b"\r\n\r\n")
-    status = int(head.split(b" ", 2)[1])
-    if status != 200:
-        return status, []
-    events = [e for e in rest.decode().split("\n\n") if e.strip()]
-    assert events[-1] == "data: [DONE]", f"missing [DONE]: {events[-1]!r}"
-    assert all(e.startswith("data: ") for e in events), "bad SSE framing"
-    return status, [json.loads(e[len("data: "):]) for e in events[:-1]]
+# /metrics must expose at least these family names after the smoke traffic
+# (the ISSUE floor is 12 distinct series; the engine registers more).
+CORE_SERIES = (
+    "serving_ttft_seconds",
+    "serving_itl_seconds",
+    "serving_round_wall_seconds",
+    "serving_admission_wait_seconds",
+    "serving_round_acceptance",
+    "serving_acceptance_rate",
+    "serving_rounds_total",
+    "serving_steps_total",
+    "serving_queue_depth",
+    "serving_active_requests",
+    "serving_pool_pages",
+    "serving_requests_submitted_total",
+    "serving_requests_finished_total",
+    "serving_tokens_emitted_total",
+    "serving_http_requests_total",
+    "serving_http_429_total",
+)
 
 
-async def main():
+def _headline(metrics) -> dict:
+    """The gauges worth tracking across PRs, pulled from the registry."""
+    v = metrics.value
+    ttft = metrics.get("ttft_seconds")
+    itl = metrics.get("itl_seconds")
+    return {
+        "requests_finished": v("requests_finished_total", reason="length")
+        + v("requests_finished_total", reason="stop")
+        + v("requests_finished_total", reason="abort"),
+        "tokens_emitted": v("tokens_emitted_total"),
+        "acceptance_rate": v("acceptance_rate"),
+        "ttft_mean_s": ttft.sum_value() / max(ttft.value(), 1),
+        "itl_mean_s": itl.sum_value() / max(itl.value(), 1),
+        "http_429": v("http_429_total"),
+        "series_families": len(list(metrics.series_names())),
+    }
+
+
+async def run(json_path=None):
     from repro.launch.serve import build_pair
     from repro.serving import (
         AsyncEngine, CompletionServer, Engine, EngineConfig, SamplingParams,
     )
+    from repro.serving import http_client as hc
 
     print("building smoke pair ...")
     target, draft = build_pair(seed=0, s_max=128, quantize=False)
@@ -93,17 +99,17 @@ async def main():
     serve_task = asyncio.ensure_future(server.serve_forever())
     print(f"server up on :{port}")
 
-    status, body = await _request(port, "GET", "/healthz")
-    assert status == 200 and json.loads(body)["status"] == "ok"
+    status, decoded = await hc.get_json(port, "/healthz")
+    assert status == 200 and decoded["status"] == "ok"
 
     # 1. bit-identity: streamed and whole completions == Engine.run
-    status, chunks = await _stream(
+    status, _, chunks = await hc.sse_request(
         port, {"prompt": prompts[0], "max_tokens": 10}
     )
     toks = [c["token"] for c in chunks if c["token"] is not None]
     assert status == 200 and toks == ref, f"SSE tokens {toks} != ref {ref}"
     assert chunks[-1]["finish_reason"] == "length"
-    status, body = await _request(
+    status, _, body = await hc.request(
         port, "POST", "/v1/completions",
         {"prompt": prompts[0], "max_tokens": 10},
     )
@@ -112,13 +118,13 @@ async def main():
 
     # 2. stop + top_p through the payload
     stop_s = f"{ref[4]} "
-    status, body = await _request(
+    status, _, body = await hc.request(
         port, "POST", "/v1/completions",
         {"prompt": prompts[0], "max_tokens": 10, "stop": stop_s},
     )
     obj = json.loads(body)
     assert obj["token_ids"] == ref[:4] and obj["finish_reason"] == "stop", obj
-    status, body = await _request(
+    status, _, body = await hc.request(
         port, "POST", "/v1/completions",
         {"prompt": prompts[0], "max_tokens": 10,
          "temperature": 0.8, "top_p": 1e-6, "seed": 3},
@@ -127,24 +133,16 @@ async def main():
     print("stop + top_p through HTTP OK")
 
     # 3. disconnect mid-stream -> abort -> pages return
-    reader, writer = await asyncio.open_connection("127.0.0.1", port)
-    body = json.dumps({
-        "prompt": prompts[1], "max_tokens": 100, "stream": True,
-    }).encode()
-    writer.write(
-        (
-            "POST /v1/completions HTTP/1.1\r\nHost: ci\r\n"
-            f"Content-Length: {len(body)}\r\n\r\n"
-        ).encode() + body
+    reader, writer = await hc.open_request(
+        port, "POST", "/v1/completions",
+        {"prompt": prompts[1], "max_tokens": 100, "stream": True},
     )
-    await writer.drain()
-    await reader.readuntil(b"\r\n\r\n")
+    await hc.read_head(reader)
     await reader.readuntil(b"\n\n")  # first token chunk
     writer.close()  # hang up mid-generation
     st = {}
     for _ in range(200):
-        status, body = await _request(port, "GET", "/stats")
-        st = json.loads(body)
+        status, st = await hc.get_json(port, "/stats")
         if st["target_pool"]["used_pages"] == 0 and st["active"] == 0:
             break
         await asyncio.sleep(0.05)
@@ -155,14 +153,14 @@ async def main():
 
     # 4. backpressure: saturate the 1-deep admission queue, expect 429
     hog_tasks = [
-        asyncio.ensure_future(_stream(
+        asyncio.ensure_future(hc.sse_request(
             port, {"prompt": prompts[i], "max_tokens": 40, "seed": i}
         ))
         for i in range(3)  # 2 slots + 1 queued = gate full
     ]
     got_429 = False
     for _ in range(200):
-        status, _chunks = await _stream(
+        status, _, _chunks = await hc.sse_request(
             port, {"prompt": prompts[3], "max_tokens": 4, "wait": False}
         )
         if status == 429:
@@ -173,15 +171,60 @@ async def main():
     assert got_429, "never observed HTTP 429 while the queue was saturated"
     print("backpressure 429 OK")
 
+    # 5. observability: scrape /metrics, assert the core series populated
+    status, head, body = await hc.request(port, "GET", "/metrics")
+    assert status == 200, status
+    assert "text/plain; version=0.0.4" in head, head
+    text = body.decode()
+    families = {
+        line.split()[2] for line in text.splitlines()
+        if line.startswith("# TYPE ")
+    }
+    for name in CORE_SERIES:
+        assert name in families, f"/metrics missing {name}"
+    assert len(families) >= 12, sorted(families)
+    m = engine.metrics
+    assert m.value("requests_submitted_total") >= 5
+    assert m.value("ttft_seconds") >= 5  # histogram value() == obs count
+    assert m.value("http_429_total") >= 1
+    print(f"/metrics exposes {len(families)} series families OK")
+
     serve_task.cancel()
     try:
         await serve_task
     except asyncio.CancelledError:
         pass
     await server.stop()
+
+    if json_path:
+        # merge the headline gauges into the serving trajectory file
+        # (same pattern as bench_server's "async_load" block)
+        merged = {}
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as f:
+                    merged = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        merged["observability"] = _headline(m)
+        with open(json_path, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        print(f"observability gauges merged into {json_path}")
+
     print("server smoke PASSED")
     return 0
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--json", default="BENCH_serving.json", metavar="PATH",
+        help="merge headline observability gauges into this trajectory "
+             "file under 'observability'; '' disables",
+    )
+    args = ap.parse_args(argv)
+    return asyncio.run(run(json_path=args.json or None))
+
+
 if __name__ == "__main__":
-    sys.exit(asyncio.run(main()))
+    sys.exit(main())

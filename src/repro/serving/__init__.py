@@ -30,8 +30,17 @@ The ASYNC front-end turns the engine into a service::
 per-request streams, cancellation -> ``Engine.abort`` (pages freed
 immediately), and a bounded admission queue (``QueueFullError`` on
 fail-fast overflow); ``server.CompletionServer`` serves it over HTTP
-(``POST /v1/completions`` with SSE streaming, ``/healthz``, ``/stats``)
-on stdlib asyncio streams — no framework dependency.
+(``POST /v1/completions`` with SSE streaming, ``/healthz``, ``/stats``,
+``/metrics``) on stdlib asyncio streams — no framework dependency.
+
+OBSERVABILITY (docs/OBSERVABILITY.md is the reference): every engine
+carries a ``MetricsRegistry`` (``observability.py`` — zero-dependency
+counters/gauges/histograms, Prometheus-text ``render()``) that the
+batcher, the async front-end, the HTTP server, and the benchmarks all
+share; pass ``Engine(..., trace=Tracer())`` to additionally record
+per-request span timelines exportable as Chrome-trace/Perfetto JSON
+(``tracing.py``).  Instrumentation is off-by-default-cheap and never
+adds host syncs — bit-identity is unaffected with tracing enabled.
 
 Internals (engine-owned, import from their modules if you must):
   paged_cache.PagedKVPool  — block-granular KV pages, free list, reservations
@@ -62,7 +71,21 @@ from repro.serving.engine import (
     serve_batch_host,
     serve_sd,
 )
+from repro.serving.observability import (
+    LATENCY_BUCKETS,
+    RATIO_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
 from repro.serving.server import CompletionServer
+from repro.serving.tracing import (
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    validate_chrome_trace,
+)
 
 __all__ = [
     # the Engine API
@@ -79,6 +102,17 @@ __all__ = [
     "AsyncEngine",
     "QueueFullError",
     "CompletionServer",
+    # observability: metrics registry + span tracer
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS",
+    "RATIO_BUCKETS",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "validate_chrome_trace",
     # deprecated run-to-drain shims (+ their config type)
     "serve_sd",
     "serve_apsd",

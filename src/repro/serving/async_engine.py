@@ -102,6 +102,12 @@ class AsyncEngine:
         self._cmds: Deque[tuple] = collections.deque()
         self._awaiting_admission: set = set()
         self._wake = threading.Event()
+        # published stats snapshot: built on whichever thread owns the
+        # engine at the time (here, before the worker exists; afterwards
+        # the worker republishes after each step) and swapped in with ONE
+        # attribute assignment — atomic under the GIL, so stats() always
+        # reads a complete, same-moment view
+        self._snapshot: dict = engine.stats_snapshot()
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -261,27 +267,27 @@ class AsyncEngine:
     def stats(self) -> dict:
         """JSON-safe service stats: queue/backpressure depth, slot and page
         residency, throughput counters, and the fused PAR telemetry when
-        par_mode="wdos"."""
-        eng = self.engine
-        t_stats, d_stats = eng.pool_stats()
-        batcher = eng._batcher
-        out = {
-            "queued": eng.queue_depth(),
-            "pending_admission": self._pending,
-            "max_queued": self.max_queued,
-            "active": eng.num_active(),
-            "max_batch": eng.cfg.max_batch,
-            "par_mode": eng.cfg.par_mode,
-            "steps": batcher.step_count,
-            "rounds": batcher.rounds,
-            "finished_requests": batcher.finished_count,
-            "emitted_tokens": batcher.finished_emitted,
-            "target_pool": dataclasses.asdict(t_stats),
-            "draft_pool": dataclasses.asdict(d_stats),
-        }
-        if batcher.fused.slots:
-            out["fused"] = batcher.fused.as_dict()
+        par_mode="wdos".
+
+        Engine-side numbers come from ONE published snapshot
+        (``Engine.stats_snapshot`` built on the worker thread after each
+        step), so queue depth, active count, and pool residency describe
+        the same moment — no separately-raced reads of a stepping engine.
+        Only the loop-owned backpressure fields are added here."""
+        out = dict(self._snapshot)
+        out["pending_admission"] = self._pending
+        out["max_queued"] = self.max_queued
         return out
+
+    @property
+    def metrics(self):
+        """The engine's ``MetricsRegistry`` (what GET /metrics renders)."""
+        return self.engine.metrics
+
+    @property
+    def tracer(self):
+        """The engine's span tracer (NULL_TRACER unless one was passed)."""
+        return self.engine.tracer
 
     # -- worker thread -------------------------------------------------------
 
@@ -311,20 +317,18 @@ class AsyncEngine:
                     self._cmds.clear()
                 self._wake.clear()
                 releases: List[int] = []
+                posts: List[tuple] = []
                 for cmd in cmds:
                     if cmd[0] == "abort":
                         rid = cmd[1]
                         if eng.abort(rid):
-                            loop.call_soon_threadsafe(self._post, rid, _ABORTED)
+                            posts.append((rid, _ABORTED))
                     elif cmd[0] == "release":
                         releases.append(cmd[1])
                 has_work = eng.has_unfinished()
                 if has_work:
-                    outs = eng.step()
-                    for out in outs:
-                        loop.call_soon_threadsafe(
-                            self._post, out.request_id, out
-                        )
+                    for out in eng.step():
+                        posts.append((out.request_id, out))
                 # always: an abort can release a QUEUED request's permit
                 # even when no step ran
                 self._check_admissions()
@@ -332,6 +336,17 @@ class AsyncEngine:
                 # see the Request before its record drops
                 for rid in releases:
                     eng.release_request(rid)
+                if has_work or cmds:
+                    # republish the stats snapshot: single attribute
+                    # assignment (atomic under the GIL), so a concurrent
+                    # stats() sees either the old or the new complete view.
+                    # Published BEFORE the outputs below so that by the
+                    # time a consumer observes its stream finish/abort,
+                    # stats() already reflects that state (freed pages,
+                    # decremented active count)
+                    self._snapshot = eng.stats_snapshot()
+                for rid, item in posts:
+                    loop.call_soon_threadsafe(self._post, rid, item)
                 if not has_work:
                     if self._stopping:
                         break

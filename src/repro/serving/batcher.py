@@ -19,11 +19,13 @@ speedup vs. the in-order baseline is reported in the batch summary.
 
 With ``par_mode="wdos"`` the overlap is no longer only priced — the engine
 EXECUTES the mixed phase plans (core/scheduler.plan_mixed_slot) as fused
-dispatches, and this module additionally accumulates the *measured*
-fused-slot telemetry (``FusedTelemetry``: slot counts, per-role row
-occupancy, wall seconds by slot kind, and the discrete-event pricing of the
-exact slots that ran).  ``bench_serving.py`` reports the analytic model and
-the measurement side by side so the model stays validated against reality.
+dispatches, and this module accounts the *measured* fused-slot telemetry
+into the shared ``MetricsRegistry`` (serving/observability.py): slot counts
+by kind, per-role row occupancy, wall seconds by dispatched program, and
+the discrete-event pricing of the exact slots that ran.  ``fused_summary()``
+derives the classic report (occupancy, mean rows/slot, modeled overlap
+speedup) from those counters, so ``bench_serving.py`` and the server's
+``GET /metrics`` read the very same numbers.
 
 Invariants this module owns: a request is admitted only when BOTH pools can
 reserve its worst case (so an active request can never OOM mid-flight);
@@ -40,6 +42,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import scheduler as sch
 from repro.core.scheduler import MixedSlotPlan, Queue
+from repro.serving.observability import MetricsRegistry
 from repro.serving.paged_cache import PagedKVPool, pages_for
 from repro.serving.request import DraftController, Request, RequestState
 
@@ -47,7 +50,6 @@ __all__ = [
     "BatchConfig",
     "ContinuousBatcher",
     "WDOSModelStats",
-    "FusedTelemetry",
 ]
 
 
@@ -98,64 +100,6 @@ class WDOSModelStats:
         return self.busy[q] / self.wdos_makespan if self.wdos_makespan else 0.0
 
 
-@dataclasses.dataclass
-class FusedTelemetry:
-    """Measured + modeled record of the fused PAR slots actually executed.
-
-    ``slots`` counts every dispatched slot; ``fused_slots`` those where
-    different requests' draft and verify work co-resided in one program
-    (the cross-request overlap itself); ``draft_row_slots`` /
-    ``verify_row_slots`` sum per-slot role occupancy.  Wall seconds are
-    split by which program the slot dispatched — the draft-only micro-step
-    vs the draft+verify fused program (``verify_wall_s`` counts every slot
-    with a verify pass, whether or not a neighbour drafted alongside, so
-    it is deliberately a superset of the ``fused_slots`` numerator) — so
-    the bench can compare the measured serialized cost on this backend
-    against what the WDOS pricing (accumulated into
-    ``modeled_*_makespan`` from the very plans that ran) says decoupled
-    queues would overlap."""
-
-    slots: int = 0
-    fused_slots: int = 0
-    draft_row_slots: int = 0
-    verify_row_slots: int = 0
-    draft_only_wall_s: float = 0.0
-    verify_wall_s: float = 0.0
-    modeled_wdos_makespan: float = 0.0
-    modeled_inorder_makespan: float = 0.0
-
-    @property
-    def occupancy(self) -> float:
-        """Fraction of slots with true cross-request draft/verify overlap."""
-        return self.fused_slots / self.slots if self.slots else 0.0
-
-    @property
-    def mean_rows_per_slot(self) -> float:
-        busy = self.draft_row_slots + self.verify_row_slots
-        return busy / self.slots if self.slots else 0.0
-
-    @property
-    def modeled_overlap_speedup(self) -> float:
-        """What the 4-queue WDOS would save over in-order issue on the
-        slots that actually ran (1.0 when nothing has been recorded)."""
-        if not self.modeled_wdos_makespan:
-            return 1.0
-        return self.modeled_inorder_makespan / self.modeled_wdos_makespan
-
-    def as_dict(self) -> Dict[str, float]:
-        return {
-            "slots": self.slots,
-            "fused_slots": self.fused_slots,
-            "occupancy": self.occupancy,
-            "draft_row_slots": self.draft_row_slots,
-            "verify_row_slots": self.verify_row_slots,
-            "mean_rows_per_slot": self.mean_rows_per_slot,
-            "draft_only_wall_s": self.draft_only_wall_s,
-            "verify_wall_s": self.verify_wall_s,
-            "modeled_overlap_speedup": self.modeled_overlap_speedup,
-        }
-
-
 class ContinuousBatcher:
     """Slot/queue bookkeeping + page-budget admission + WDOS round model."""
 
@@ -168,6 +112,7 @@ class ContinuousBatcher:
         d_layers: int,
         t_costs: Tuple[float, float],  # (per-layer load, per-layer compute)
         d_costs: Tuple[float, float],
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.cfg = cfg
         self.t_pool = t_pool
@@ -190,7 +135,41 @@ class ContinuousBatcher:
         self.finished_drafted = 0
         self.finished_accepted = 0
         self.wdos = WDOSModelStats()
-        self.fused = FusedTelemetry()
+        # fused-PAR slot accounting lives in the shared registry (the same
+        # series GET /metrics exports); fused_summary() derives the classic
+        # report from these counters.
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._m_rounds = self.metrics.counter(
+            "rounds_total", "Decode rounds dispatched"
+        )
+        self._m_finished = self.metrics.counter(
+            "requests_finished_total",
+            "Requests retired, by finish reason", ("reason",),
+        )
+        self._m_fused_slots = self.metrics.counter(
+            "fused_slots_total",
+            "Fused-PAR slots dispatched: kind=fused has cross-request "
+            "draft+verify co-residency, verify_only / draft_only do not",
+            ("kind",),
+        )
+        self._m_fused_rows = self.metrics.counter(
+            "fused_rows_total",
+            "Batch rows occupied across fused-PAR slots, by role",
+            ("role",),
+        )
+        self._m_fused_wall = self.metrics.counter(
+            "fused_wall_seconds_total",
+            "Measured wall seconds by dispatched program: program=verify "
+            "is any slot with a verify pass (fused or not), draft_only the "
+            "pure draft micro-step",
+            ("program",),
+        )
+        self._m_wdos_modeled = self.metrics.counter(
+            "wdos_modeled_seconds_total",
+            "Discrete-event makespan of the executed slots under each "
+            "schedule (wdos 4-queue vs in-order issue)",
+            ("schedule",),
+        )
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -238,6 +217,7 @@ class ContinuousBatcher:
         self.finished_emitted += len(req.out)
         self.finished_drafted += req.drafted
         self.finished_accepted += req.accepted
+        self._m_finished.labels(reason=req.finish_reason or "length").inc()
 
     def retire(self, slot: int, reason: str = "length") -> None:
         req = self.slots[slot]
@@ -281,6 +261,7 @@ class ContinuousBatcher:
         draft pipelines (RERAM loads) then one TLM verify pipeline (EMAC
         loads) depending on the request's final draft compute."""
         self.rounds += 1
+        self._m_rounds.inc()
         if not self.cfg.model_wdos or not work:
             return
         b = sch.new_builder()
@@ -313,15 +294,20 @@ class ContinuousBatcher:
         """Account one executed fused slot: measured wall time by slot kind
         plus the discrete-event pricing of exactly this plan (so the model
         and the measurement always describe the same schedule)."""
-        self.fused.slots += 1
-        self.fused.draft_row_slots += len(plan.draft_rows)
-        self.fused.verify_row_slots += len(plan.verify_rows)
-        if plan.fused:
-            self.fused.fused_slots += 1
+        kind = (
+            "fused" if plan.fused
+            else "verify_only" if plan.verify_rows
+            else "draft_only"
+        )
+        self._m_fused_slots.labels(kind=kind).inc()
+        if plan.draft_rows:
+            self._m_fused_rows.labels(role="draft").inc(len(plan.draft_rows))
         if plan.verify_rows:
-            self.fused.verify_wall_s += wall_s
-        else:
-            self.fused.draft_only_wall_s += wall_s
+            self._m_fused_rows.labels(role="verify").inc(len(plan.verify_rows))
+        # wall split is by dispatched PROGRAM, not by fused-ness: any slot
+        # with a verify pass ran the draft+verify fused program
+        program = "verify" if plan.verify_rows else "draft_only"
+        self._m_fused_wall.labels(program=program).inc(wall_s)
         if not self.cfg.model_wdos:
             return
         b = sch.new_builder()
@@ -333,10 +319,38 @@ class ContinuousBatcher:
             return
         s = sch.wdos_schedule(b.instrs)
         base = sch.inorder_schedule(b.instrs)
-        self.fused.modeled_wdos_makespan += s.makespan
-        self.fused.modeled_inorder_makespan += base.makespan
+        self._m_wdos_modeled.labels(schedule="wdos").inc(s.makespan)
+        self._m_wdos_modeled.labels(schedule="inorder").inc(base.makespan)
 
     # -- reporting ----------------------------------------------------------
+
+    def fused_summary(self) -> Optional[Dict[str, float]]:
+        """The classic fused-PAR report, derived from the registry counters
+        (None until a fused slot has run).  Key set is the stable interface
+        ``bench_serving`` and the CI trajectory files consume — identical
+        to the retired FusedTelemetry.as_dict()."""
+        slots_fam = self._m_fused_slots
+        slots = slots_fam.total()
+        if not slots:
+            return None
+        fused = slots_fam.value(kind="fused")
+        d_rows = self._m_fused_rows.value(role="draft")
+        v_rows = self._m_fused_rows.value(role="verify")
+        modeled_wdos = self._m_wdos_modeled.value(schedule="wdos")
+        modeled_inorder = self._m_wdos_modeled.value(schedule="inorder")
+        return {
+            "slots": int(slots),
+            "fused_slots": int(fused),
+            "occupancy": fused / slots,
+            "draft_row_slots": int(d_rows),
+            "verify_row_slots": int(v_rows),
+            "mean_rows_per_slot": (d_rows + v_rows) / slots,
+            "draft_only_wall_s": self._m_fused_wall.value(program="draft_only"),
+            "verify_wall_s": self._m_fused_wall.value(program="verify"),
+            "modeled_overlap_speedup": (
+                modeled_inorder / modeled_wdos if modeled_wdos else 1.0
+            ),
+        }
 
     def summary(self) -> Dict[str, object]:
         out = {
@@ -352,6 +366,7 @@ class ContinuousBatcher:
             "wdos_modeled_speedup": self.wdos.modeled_speedup,
             "wdos_utilization": {q.name: self.wdos.utilization(q) for q in Queue},
         }
-        if self.fused.slots:
-            out["fused"] = self.fused.as_dict()
+        fused = self.fused_summary()
+        if fused is not None:
+            out["fused"] = fused
         return out

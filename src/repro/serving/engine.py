@@ -94,8 +94,14 @@ from repro.serving.api import (
     warn_deprecated_once,
 )
 from repro.serving.batcher import BatchConfig, ContinuousBatcher
+from repro.serving.observability import (
+    LATENCY_BUCKETS,
+    RATIO_BUCKETS,
+    MetricsRegistry,
+)
 from repro.serving.paged_cache import PagedKVPool, device_pool_init, pages_for
 from repro.serving.request import Request, RequestState
+from repro.serving.tracing import NULL_TRACER, Tracer
 
 __all__ = [
     "Engine",
@@ -437,6 +443,8 @@ class Engine:
         draft: ServingModel,
         config: Optional[EngineConfig] = None,
         detokenize: Optional[Callable[[int], str]] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        trace: Optional[Tracer] = None,
     ):
         cfg = config if config is not None else EngineConfig()
         if cfg.paged_attn_impl is not None:
@@ -465,10 +473,27 @@ class Engine:
         self._t_pk, self._t_pv = device_pool_init(self._t_pool)
         self._d_pk, self._d_pv = device_pool_init(self._d_pool)
 
+        # observability: one shared registry — the batcher's fused/finish
+        # counters, the engine's latency histograms, and the server's
+        # GET /metrics all read and write the same families.  The tracer
+        # defaults to the no-op NULL_TRACER; when a real one is passed the
+        # engine adopts its clock so request timestamps and spans share a
+        # timebase.  All instrumentation wraps dispatch boundaries the hot
+        # loop already synchronizes at — no block_until_ready is added.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = trace if trace is not None else NULL_TRACER
+        if self.tracer.enabled:
+            self._now = self.tracer.now
+        else:
+            _t0 = time.perf_counter()
+            self._now = lambda: time.perf_counter() - _t0
+        self._init_metrics()
+
         self._batcher = ContinuousBatcher(
             cfg, self._t_pool, self._d_pool,
             t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
             t_costs=_wdos_costs(target.cfg), d_costs=_wdos_costs(draft.cfg),
+            metrics=self.metrics,
         )
         self._t_iface, self._d_iface = make_interface(target), make_interface(draft)
         self._t_step, self._d_step = _make_paged_step(target), _make_paged_step(draft)
@@ -477,7 +502,6 @@ class Engine:
             self._draft_slot_step = _make_masked_draft_step(draft)
         self._t_tables = _TableSet(cfg.max_batch, self._t_pool, self.max_model_len)
         self._d_tables = _TableSet(cfg.max_batch, self._d_pool, self.max_model_len)
-        self._table_upload_s = 0.0  # tiny int32 uploads (all that remains)
         self._requests: Dict[int, Request] = {}
         self._next_id = 0
         # token -> text for SamplingParams.stop matching (and the HTTP
@@ -485,6 +509,109 @@ class Engine:
         self._detokenize = (
             detokenize if detokenize is not None else default_detokenize
         )
+
+    # -- observability -------------------------------------------------------
+
+    def _init_metrics(self) -> None:
+        """Register the engine's metric families (docs/OBSERVABILITY.md is
+        the catalog).  Registration is idempotent, so sharing one registry
+        across engines is safe."""
+        m = self.metrics
+        self._m_submitted = m.counter(
+            "requests_submitted_total", "Requests accepted by add_request"
+        )
+        self._m_steps = m.counter("steps_total", "Engine steps executed")
+        self._m_emitted = m.counter(
+            "tokens_emitted_total", "Tokens delivered to consumers"
+        )
+        self._m_drafted = m.counter(
+            "tokens_drafted_total", "Draft tokens proposed"
+        )
+        self._m_accepted = m.counter(
+            "tokens_accepted_total", "Draft tokens accepted by verification"
+        )
+        self._m_table_upload = m.counter(
+            "table_upload_seconds_total",
+            "Host seconds uploading page tables / lengths (the only "
+            "per-round host->device traffic on the paged path)",
+        )
+        self._m_accept_rate = m.gauge(
+            "acceptance_rate", "Cumulative accepted/drafted fraction"
+        )
+        self._m_queue_depth = m.gauge(
+            "queue_depth", "Requests waiting for admission (QUEUED)"
+        )
+        self._m_active = m.gauge(
+            "active_requests", "Requests holding a decode slot"
+        )
+        self._m_pool_pages = m.gauge(
+            "pool_pages", "Paged-KV pool residency", ("pool", "state")
+        )
+        self._m_ttft = m.histogram(
+            "ttft_seconds", "Submit -> first delivered token",
+            buckets=LATENCY_BUCKETS,
+        )
+        self._m_itl = m.histogram(
+            "itl_seconds",
+            "Gap between successive token deliveries of one request "
+            "(round granularity: one observation per non-empty delta)",
+            buckets=LATENCY_BUCKETS,
+        )
+        self._m_round_wall = m.histogram(
+            "round_wall_seconds", "Wall time of one engine step",
+            buckets=LATENCY_BUCKETS,
+        )
+        self._m_admission_wait = m.histogram(
+            "admission_wait_seconds", "Submit -> admission into a decode slot",
+            buckets=LATENCY_BUCKETS,
+        )
+        self._m_round_accept = m.histogram(
+            "round_acceptance", "Per-round accepted/drafted fraction",
+            buckets=RATIO_BUCKETS,
+        )
+
+    def _refresh_gauges(self) -> None:
+        """Republish the level-style series (queue depth, active slots,
+        pool residency, cumulative acceptance) — called at step boundaries
+        and before a stats snapshot, never inside a dispatch."""
+        self._m_queue_depth.set(self.queue_depth())
+        self._m_active.set(self.num_active())
+        for name, pool in (("target", self._t_pool), ("draft", self._d_pool)):
+            st = pool.stats()
+            g = self._m_pool_pages
+            g.labels(pool=name, state="used").set(st.used_pages)
+            g.labels(pool=name, state="reserved").set(st.reserved_pages)
+            g.labels(pool=name, state="free").set(st.free_pages)
+        drafted = self._m_drafted.value()
+        if drafted:
+            self._m_accept_rate.set(self._m_accepted.value() / drafted)
+
+    def stats_snapshot(self) -> dict:
+        """One consistent, JSON-safe stats view, built in a single pass on
+        the calling thread.  The AsyncEngine worker publishes this object
+        atomically after each step, so ``/stats`` reports queue depth,
+        active-vs-queued counts, and pool residency from the SAME moment
+        instead of separately-raced reads."""
+        self._refresh_gauges()
+        t_stats, d_stats = self.pool_stats()
+        b = self._batcher
+        snap = {
+            "queued": self.queue_depth(),
+            "active": self.num_active(),
+            "max_batch": self.cfg.max_batch,
+            "par_mode": self.cfg.par_mode,
+            "steps": b.step_count,
+            "rounds": b.rounds,
+            "finished_requests": b.finished_count,
+            "emitted_tokens": b.finished_emitted,
+            "acceptance_rate": b.finished_accepted / max(b.finished_drafted, 1),
+            "target_pool": dataclasses.asdict(t_stats),
+            "draft_pool": dataclasses.asdict(d_stats),
+        }
+        fused = b.fused_summary()
+        if fused is not None:
+            snap["fused"] = fused
+        return snap
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -516,6 +643,9 @@ class Engine:
         self._next_id += 1
         self._requests[req.rid] = req
         self._batcher.submit(req)
+        req.submit_ts = self._now()
+        self._m_submitted.inc()
+        self.tracer.instant("engine", "submit", cat="lifecycle", rid=req.rid)
         return req.rid
 
     def abort(self, request_id: int) -> bool:
@@ -592,6 +722,13 @@ class Engine:
     def _admit(self) -> None:
         """Admit whatever fits and prefill it into both pools."""
         for slot, req in self._batcher.admit():
+            t_adm = self._now()
+            req.admit_ts = t_adm
+            if req.submit_ts is not None:
+                self._m_admission_wait.observe(t_adm - req.submit_ts)
+            self.tracer.instant(
+                f"row{slot}", "admit", cat="lifecycle", rid=req.rid
+            )
             self._t_pk, self._t_pv = self._prefill_into(
                 req, self._t_iface, self.target.params, req.t_seq,
                 self._t_pk, self._t_pv, self._t_tables, slot,
@@ -601,6 +738,10 @@ class Engine:
                 self._d_pk, self._d_pv, self._d_tables, slot,
             )
             req.state = RequestState.DECODE
+            self.tracer.rec(
+                f"row{slot}", "prefill", t_adm, self._now(),
+                cat="prefill", rid=req.rid,
+            )
 
     def step(self) -> List[RequestOutput]:
         """Admit what fits, then run ONE engine round over every active
@@ -616,10 +757,13 @@ class Engine:
 
     def _step_two_phase(self) -> List[RequestOutput]:
         cfg = self.cfg
+        t_step = self._now()
         self._admit()
         active = self._batcher.active()
         if not active:
             self._batcher.step_count += 1
+            self._m_steps.inc()
+            self._refresh_gauges()
             return []
 
         dls = {slot: req.controller.draft_len() for slot, req in active}
@@ -627,10 +771,11 @@ class Engine:
         round_dl = max(dls.values())
         any_sampled = any(not req.sampling.greedy for _, req in active)
 
-        t0 = time.perf_counter()
+        t0 = self._now()
         d_table, d_len0 = self._d_tables.load((s, r.d_seq) for s, r in active)
         t_table, t_len0 = self._t_tables.load((s, r.t_seq) for s, r in active)
-        self._table_upload_s += time.perf_counter() - t0
+        t_draft0 = self._now()
+        self._m_table_upload.inc(t_draft0 - t0)
 
         # ---- draft phase: round_dl proposal steps + 1 straggler step, all
         # batched; the draft pool stays on device across the loop.  Greedy
@@ -673,6 +818,11 @@ class Engine:
             drafts = np.stack(draft_cols, axis=1)  # (B, round_dl)
         else:
             drafts = np.asarray(jnp.stack(draft_cols, axis=1))
+        t_verify0 = self._now()
+        self.tracer.rec(
+            "engine", "draft_phase", t_draft0, t_verify0,
+            cat="phase", rows=len(active), dl=round_dl,
+        )
 
         # ---- verify phase: one batched pass scoring [last_tok, drafts...]
         window = np.zeros((cfg.max_batch, round_dl + 1), np.int32)
@@ -683,6 +833,10 @@ class Engine:
             t_table, t_len0,
         )
         p_logits = np.asarray(v_logits)  # (B, round_dl+1, V)
+        self.tracer.rec(
+            "engine", "verify_phase", t_verify0, self._now(),
+            cat="phase", rows=len(active),
+        )
 
         # ---- per-request accept / commit: a pure length update per row —
         # the KV was written in place by the steps above, and rewind just
@@ -708,6 +862,14 @@ class Engine:
             req.drafted += dl
             req.accepted += n_acc
             req.controller.observe(n_acc, dl)
+            self._m_drafted.inc(dl)
+            self._m_accepted.inc(n_acc)
+            self._m_round_accept.observe(n_acc / dl if dl else 0.0)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    f"row{slot}", "commit", cat="commit",
+                    rid=req.rid, drafted=dl, accepted=n_acc,
+                )
             work.append((req, dl))
             progressed.append(req)
             # both models wrote round_dl+1 positions; keep n_acc + 1
@@ -720,18 +882,46 @@ class Engine:
             if req.done:
                 self._t_tables.clear_row(slot)
                 self._d_tables.clear_row(slot)
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        f"row{slot}", "finish", cat="lifecycle",
+                        rid=req.rid, reason=req.finish_reason or "length",
+                    )
                 self._batcher.retire(slot)
         self._batcher.step_count += 1
+        self._m_steps.inc()
+        t_end = self._now()
+        self._m_round_wall.observe(t_end - t_step)
+        self.tracer.rec(
+            "engine", f"step#{self._batcher.step_count}", t_step, t_end,
+            cat="step", par_mode="off", rows=len(active),
+        )
+        self._refresh_gauges()
 
-        return [self._output_for(req) for req in progressed]
+        return [self._output_for(req, t_end) for req in progressed]
 
-    @staticmethod
-    def _output_for(req: Request) -> RequestOutput:
+    def _output_for(self, req: Request,
+                    now: Optional[float] = None) -> RequestOutput:
         """One streaming RequestOutput: the newly deliverable tokens since
         the last step (``Request.take_delta`` — stop-string holdback may
         defer tokens, never retract them) plus the cumulative deliverable
-        completion."""
+        completion.
+
+        This is also the delivery point, so TTFT/ITL are accounted here: a
+        non-empty delta is one delivery — the first observes TTFT (submit
+        to first token), each later one the inter-delivery gap (ITL at
+        round granularity)."""
         delta = req.take_delta()
+        if delta:
+            t = self._now() if now is None else now
+            self._m_emitted.inc(len(delta))
+            if req.first_emit_ts is None:
+                req.first_emit_ts = t
+                if req.submit_ts is not None:
+                    self._m_ttft.observe(t - req.submit_ts)
+            elif req.last_emit_ts is not None:
+                self._m_itl.observe(t - req.last_emit_ts)
+            req.last_emit_ts = t
         return RequestOutput(
             request_id=req.rid,
             prompt_token_ids=[int(t) for t in req.prompt],
@@ -764,9 +954,12 @@ class Engine:
         verify per round (its remaining cycle is at most ``max_dl + 1``
         slots), so each round streams tokens for every active request."""
         cfg = self.cfg
+        t_step = self._now()
         self._admit()
         if not self._batcher.active():
             self._batcher.step_count += 1
+            self._m_steps.inc()
+            self._refresh_gauges()
             return []
         wv = cfg.max_dl + 1  # fixed verify width: one compiled program
         horizon = cfg.max_dl + 2
@@ -778,10 +971,10 @@ class Engine:
 
         # page tables are lifetime-stable: one cached upload serves every
         # slot of the step (rows retired mid-step are inert via the masks)
-        t0 = time.perf_counter()
+        t0 = self._now()
         d_table = self._d_tables.table_dev()
         t_table = self._t_tables.table_dev()
-        self._table_upload_s += time.perf_counter() - t0
+        self._m_table_upload.inc(self._now() - t0)
 
         for _ in range(horizon):
             active = self._batcher.active()
@@ -815,7 +1008,7 @@ class Engine:
                 d_len[slot] = req.d_seq.length + req.pending_dl
                 d_mask[slot] = True
 
-            slot_t0 = time.perf_counter()
+            slot_t0 = self._now()
             if plan.verify_rows:
                 v_tok = np.zeros((b, wv), np.int32)
                 t_len = np.zeros((b,), np.int32)
@@ -846,9 +1039,32 @@ class Engine:
             # only drafting rows consume draft logits; skip the (B, V)
             # device->host pull on all-verify slots
             d_np = np.asarray(d_logits[:, -1, :]) if plan.draft_rows else None
-            self._batcher.record_fused_slot(
-                plan, time.perf_counter() - slot_t0, wv
-            )
+            slot_t1 = self._now()
+            self._batcher.record_fused_slot(plan, slot_t1 - slot_t0, wv)
+            if self.tracer.enabled:
+                # one engine-track span per fused dispatch plus a span on
+                # every participating row's track — the per-row staggering
+                # IS the wdos schedule made visible
+                kind = (
+                    "fused" if plan.fused
+                    else "verify_only" if plan.verify_rows
+                    else "draft_only"
+                )
+                self.tracer.rec(
+                    "engine", "fused_slot", slot_t0, slot_t1, cat="fused",
+                    kind=kind, draft_rows=len(plan.draft_rows),
+                    verify_rows=len(plan.verify_rows),
+                )
+                for slot in plan.draft_rows:
+                    self.tracer.rec(
+                        f"row{slot}", "draft", slot_t0, slot_t1,
+                        cat="draft", rid=by_slot[slot].rid,
+                    )
+                for slot in plan.verify_rows:
+                    self.tracer.rec(
+                        f"row{slot}", "verify", slot_t0, slot_t1,
+                        cat="verify", rid=by_slot[slot].rid,
+                    )
 
             # draft rows: append the next proposal (same argmax/sampling
             # rule and the same (round, position) key indices as the
@@ -891,6 +1107,14 @@ class Engine:
                 req.drafted += dl
                 req.accepted += n_acc
                 req.controller.observe(n_acc, dl)
+                self._m_drafted.inc(dl)
+                self._m_accepted.inc(n_acc)
+                self._m_round_accept.observe(n_acc / dl if dl else 0.0)
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        f"row{slot}", "commit", cat="commit",
+                        rid=req.rid, drafted=dl, accepted=n_acc,
+                    )
                 work.append((req, dl))
                 # target wrote wv positions, draft dl + 1 (incl. straggler);
                 # both keep exactly n_acc + 1
@@ -906,12 +1130,26 @@ class Engine:
                     # next step's admissions
                     self._t_tables.clear_row(slot)
                     self._d_tables.clear_row(slot)
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            f"row{slot}", "finish", cat="lifecycle",
+                            rid=req.rid,
+                            reason=req.finish_reason or "length",
+                        )
                     self._batcher.retire(slot)
 
         self._batcher.model_round(work)
         self._batcher.step_count += 1
+        self._m_steps.inc()
+        t_end = self._now()
+        self._m_round_wall.observe(t_end - t_step)
+        self.tracer.rec(
+            "engine", f"step#{self._batcher.step_count}", t_step, t_end,
+            cat="step", par_mode="wdos", rows=len(touched),
+        )
+        self._refresh_gauges()
 
-        return [self._output_for(req) for req in touched.values()]
+        return [self._output_for(req, t_end) for req in touched.values()]
 
     # -- drain / reporting ---------------------------------------------------
 
@@ -952,7 +1190,7 @@ class Engine:
         s["kv_path"] = "paged"
         s["par_mode"] = self.cfg.par_mode
         s["kv_copy_s"] = 0.0  # no host K/V copies exist on this path
-        s["table_upload_s"] = self._table_upload_s
+        s["table_upload_s"] = self._m_table_upload.value()
         return s
 
 

@@ -111,6 +111,15 @@ class Request:
     emitted_total: int = 0  # committed tokens incl. the final round's overshoot
     admitted_step: int = -1
     finished_step: int = -1
+    # observability timestamps (tracer-relative seconds), stamped by the
+    # engine at lifecycle boundaries — the request itself never reads a
+    # clock, so Request stays schedule- and instrumentation-agnostic.
+    # submit/admit feed the admission-wait histogram; first/last emit feed
+    # TTFT and inter-token-latency.
+    submit_ts: Optional[float] = None
+    admit_ts: Optional[float] = None
+    first_emit_ts: Optional[float] = None
+    last_emit_ts: Optional[float] = None
     # (mode, drafted, accepted, emitted) per round — the APSD round log the
     # serve_apsd compatibility wrapper rebuilds its stats from
     history: List[Tuple[int, int, int, int]] = dataclasses.field(

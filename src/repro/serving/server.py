@@ -10,7 +10,10 @@ one ``AsyncEngine.generate`` iterator per completion.  Endpoints::
                             "stop": ["7 "], "wait": true}
     GET  /healthz          liveness: {"status": "ok"}
     GET  /stats            AsyncEngine.stats(): queue depth, pool residency,
-                           fused PAR telemetry, throughput counters
+                           fused PAR telemetry, throughput counters — all
+                           from ONE worker-published snapshot
+    GET  /metrics          Prometheus text exposition of the engine's
+                           MetricsRegistry (docs/OBSERVABILITY.md catalog)
 
 ``"stream": true`` answers with Server-Sent Events: one ``data:`` chunk per
 token (id + detokenized text + running index), a final chunk carrying
@@ -147,6 +150,15 @@ class CompletionServer:
         )
         self._server: Optional[asyncio.AbstractServer] = None
         self.requests_served = 0
+        m = async_engine.metrics
+        self._m_http = m.counter(
+            "http_requests_total", "HTTP requests answered, by route/status",
+            ("route", "status"),
+        )
+        self._m_429 = m.counter(
+            "http_429_total",
+            "Completions rejected with 429 (backpressure fail-fast)",
+        )
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -171,9 +183,17 @@ class CompletionServer:
 
     # -- connection handling -------------------------------------------------
 
+    _ROUTES = ("/healthz", "/stats", "/metrics", "/v1/completions")
+
+    def _count(self, route: str, status: int) -> None:
+        self._m_http.labels(route=route, status=str(status)).inc()
+        if status == 429:
+            self._m_429.inc()
+
     async def _handle(
         self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter
     ) -> None:
+        route = "unknown"
         try:
             try:
                 try:
@@ -182,27 +202,45 @@ class CompletionServer:
                     return  # client went away before sending a full request
                 except asyncio.LimitOverrunError:
                     raise _HTTPError(400, "headers too large")
+                route = path if path in self._ROUTES else "other"
                 self.requests_served += 1
+                self.engine.tracer.instant(
+                    "http", "request", cat="http", method=method, route=route
+                )
                 if path == "/healthz" and method == "GET":
                     writer.write(_json_response(200, {"status": "ok"}))
+                    self._count(route, 200)
                 elif path == "/stats" and method == "GET":
                     stats = self.engine.stats()
                     stats["requests_served"] = self.requests_served
                     writer.write(_json_response(200, stats))
+                    self._count(route, 200)
+                elif path == "/metrics" and method == "GET":
+                    # count BEFORE rendering so the scrape sees itself —
+                    # Prometheus convention, and it keeps the series
+                    # non-empty from the very first scrape
+                    self._count(route, 200)
+                    writer.write(_response(
+                        200, self.engine.metrics.render().encode(),
+                        "text/plain; version=0.0.4",
+                    ))
                 elif path == "/v1/completions" and method == "POST":
                     await self._completion(reader, writer, body)
-                elif path in ("/healthz", "/stats", "/v1/completions"):
+                    self._count(route, 200)
+                elif path in self._ROUTES:
                     raise _HTTPError(405, f"{method} not allowed on {path}")
                 else:
                     raise _HTTPError(404, f"no route for {path}")
             except _HTTPError as e:
                 writer.write(_json_response(e.status, {"error": e.message}))
+                self._count(route, e.status)
             except (ConnectionError, asyncio.CancelledError):
                 raise
             except Exception as e:  # engine/worker failure: a real 500
                 writer.write(_json_response(
                     500, {"error": f"{type(e).__name__}: {e}"}
                 ))
+                self._count(route, 500)
             await writer.drain()
         except (ConnectionError, asyncio.CancelledError):
             pass
@@ -284,6 +322,8 @@ class CompletionServer:
         gen = agen.__aiter__()
         head_sent = False
         index = 0
+        rid = None
+        tracer = self.engine.tracer
         try:
             while True:
                 nxt = asyncio.ensure_future(gen.__anext__())
@@ -293,6 +333,7 @@ class CompletionServer:
                 if nxt not in done:  # client disconnected mid-stream
                     nxt.cancel()
                     await asyncio.gather(nxt, return_exceptions=True)
+                    tracer.instant("http", "disconnect", cat="http", rid=rid)
                     await gen.aclose()  # -> Engine.abort, pages freed
                     return
                 try:
@@ -315,6 +356,7 @@ class CompletionServer:
                 if not head_sent:
                     writer.write(self._SSE_HEAD)
                     head_sent = True
+                rid = out.request_id
                 finish_reason = out.outputs[0].finish_reason
                 for i, tok in enumerate(out.new_token_ids):
                     is_final = (
@@ -348,6 +390,9 @@ class CompletionServer:
                 writer.write(self._SSE_HEAD)
             writer.write(b"data: [DONE]\n\n")
             await writer.drain()
+            tracer.instant(
+                "http", "completion", cat="http", rid=rid, tokens=index
+            )
         except (ConnectionError, OSError):
             pass  # failed write: the finally's aclose aborts the request
         finally:
@@ -358,6 +403,7 @@ class CompletionServer:
     async def _respond_whole(self, reader, writer, agen, prompt) -> None:
         watcher = asyncio.ensure_future(self._watch_disconnect(reader))
         collect = asyncio.ensure_future(self._collect(agen))
+        tracer = self.engine.tracer
         try:
             done, _ = await asyncio.wait(
                 {collect, watcher}, return_when=asyncio.FIRST_COMPLETED
@@ -365,8 +411,13 @@ class CompletionServer:
             if collect not in done:  # disconnected while we were decoding
                 collect.cancel()  # cancels generate() -> abort
                 await asyncio.gather(collect, return_exceptions=True)
+                tracer.instant("http", "disconnect", cat="http", rid=None)
                 return
             rid, token_ids, finish_reason = collect.result()
+            tracer.instant(
+                "http", "completion", cat="http", rid=rid,
+                tokens=len(token_ids),
+            )
             writer.write(_json_response(200, {
                 "id": rid,
                 "object": "completion",
@@ -411,18 +462,29 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--par-mode", choices=["off", "wdos"], default="off")
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Chrome-trace/Perfetto JSON timeline of "
+                         "the whole serving session to PATH on shutdown")
+    ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                    help="stream structured span/instant events to PATH as "
+                         "JSONL while serving")
     args = ap.parse_args(argv)
 
     from repro.launch.serve import build_pair
     from repro.serving.engine import Engine
     from repro.serving.api import EngineConfig
+    from repro.serving.tracing import Tracer
+
+    tracer = None
+    if args.trace_out or args.trace_jsonl:
+        tracer = Tracer(jsonl_path=args.trace_jsonl)
 
     print(f"building TLM/DLM pair (quantize={not args.no_quant}) ...")
     target, draft = build_pair(seed=0, s_max=256, quantize=not args.no_quant)
     engine = Engine(target, draft, EngineConfig(
         max_batch=args.max_batch, page_size=args.page_size,
         par_mode=args.par_mode,
-    ))
+    ), trace=tracer)
 
     async def _run():
         server = CompletionServer(
@@ -430,7 +492,8 @@ def main(argv=None):
         )
         await server.start(args.host, args.port)
         print(f"listening on http://{args.host}:{server.port}  "
-              "(POST /v1/completions, GET /healthz, GET /stats)")
+              "(POST /v1/completions, GET /healthz, GET /stats, "
+              "GET /metrics)")
         try:
             await server.serve_forever()
         finally:
@@ -440,6 +503,13 @@ def main(argv=None):
         asyncio.run(_run())
     except KeyboardInterrupt:
         pass
+    finally:
+        if tracer is not None:
+            if args.trace_out:
+                tracer.export(args.trace_out)
+                print(f"trace written to {args.trace_out} "
+                      "(load in https://ui.perfetto.dev)")
+            tracer.close()
     return 0
 
 

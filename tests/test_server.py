@@ -2,8 +2,9 @@
 wire, disconnect -> abort, backpressure 429, and route/validation errors.
 
 Each test runs a real ``CompletionServer`` on a loopback socket (port 0)
-and speaks raw HTTP/1.1 through asyncio streams — the same protocol layer
-a load balancer or the bench harness sees, no test-only shortcuts.
+and speaks raw HTTP/1.1 through the shared ``serving.http_client`` —
+the same protocol layer a load balancer or the bench harness sees, no
+test-only shortcuts.
 """
 import asyncio
 import json
@@ -19,6 +20,7 @@ from repro.serving import (
     EngineConfig,
     SamplingParams,
 )
+from repro.serving import http_client as hc
 
 
 def _prompts(n, seed=0, vocab=512):
@@ -42,33 +44,20 @@ def _sync_ref(pair, prompt, sp):
 
 
 class _Served:
-    """One live server + helpers for raw-socket clients."""
+    """One live server, with the shared client bound to its port."""
 
     def __init__(self, server):
         self.server = server
         self.port = server.port
 
     async def request(self, method, path, payload=None):
-        reader, writer = await asyncio.open_connection("127.0.0.1", self.port)
-        body = json.dumps(payload).encode() if payload is not None else b""
-        writer.write(
-            (
-                f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
-                f"Content-Length: {len(body)}\r\n\r\n"
-            ).encode() + body
-        )
-        await writer.drain()
-        raw = await reader.read()
-        writer.close()
-        head, _, rest = raw.partition(b"\r\n\r\n")
-        return int(head.split(b" ", 2)[1]), head.decode(), rest
+        return await hc.request(self.port, method, path, payload)
 
     async def stream_raw(self, payload):
         """POST stream=true; return (status, head, raw SSE body bytes)."""
-        status, head, rest = await self.request(
+        return await self.request(
             "POST", "/v1/completions", dict(payload, stream=True)
         )
-        return status, head, rest
 
 
 def _with_server(pair, engine_cfg=None, max_queued=8):
@@ -226,20 +215,11 @@ def test_client_disconnect_aborts_and_frees_pages(pair):
 
     async def fn(srv):
         # open a long streaming completion, read one chunk, hang up
-        reader, writer = await asyncio.open_connection(
-            "127.0.0.1", srv.port
+        reader, writer = await hc.open_request(
+            srv.port, "POST", "/v1/completions",
+            {"prompt": p_victim, "max_tokens": 100, "stream": True},
         )
-        body = json.dumps({
-            "prompt": p_victim, "max_tokens": 100, "stream": True,
-        }).encode()
-        writer.write(
-            (
-                "POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
-                f"Content-Length: {len(body)}\r\n\r\n"
-            ).encode() + body
-        )
-        await writer.drain()
-        await reader.readuntil(b"\r\n\r\n")
+        await hc.read_head(reader)
         await reader.readuntil(b"\n\n")  # first token chunk is out
         writer.close()  # mid-generation disconnect
         # a healthy neighbour keeps decoding, bit-identical
