@@ -236,8 +236,80 @@ def _par_ab(target, draft, prompts, max_tokens, rows, record,
     ))
 
 
+def _kv_quant_ab(target, draft, prompts, max_tokens, rows, record, arms,
+                 page_size=16):
+    """A/B the paged-KV storage precisions at a FIXED pool byte budget.
+
+    The budget is what the fp arm needs to hold the full batch's worst-case
+    requests; each arm then gets ``budget // bytes_per_page(arm)`` pages, so
+    the int8 arm's ~3.7x smaller pages become ~3.7x more pages — i.e. more
+    RESIDENT requests at the same memory, the capacity win compressed KV
+    exists for.  Per arm this records bytes/token, max resident requests at
+    the budget, acceptance rate, and tokens/s; ``scripts/ci.sh`` gates the
+    int8-vs-none acceptance delta at <= 0.05 absolute."""
+    from repro.serving import Engine, EngineConfig, SamplingParams
+    from repro.serving.paged_cache import pages_for
+
+    n_req = len(prompts)
+    ml = max(len(p) for p in prompts) + max_tokens + 3
+    pages_per_req = pages_for(ml, page_size)
+    out = {"arms": {}, "page_size": page_size, "max_model_len": ml}
+    record["kv_quant"] = out
+    budget = None
+    for arm in arms:
+        eng = Engine(target, draft, EngineConfig(
+            max_batch=n_req, page_size=page_size, draft_len=3,
+            max_model_len=ml, kv_quant=arm,
+        ))
+        t0 = time.perf_counter()
+        outs, summary = eng.run(prompts, SamplingParams(max_tokens=max_tokens))
+        dt = time.perf_counter() - t0
+        st = summary["target_pool"]
+        bpp = int(st.bytes_per_token) * st.page_size
+        if budget is None:
+            # the FIRST arm (fp when A/Bing) sizes the shared byte budget
+            budget = st.num_pages * bpp
+            out["pool_budget_bytes"] = budget
+        pages_at_budget = budget // bpp
+        resident = pages_at_budget // pages_per_req
+        tps = sum(int(o.shape[0]) for o in outs) / dt
+        out["arms"][arm] = {
+            "bytes_per_token": st.bytes_per_token,
+            "pages_at_budget": pages_at_budget,
+            "max_resident_requests_at_budget": resident,
+            "acceptance_rate": summary["acceptance_rate"],
+            "tokens_per_s": tps,
+            "rounds": summary["rounds"],
+        }
+        rows.append((
+            f"serving_kv_quant_{arm}", 0.0,
+            f"{st.bytes_per_token:.0f} B/token; {resident} resident req @ "
+            f"budget; acc {summary['acceptance_rate']:.3f}; {tps:.1f} tok/s",
+        ))
+    if "none" in out["arms"] and "int8" in out["arms"]:
+        a, b = out["arms"]["none"], out["arms"]["int8"]
+        out["bytes_per_token_ratio"] = (
+            a["bytes_per_token"] / b["bytes_per_token"]
+        )
+        out["resident_requests_ratio"] = (
+            b["max_resident_requests_at_budget"]
+            / max(a["max_resident_requests_at_budget"], 1)
+        )
+        out["acceptance_delta"] = abs(
+            b["acceptance_rate"] - a["acceptance_rate"]
+        )
+        rows.append((
+            "serving_kv_quant_ab", 0.0,
+            f"{out['bytes_per_token_ratio']:.2f}x fewer bytes/token, "
+            f"{out['resident_requests_ratio']:.2f}x resident requests @ "
+            f"fixed budget; acceptance delta "
+            f"{out['acceptance_delta']:.3f}",
+        ))
+
+
 def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
-        par_mode: str = "off", json_path: str = None, trace_out: str = None):
+        par_mode: str = "off", kv_quant: str = "none", json_path: str = None,
+        trace_out: str = None):
     from repro.launch.serve import build_pair
     from repro.serving import Engine, EngineConfig, SamplingParams
 
@@ -379,6 +451,12 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
             "num_pages": st.num_pages,
         })
 
+    # --- compressed-KV A/B (int8 pools + scales vs dense, fixed byte budget)
+    if kv_quant != "none":
+        record["meta"]["kv_quant"] = kv_quant
+        arms = ("none", "int8") if kv_quant == "both" else (kv_quant,)
+        _kv_quant_ab(target, draft, prompts, max_tokens, rows, record, arms)
+
     # --- PAR scheduler A/B (fused cross-request rounds vs two-phase)
     if par_mode == "both":
         _par_ab(target, draft, prompts, max_tokens, rows, record,
@@ -414,6 +492,13 @@ def main(argv=None):
              "also A/B them on a staggered-admission workload",
     )
     ap.add_argument(
+        "--kv-quant", choices=["none", "int8", "both"], default="none",
+        help="KV storage precision for the compressed-KV section: dense "
+             "(skip the section), int8-only, or 'both' to A/B int8 vs "
+             "dense at a fixed pool byte budget (bytes/token + resident "
+             "request capacity + acceptance delta)",
+    )
+    ap.add_argument(
         "--json", default="BENCH_serving.json", metavar="PATH",
         help="machine-readable output (perf trajectory across PRs); "
              "'' disables",
@@ -428,8 +513,8 @@ def main(argv=None):
     print("name,us_per_call,derived")
     for n, us, derived in run(
         smoke=args.smoke, kv_path=args.kv_path, paged_attn=args.paged_attn,
-        par_mode=args.par_mode, json_path=args.json or None,
-        trace_out=args.trace_out or None,
+        par_mode=args.par_mode, kv_quant=args.kv_quant,
+        json_path=args.json or None, trace_out=args.trace_out or None,
     ):
         print(f"{n},{us:.1f},{derived}")
     return 0

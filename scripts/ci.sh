@@ -17,9 +17,11 @@ echo "== serving benchmark (smoke, Engine over device-resident paged KV) =="
 # two-phase rounds on a staggered workload (the PAR smoke: rounds-to-drain
 # + fused-slot occupancy land in the JSON).  --trace-out records the wdos
 # arm with the span tracer and exports the staggered round timeline as
-# Perfetto-loadable Chrome-trace JSON (validated below).
+# Perfetto-loadable Chrome-trace JSON (validated below).  --kv-quant both
+# A/Bs int8 KV pools against dense at a fixed pool byte budget (bytes/token,
+# resident-request capacity, acceptance delta — gated below).
 python -m benchmarks.bench_serving --smoke --kv-path paged --par-mode both \
-    --json BENCH_serving.json --trace-out TRACE_wdos.json
+    --kv-quant both --json BENCH_serving.json --trace-out TRACE_wdos.json
 
 echo "== paged-path kernel smoke (batch 4, Pallas interpret mode) =="
 # Exercises the kernel-wired decode path end to end every run: the Engine
@@ -67,6 +69,26 @@ if obs:
                              for k, v in sorted(obs.items())})
 EOF
 
+echo "== compressed-KV gate (int8 capacity win + acceptance bound) =="
+# int8 KV must (a) store >= 1.8x fewer bytes per token, (b) fit >= 1.8x
+# more resident requests at the same pool byte budget, and (c) keep the
+# speculative acceptance rate within 0.05 absolute of dense storage — the
+# contract that makes kv_quant="int8" a safe opt-in.
+python - <<'EOF'
+import json
+kvq = json.load(open("BENCH_serving.json"))["kv_quant"]
+bytes_ratio = kvq["bytes_per_token_ratio"]
+resident_ratio = kvq["resident_requests_ratio"]
+delta = kvq["acceptance_delta"]
+assert bytes_ratio >= 1.8, f"bytes/token ratio {bytes_ratio:.2f}x < 1.8x"
+assert resident_ratio >= 1.8, \
+    f"resident-request ratio {resident_ratio:.2f}x < 1.8x"
+assert delta <= 0.05, f"int8 acceptance delta {delta:.3f} > 0.05"
+print(f"kv_quant OK: {bytes_ratio:.2f}x fewer bytes/token, "
+      f"{resident_ratio:.2f}x resident requests @ fixed budget, "
+      f"acceptance delta {delta:.3f} <= 0.05")
+EOF
+
 echo "== wdos round-timeline trace (Chrome-trace schema gate) =="
 # The bench's --trace-out must round-trip through the Chrome-trace schema
 # checker non-empty — the same JSON a developer drops into Perfetto.
@@ -85,7 +107,9 @@ print(f"TRACE_wdos.json OK: {len(events)} events across "
 EOF
 
 echo "== tier-1 tests (gate) =="
-# Pre-existing mesh/JAX-version-dependent seed failures in test_launch.py /
-# test_models.py / test_substrate.py are now pytest.mark.skipif-guarded on
+# Mesh-dependent tests in test_launch.py / test_models.py run on every JAX
+# via launch/mesh.py:activate_mesh (presence-keyed jax.set_mesh ->
+# jax.sharding.use_mesh -> legacy Mesh-context fallback); only the
+# genuinely multi-device test_substrate.py case stays skipif-guarded on
 # single-device CPU, so the whole suite gates.
 python -m pytest -x -q

@@ -26,7 +26,15 @@ Layout (one grid step = one (request, kv-head) pair x one page):
              (B, W, KVS, G, hd)    — multi-token verify window
   k_pool     (P, page_size, KVS, hd)
   v_pool     (P, page_size, KVS, hd)
+  k_scale    (P, page_size, KVS, 1) f32, optional — per-slot-per-head
+  v_scale    (P, page_size, KVS, 1) f32, optional   dequant scales
   out        same shape as q, f32
+
+Compressed pools (``kv_quant="int8"``): pass int8 k/v pools plus the scale
+pools and the kernel dequantizes INSIDE the page loop — each page's int8
+bytes stream pool->VMEM compressed (≈4x less traffic than f32) and expand
+to f32 only in registers, right before the QK^T dot.  Both the 4-D decode
+and 5-D verify-window paths share the epilogue.
 
 TPU note: real-hardware efficiency wants hd a multiple of 128 and
 page_size a multiple of the sublane tile; interpret mode (CPU tests) takes
@@ -67,9 +75,10 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["paged_decode_attention_pallas"]
 
 
-def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, n_pages: int, page_size: int,
-            window: int, group: int, scale: float):
+def _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 n_pages: int, page_size: int, window: int, group: int,
+                 scale: float):
+    """One online-softmax step over one (already dequantized, f32) page."""
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -80,7 +89,6 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32) * scale  # (W*G, hd)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, hd)
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (W*G, page_size)
@@ -98,7 +106,7 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     corr = jnp.exp(m_prev - m_new)  # (W*G, 1)
     l_ref[...] = l_ref[...] * corr + prob.sum(axis=-1, keepdims=True)
     pv = jax.lax.dot_general(
-        prob, v_ref[0, :, 0, :].astype(jnp.float32),
+        prob, v,
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     )  # (W*G, hd)
     acc_ref[...] = acc_ref[...] * corr + pv
@@ -111,6 +119,22 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         )
 
 
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, **kw):
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref, **kw)
+
+
+def _kernel_quant(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, **kw):
+    """int8 pools: dequantize this page in VREGs (per-slot scale broadcast
+    over hd) right before the dots — the page crossed HBM->VMEM as int8."""
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, :, 0, :]
+    _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention_pallas(
     q: jnp.ndarray,  # (B, KVS, G, hd) or (B, W, KVS, G, hd)
@@ -119,12 +143,18 @@ def paged_decode_attention_pallas(
     page_table: jnp.ndarray,  # (B, max_pages) int32
     lengths: jnp.ndarray,  # (B,) int32 — valid tokens incl. the window
     interpret: Optional[bool] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (P, page_size, KVS, 1) f32
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Attention through the page table (no dense cache copy), f32 out.
 
     4-D q decodes one token per request (``lengths`` = valid prefix, the
     original contract); 5-D q scores a W-token window causally (``lengths``
-    counts the window's tokens too — the dense verify-path convention)."""
+    counts the window's tokens too — the dense verify-path convention).
+
+    With ``k_scale``/``v_scale`` (both or neither) the pools are int8 and
+    each page is dequantized inside the kernel (``value * scale`` per slot
+    per kv-head) — the compressed-at-rest path."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     windowed = q.ndim == 5
@@ -138,22 +168,28 @@ def paged_decode_attention_pallas(
         qk = q
     _, page_size, pool_kvs, pool_hd = k_pool.shape
     assert (pool_kvs, pool_hd) == (kvs, hd), (k_pool.shape, q.shape)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "pass both scales or neither"
     n_pages = page_table.shape[1]
     rows = w * g
     scale = 1.0 / math.sqrt(hd)
     grid = (b, kvs, n_pages)
+    page_spec = lambda width: pl.BlockSpec(
+        (1, page_size, 1, width), lambda i, j, p, pt, ln: (pt[i, p], 0, j, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)),
+        page_spec(hd),
+        page_spec(hd),
+    ]
+    inputs = [qk, k_pool, v_pool]
+    if quantized:
+        in_specs += [page_spec(1), page_spec(1)]
+        inputs += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # page_table, lengths
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)),
-            pl.BlockSpec(
-                (1, page_size, 1, hd), lambda i, j, p, pt, ln: (pt[i, p], 0, j, 0)
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, hd), lambda i, j, p, pt, ln: (pt[i, p], 0, j, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, rows, hd), lambda i, j, p, pt, ln: (i, j, 0, 0)
         ),
@@ -165,13 +201,14 @@ def paged_decode_attention_pallas(
     )
     out = pl.pallas_call(
         functools.partial(
-            _kernel, n_pages=n_pages, page_size=page_size,
+            _kernel_quant if quantized else _kernel,
+            n_pages=n_pages, page_size=page_size,
             window=w, group=g, scale=scale,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvs, rows, hd), jnp.float32),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qk, k_pool, v_pool)
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), *inputs)
     if windowed:
         out = out.reshape(b, kvs, w, g, hd).transpose(0, 2, 1, 3, 4)
     return out

@@ -61,9 +61,13 @@ def paged_attn_ref(
     v_pool: jnp.ndarray,
     page_table: jnp.ndarray,  # (B, max_pages) int32 (unused slots: any valid id)
     lengths: jnp.ndarray,  # (B,) int32 valid tokens (incl. the window when 5-D)
+    k_scale: jnp.ndarray = None,  # (P, page_size, KVS, 1) f32 (int8 pools)
+    v_scale: jnp.ndarray = None,
 ) -> jnp.ndarray:
     """Oracle for kernels.paged_attn.paged_decode_attention_pallas: gather
     the pages into a dense cache, then masked softmax attention per row.
+    With scales the pools are int8 and dequantize after the gather — the
+    reference semantics of the kernel's in-page dequant epilogue.
 
     A 5-D q is a W-token causally-masked window whose last query sits at
     absolute position ``lengths - 1`` (the speculative verify span)."""
@@ -73,6 +77,9 @@ def paged_attn_ref(
     b, w, kvs, g, hd = q.shape
     k = gather_pages_ref(k_pool, page_table).astype(jnp.float32)  # (B, S, KVS, hd)
     v = gather_pages_ref(v_pool, page_table).astype(jnp.float32)
+    if k_scale is not None:
+        k = k * gather_pages_ref(k_scale, page_table).astype(jnp.float32)
+        v = v * gather_pages_ref(v_scale, page_table).astype(jnp.float32)
     s = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum(

@@ -87,10 +87,11 @@ def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
 
 def _measure(cfg, shape, mesh, want_memory: bool) -> Dict[str, Any]:
     import jax
+    from repro.launch.mesh import activate_mesh
     from repro.launch.steps import build_cell
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         cell = build_cell(cfg, shape, mesh)
         lowered = cell.fn.lower(*cell.args)
         compiled = lowered.compile()
@@ -204,7 +205,7 @@ def dryrun_cell(
 ) -> Dict[str, Any]:
     import jax
     from repro.configs import get_config, shape_applicable
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import activate_mesh, make_production_mesh
     from repro.models.common import SHAPES
 
     if not shape_applicable(arch, shape_name):

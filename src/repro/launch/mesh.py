@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_cpu_mesh"]
+__all__ = ["make_production_mesh", "make_cpu_mesh", "activate_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +22,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_cpu_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (1 real device unless XLA_FLAGS says more)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def activate_mesh(mesh):
+    """Context manager making `mesh` the ambient mesh for jit/sharding.
+
+    jax has moved this API across releases (`with mesh:` on the Mesh
+    object -> `jax.sharding.use_mesh` -> `jax.set_mesh`); version-string
+    checks rot, so select on API PRESENCE: the newest entry point this
+    jax exposes, falling back to the legacy Mesh context manager, which
+    every supported jax still implements.  All launch entry points and
+    mesh-dependent tests route through here — never call `jax.set_mesh`
+    directly.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh  # legacy: the Mesh object is itself a context manager

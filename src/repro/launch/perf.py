@@ -88,7 +88,7 @@ def measure_variant(arch: str, shape_name: str, overrides: Dict[str, Any],
     from repro.launch.dryrun import (
         _cal_configs, _extrapolate, _measure, parse_collectives, roofline_terms,
     )
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import activate_mesh, make_production_mesh
     from repro.launch.steps import build_cell
     from repro.models.common import SHAPES
 
@@ -102,7 +102,7 @@ def measure_variant(arch: str, shape_name: str, overrides: Dict[str, Any],
         import time as _t
 
         t0 = _t.time()
-        with jax.set_mesh(mesh):
+        with activate_mesh(mesh):
             if quant == "w4a8":
                 cell = build_quantized_decode_cell(c, shape, mesh)
             else:

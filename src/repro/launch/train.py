@@ -21,7 +21,8 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
 from repro.configs import get_config, get_smoke
 from repro.data import DataConfig, SyntheticLMDataset
-from repro.launch.mesh import make_cpu_mesh, make_production_mesh
+from repro.launch.mesh import (activate_mesh, make_cpu_mesh,
+                               make_production_mesh)
 from repro.launch.steps import batch_axes, param_counts
 from repro.models import lm
 from repro.models import whisper as W
@@ -59,7 +60,7 @@ class Trainer:
         )
 
         key = jax.random.PRNGKey(seed)
-        with jax.set_mesh(mesh):
+        with activate_mesh(mesh):
             if cfg.family is Family.AUDIO:
                 params, specs = W.init_whisper(key, cfg, tp)
             else:
@@ -104,7 +105,7 @@ class Trainer:
 
     def run(self, steps: int, ckpt_every: int = 50, log_every: int = 10):
         history = []
-        with jax.set_mesh(self.mesh):
+        with activate_mesh(self.mesh):
             for _ in range(steps):
                 batch = jnp.asarray(self.data.batch(self.step))
                 if self.cfg.family is Family.AUDIO:

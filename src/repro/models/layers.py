@@ -151,6 +151,13 @@ class PagedCache:
     ``forward_cache_ctx`` applies the per-row role mask upstream by
     rewriting the masked rows' table entries to the scratch page and their
     lengths to 0, so this type never needs to know about roles.
+
+    With ``k_scale``/``v_scale`` set the pool is COMPRESSED: k/v hold int8
+    and the scale pools (same page layout, trailing dim 1) hold the
+    per-slot-per-head dequant factors.  New tokens quantize on scatter
+    (value + scale written in the same dispatch) and both impls dequantize
+    at the consumer — the Pallas kernel inside its page loop, the gather
+    path right after the gather — so pages stay int8 at rest.
     """
 
     k: jnp.ndarray  # (P(+scratch), page_size, kvh, hd)
@@ -158,6 +165,8 @@ class PagedCache:
     page_table: jnp.ndarray  # (B, max_pages) int32
     length: jnp.ndarray  # (B,) int32 — tokens already written per request
     impl: str = "gather"  # "gather" | "pallas"
+    k_scale: Optional[jnp.ndarray] = None  # (P(+scratch), page_size, kvh, 1)
+    v_scale: Optional[jnp.ndarray] = None
 
 
 def forward_cache_ctx(cache, b: int, s: int, paged_impl: str):
@@ -206,17 +215,21 @@ def paged_attention_update(
     k_new: jnp.ndarray,  # (B, S, kvh_store, hd) — post-rope, post-repeat
     v_new: jnp.ndarray,
     pc: PagedCache,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> Tuple[jnp.ndarray, dict]:
     """Scatter the S new tokens into their pool pages, then attend over the
     valid per-request prefix (+ the causally-masked window when S > 1).
 
-    Returns ``(out (B, S, H, hd), new_k_pool, new_v_pool)``.  The scatter is
-    one flat ``.at[].set`` per pool — rows write disjoint pages by
-    construction (inactive rows all target the scratch page, where
-    duplicate writes are harmless)."""
+    Returns ``(out (B, S, H, hd), new_pools)`` where ``new_pools`` is the
+    updated storage dict — ``{"k", "v"}`` plus ``{"k_scale", "v_scale"}``
+    for compressed pools.  The scatter is one flat ``.at[].set`` per pool
+    array — rows write disjoint pages by construction (inactive rows all
+    target the scratch page, where duplicate writes are harmless); for
+    compressed pools the span quantizes first and values + scales land in
+    the SAME dispatch, so a readable slot always carries its own scale."""
     b, s, h, hd = q.shape
     n_pages, ps, kvh, _ = pc.k.shape
     mp = pc.page_table.shape[1]
+    quantized = pc.k_scale is not None
     pos = pc.length[:, None] + jnp.arange(s)[None, :]  # (B, S) absolute slots
     page = jnp.take_along_axis(
         pc.page_table, jnp.minimum(pos // ps, mp - 1), axis=1
@@ -227,18 +240,29 @@ def paged_attention_update(
     # overwriting the request's own committed KV in its last page
     page = jnp.where(pos >= mp * ps, n_pages - 1, page)
     flat = (page * ps + pos % ps).reshape(-1)  # (B*S,) into (P*ps, kvh, hd)
-    new_k = (
-        pc.k.reshape(n_pages * ps, kvh, hd)
-        .at[flat]
-        .set(k_new.astype(pc.k.dtype).reshape(b * s, kvh, hd))
-        .reshape(pc.k.shape)
-    )
-    new_v = (
-        pc.v.reshape(n_pages * ps, kvh, hd)
-        .at[flat]
-        .set(v_new.astype(pc.v.dtype).reshape(b * s, kvh, hd))
-        .reshape(pc.v.shape)
-    )
+
+    def scatter(pool, span):
+        width = pool.shape[-1]
+        return (
+            pool.reshape(n_pages * ps, kvh, width)
+            .at[flat]
+            .set(span.astype(pool.dtype).reshape(b * s, kvh, width))
+            .reshape(pool.shape)
+        )
+
+    if quantized:
+        kq, ksc = _kv_quantize(k_new)
+        vq, vsc = _kv_quantize(v_new)
+        new_k = scatter(pc.k, kq)
+        new_v = scatter(pc.v, vq)
+        new_ks = scatter(pc.k_scale, ksc)
+        new_vs = scatter(pc.v_scale, vsc)
+        new_pools = {"k": new_k, "v": new_v, "k_scale": new_ks, "v_scale": new_vs}
+    else:
+        new_k = scatter(pc.k, k_new)
+        new_v = scatter(pc.v, v_new)
+        new_ks = new_vs = None
+        new_pools = {"k": new_k, "v": new_v}
     new_len = pc.length + s  # valid tokens incl. this span, per row
     if pc.impl == "pallas":
         from repro.kernels.paged_attn import paged_decode_attention_pallas
@@ -246,9 +270,10 @@ def paged_attention_update(
         g = h // kvh
         q5 = q.reshape(b, s, kvh, g, hd)  # H is (kv-head, group)-major
         out = paged_decode_attention_pallas(
-            q5, new_k, new_v, pc.page_table, new_len
+            q5, new_k, new_v, pc.page_table, new_len,
+            k_scale=new_ks, v_scale=new_vs,
         )
-        return out.reshape(b, s, h, hd).astype(q.dtype), new_k, new_v
+        return out.reshape(b, s, h, hd).astype(q.dtype), new_pools
     if pc.impl != "gather":
         raise ValueError(f"unknown paged attention impl {pc.impl!r}")
     # device-side gather to the table-span width (>= every valid length by
@@ -257,11 +282,19 @@ def paged_attention_update(
     # contribute exact zeros, so the width difference never shows
     kd = new_k[pc.page_table.reshape(-1)].reshape(b, mp * ps, kvh, hd)
     vd = new_v[pc.page_table.reshape(-1)].reshape(b, mp * ps, kvh, hd)
+    if quantized:
+        # explicit f32 dequant, then the UNCHANGED fp attention math — this
+        # is what keeps the gather path numerically equivalent (same dots,
+        # small f32 tolerance) to the kernel's in-page dequant epilogue
+        ksd = new_ks[pc.page_table.reshape(-1)].reshape(b, mp * ps, kvh, 1)
+        vsd = new_vs[pc.page_table.reshape(-1)].reshape(b, mp * ps, kvh, 1)
+        kd = (kd.astype(jnp.float32) * ksd).astype(q.dtype)
+        vd = (vd.astype(jnp.float32) * vsd).astype(q.dtype)
     if s == 1:
         out = _decode_attention(q, kd, vd, new_len)
     else:
         out = flash_attention(q, kd, vd, causal=True, q_offset=pc.length)
-    return out, new_k, new_v
+    return out, new_pools
 
 
 def _kv_quantize(k: jnp.ndarray):
@@ -486,10 +519,12 @@ def attention_apply(
         if isinstance(cache, PagedCache):
             # device-resident paged pool: scatter the new span into its
             # pages and attend through the page table (per-row lengths)
-            out, npk, npv = paged_attention_update(q, k, v, cache)
+            out, np_ = paged_attention_update(q, k, v, cache)
             y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
             return y, dataclasses.replace(
-                cache, k=npk, v=npv, length=cache.length + s
+                cache, k=np_["k"], v=np_["v"],
+                k_scale=np_.get("k_scale"), v_scale=np_.get("v_scale"),
+                length=cache.length + s,
             )
         quant = cache is not None and cache.k_scale is not None
         if cache is None:

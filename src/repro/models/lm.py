@@ -289,7 +289,9 @@ def _dense_block(
     if paged is not None:
         page_table, impl = paged
         cache = L.PagedCache(k=kv[0], v=kv[1], page_table=page_table,
-                             length=length, impl=impl)
+                             length=length, impl=impl,
+                             k_scale=kv[2] if len(kv) > 2 else None,
+                             v_scale=kv[3] if len(kv) > 2 else None)
     elif kv is not None:
         cache = L.Cache(k=kv[0], v=kv[1], length=length,
                         k_scale=kv[2] if len(kv) > 2 else None,
@@ -308,7 +310,11 @@ def _dense_block(
     if new_cache is None:
         out_kv = None
     elif isinstance(new_cache, L.PagedCache):
-        out_kv = (new_cache.k, new_cache.v)
+        if new_cache.k_scale is not None:  # compressed pool: scales ride along
+            out_kv = (new_cache.k, new_cache.v,
+                      new_cache.k_scale, new_cache.v_scale)
+        else:
+            out_kv = (new_cache.k, new_cache.v)
     elif new_cache.k_scale is not None:
         out_kv = (new_cache.k, new_cache.v, new_cache.k_scale, new_cache.v_scale)
     else:

@@ -115,8 +115,18 @@ class SamplingParams:
     seed: int = 0
     max_tokens: int = 64
     stop: Tuple[str, ...] = ()  # stop strings over the detokenized stream
+    # per-request KV storage opt-in: None defers to the engine's
+    # EngineConfig.kv_quant default; "none" pins full-precision pages;
+    # "int8" opts into compressed pages (relaxed determinism — see
+    # docs/SERVING.md).  An explicit value that the engine mode cannot
+    # honour is rejected at add_request time.
+    kv_quant: Optional[str] = None
 
     def __post_init__(self):
+        if self.kv_quant not in (None, "none", "int8"):
+            raise ValueError(
+                f"kv_quant must be None, 'none' or 'int8', got {self.kv_quant!r}"
+            )
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
@@ -213,16 +223,54 @@ class EngineConfig:
     # (per-row math and key streams are unchanged; only the grouping of
     # work into dispatches differs) — tests/test_par_mode.py.
     par_mode: str = "off"
+    # paged-KV storage precision:
+    #   "none"  — full-precision pools (the model's cache dtype); every
+    #             request bit-identical to the pre-compression engine;
+    #   "int8"  — ALL requests store K/V as int8 pages with per-slot
+    #             per-kv-head f32 scales (~3.7x fewer pool bytes/token for
+    #             f32 models; scales ride their own page-indexed pools).
+    #             Dequantization happens inside the attention consumers
+    #             (kernels/paged_attn.py epilogue / the device gather), so
+    #             pages stay compressed at rest and in flight;
+    #   "mixed" — both storages are allocated and each request picks via
+    #             SamplingParams.kv_quant (default "none"): fp and int8
+    #             rows batch together in the same engine step.
+    # A request's explicit SamplingParams.kv_quant must be compatible:
+    # "none"/"int8" engines reject requests pinning the other storage.
+    kv_quant: str = "none"
 
     def __post_init__(self):
         if self.par_mode not in ("off", "wdos"):
             raise ValueError(
                 f"par_mode must be 'off' or 'wdos', got {self.par_mode!r}"
             )
+        if self.kv_quant not in ("none", "int8", "mixed"):
+            raise ValueError(
+                f"kv_quant must be 'none', 'int8' or 'mixed', got "
+                f"{self.kv_quant!r}"
+            )
 
     @property
     def max_dl(self) -> int:
         return self.long_dl if self.adaptive else self.draft_len
+
+    @property
+    def kv_kinds(self) -> Tuple[str, ...]:
+        """The KV storage kinds this engine allocates pools for."""
+        return ("none", "int8") if self.kv_quant == "mixed" else (self.kv_quant,)
+
+    def resolve_kv_quant(self, requested: Optional[str]) -> str:
+        """Resolve a request's ``SamplingParams.kv_quant`` against the engine
+        mode: ``None`` takes the engine default ("none" under "mixed"); an
+        explicit choice must name a storage the engine allocated."""
+        if requested is None:
+            return "none" if self.kv_quant == "mixed" else self.kv_quant
+        if requested not in self.kv_kinds:
+            raise ValueError(
+                f"request kv_quant={requested!r} is incompatible with engine "
+                f"kv_quant={self.kv_quant!r} (allocated kinds: {self.kv_kinds})"
+            )
+        return requested
 
 
 # ---------------------------------------------------------------------------

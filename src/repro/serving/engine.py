@@ -99,7 +99,11 @@ from repro.serving.observability import (
     RATIO_BUCKETS,
     MetricsRegistry,
 )
-from repro.serving.paged_cache import PagedKVPool, device_pool_init, pages_for
+from repro.serving.paged_cache import (
+    PagedKVPool,
+    device_pool_store,
+    pages_for,
+)
 from repro.serving.request import Request, RequestState
 from repro.serving.tracing import NULL_TRACER, Tracer
 
@@ -236,6 +240,9 @@ def _pool_for(
     allocator for the device-resident path (KV bytes live in JAX arrays)."""
     mcfg = model.cfg
     if mcfg.kv_quant:
+        # the MODEL's dense-cache kv_quant knob (contiguous int8 cache) —
+        # distinct from EngineConfig.kv_quant, which compresses the PAGED
+        # pools and dequantizes inside the paged-attention consumers
         raise NotImplementedError("paged pools hold dense-dtype KV (kv_quant=False)")
     if model.mesh is not None:
         raise NotImplementedError("the Engine runs the single-host path (mesh=None)")
@@ -252,6 +259,7 @@ def _pool_for(
         page_size=cfg.page_size,
         dtype=_np_dtype(mcfg),
         alloc_storage=alloc_storage,
+        kv_quant=getattr(cfg, "kv_quant", "none"),
     )
 
 
@@ -263,22 +271,25 @@ _greedy_accept_host = speculative_accept_greedy_host
 def _make_paged_step(model: ServingModel):
     """jit of one batched paged forward: every active request is a batch row
     with its OWN page-table row and length (positions, causal masking, and
-    the pool write slots are per-row).  The K/V pools are carried as device
-    values — the step scatters new tokens in place and returns the updated
-    pools, so NO K/V bytes ever cross the host boundary.  The pool buffers
-    are DONATED: the caller always rebinds them to the step's outputs, so
-    XLA may alias the scatter in place instead of copying the pool."""
+    the pool write slots are per-row).  The K/V store is carried as a device
+    dict pytree (``{"k", "v"}`` dense, ``+{"k_scale", "v_scale"}`` for int8
+    pools — see paged_cache.device_pool_store): the step scatters new tokens
+    (and, quantized, their page scales — same dispatch, so value/scale can
+    never go stale independently) in place and returns the updated store, so
+    NO K/V bytes ever cross the host boundary.  The store is DONATED: the
+    caller always rebinds it to the step's output, so XLA may alias the
+    scatter in place instead of copying the pool."""
 
-    @partial(jax.jit, donate_argnums=(2, 3))
-    def step(params, tokens, pool_k, pool_v, page_table, lengths):
-        # tokens (B, W) int32; pools (L, P+1, ps, kvh, hd); table (B, mp)
+    @partial(jax.jit, donate_argnums=(2,))
+    def step(params, tokens, store, page_table, lengths):
+        # tokens (B, W) int32; store arrays (L, P+1, ps, kvh, hd|1)
         cache = {
             "lengths": lengths,
             "page_table": page_table,
-            "attn": {"k": pool_k, "v": pool_v},
+            "attn": dict(store),
         }
         logits, nc = model._apply(params, tokens, cache)
-        return logits, nc["attn"]["k"], nc["attn"]["v"]
+        return logits, {name: nc["attn"][name] for name in store}
 
     return step
 
@@ -297,27 +308,27 @@ def _make_fused_step(target: ServingModel, draft: ServingModel):
     (verify always max_dl + 1, causally padded), so the program compiles
     once, not per round shape."""
 
-    @partial(jax.jit, donate_argnums=(4, 5, 6, 7))
+    @partial(jax.jit, donate_argnums=(4, 5))
     def step(t_params, d_params, v_tokens, d_tokens,
-             t_pk, t_pv, d_pk, d_pv,
+             t_store, d_store,
              t_table, t_len, d_table, d_len, v_mask, d_mask):
         t_cache = {
             "lengths": t_len,
             "page_table": t_table,
             "role_mask": v_mask,
-            "attn": {"k": t_pk, "v": t_pv},
+            "attn": dict(t_store),
         }
         v_logits, t_nc = target._apply(t_params, v_tokens, t_cache)
         d_cache = {
             "lengths": d_len,
             "page_table": d_table,
             "role_mask": d_mask,
-            "attn": {"k": d_pk, "v": d_pv},
+            "attn": dict(d_store),
         }
         d_logits, d_nc = draft._apply(d_params, d_tokens, d_cache)
         return (v_logits, d_logits,
-                t_nc["attn"]["k"], t_nc["attn"]["v"],
-                d_nc["attn"]["k"], d_nc["attn"]["v"])
+                {name: t_nc["attn"][name] for name in t_store},
+                {name: d_nc["attn"][name] for name in d_store})
 
     return step
 
@@ -327,39 +338,60 @@ def _make_masked_draft_step(draft: ServingModel):
     micro-step with the per-row role mask, so rows retired mid-step stay
     inert without re-uploading the page table."""
 
-    @partial(jax.jit, donate_argnums=(2, 3))
-    def step(params, tokens, pool_k, pool_v, page_table, lengths, mask):
+    @partial(jax.jit, donate_argnums=(2,))
+    def step(params, tokens, store, page_table, lengths, mask):
         cache = {
             "lengths": lengths,
             "page_table": page_table,
             "role_mask": mask,
-            "attn": {"k": pool_k, "v": pool_v},
+            "attn": dict(store),
         }
         logits, nc = draft._apply(params, tokens, cache)
-        return logits, nc["attn"]["k"], nc["attn"]["v"]
+        return logits, {name: nc["attn"][name] for name in store}
 
     return step
 
 
-@partial(jax.jit, donate_argnums=(0, 1))
-def _scatter_prefill(pool_k, pool_v, k_dense, v_dense, pages, n):
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_prefill(store, k_dense, v_dense, pages, n):
     """Scatter a freshly prefilled request's first `n` cache rows straight
     into its pool pages — device to device, no host round-trip.
+    store: device store dict (paged_cache.device_pool_store);
     k_dense/v_dense: (L, s_max, kvh, hd); pages: (mp,) physical page ids,
     unowned slots holding the scratch page.  `n` is traced (one compile per
     model, not per prompt length): the fixed-width scatter covers the whole
-    table span and routes slots >= n to the scratch page."""
+    table span and routes slots >= n to the scratch page.
+
+    For an int8 store the dense prefix is quantized here (the same
+    per-slot-per-head rule the decode steps apply in
+    models/layers.paged_attention_update) and values + scales land in one
+    dispatch, so a page's scale can never be stale relative to its bytes."""
+    pool_k = store["k"]
     nl, p1, ps, kvh, hd = pool_k.shape
     s_max = k_dense.shape[1]
     cap = pages.shape[0] * ps  # table span; may overhang s_max by < ps
     pos = jnp.arange(cap)
     scratch = (p1 - 1) * ps + pos % ps  # harmless dup writes per layer
     flat = jnp.where(pos < n, pages[pos // ps] * ps + pos % ps, scratch)
-    src = k_dense[:, jnp.minimum(pos, s_max - 1)]
-    pk = pool_k.reshape(nl, p1 * ps, kvh, hd).at[:, flat].set(src)
-    srcv = v_dense[:, jnp.minimum(pos, s_max - 1)]
-    pv = pool_v.reshape(nl, p1 * ps, kvh, hd).at[:, flat].set(srcv)
-    return pk.reshape(pool_k.shape), pv.reshape(pool_v.shape)
+    src_k = k_dense[:, jnp.minimum(pos, s_max - 1)]
+    src_v = v_dense[:, jnp.minimum(pos, s_max - 1)]
+    if "k_scale" in store:
+        qk, sk = L._kv_quantize(src_k)
+        qv, sv = L._kv_quantize(src_v)
+        writes = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    else:
+        writes = {"k": src_k, "v": src_v}
+    out = {}
+    for name, src in writes.items():
+        pool = store[name]
+        width = pool.shape[-1]
+        out[name] = (
+            pool.reshape(nl, p1 * ps, kvh, width)
+            .at[:, flat]
+            .set(src.astype(pool.dtype))
+            .reshape(pool.shape)
+        )
+    return out
 
 
 class _TableSet:
@@ -466,12 +498,22 @@ class Engine:
                     f"s_max={model.s_max} of {model.cfg.name}"
                 )
 
-        # host pools are pure allocators; the KV bytes live in device arrays
+        # host pools are pure allocators; the KV bytes live in device arrays.
+        # One allocator serves every storage KIND: under kv_quant="mixed"
+        # both a dense and an int8 device store back the SAME page ids, a
+        # request reads/writes only the store of its resolved kind, and the
+        # wrong-kind storage of its pages simply holds unread garbage — so
+        # admission, page tables, and rewind bookkeeping stay kind-agnostic.
         worst = [self.max_model_len] * cfg.max_batch
         self._t_pool = _pool_for(target, cfg, worst, alloc_storage=False)
         self._d_pool = _pool_for(draft, cfg, worst, alloc_storage=False)
-        self._t_pk, self._t_pv = device_pool_init(self._t_pool)
-        self._d_pk, self._d_pv = device_pool_init(self._d_pool)
+        self._kinds: Tuple[str, ...] = cfg.kv_kinds
+        self._t_store = {
+            k: device_pool_store(self._t_pool, kv_quant=k) for k in self._kinds
+        }
+        self._d_store = {
+            k: device_pool_store(self._d_pool, kv_quant=k) for k in self._kinds
+        }
 
         # observability: one shared registry — the batcher's fused/finish
         # counters, the engine's latency histograms, and the server's
@@ -547,6 +589,17 @@ class Engine:
         self._m_pool_pages = m.gauge(
             "pool_pages", "Paged-KV pool residency", ("pool", "state")
         )
+        self._m_kv_bytes = m.gauge(
+            "kv_bytes_total",
+            "Bytes resident in allocated paged-KV pages (per storage "
+            "dtype; int8 includes its f32 per-slot scales)",
+            ("pool", "dtype"),
+        )
+        self._m_kv_bytes_per_token = m.gauge(
+            "kv_bytes_per_token",
+            "K+V bytes one cached token occupies (per storage dtype)",
+            ("pool", "dtype"),
+        )
         self._m_ttft = m.histogram(
             "ttft_seconds", "Submit -> first delivered token",
             buckets=LATENCY_BUCKETS,
@@ -582,6 +635,12 @@ class Engine:
             g.labels(pool=name, state="used").set(st.used_pages)
             g.labels(pool=name, state="reserved").set(st.reserved_pages)
             g.labels(pool=name, state="free").set(st.free_pages)
+            used_tokens = st.used_pages * pool.page_size
+            for dt, bpt in pool.bytes_per_token_by_kind().items():
+                self._m_kv_bytes_per_token.labels(pool=name, dtype=dt).set(bpt)
+                self._m_kv_bytes.labels(pool=name, dtype=dt).set(
+                    bpt * used_tokens
+                )
         drafted = self._m_drafted.value()
         if drafted:
             self._m_accept_rate.set(self._m_accepted.value() / drafted)
@@ -600,6 +659,7 @@ class Engine:
             "active": self.num_active(),
             "max_batch": self.cfg.max_batch,
             "par_mode": self.cfg.par_mode,
+            "kv_quant": self.cfg.kv_quant,
             "steps": b.step_count,
             "rounds": b.rounds,
             "finished_requests": b.finished_count,
@@ -632,6 +692,9 @@ class Engine:
             sink=sink,
             sampling=sp,
             detokenize=self._detokenize,
+            # raises ValueError when the request pins a storage this engine
+            # did not allocate (e.g. kv_quant="int8" on a "none" engine)
+            kv_kind=self.cfg.resolve_kv_quant(sp.kv_quant),
         )
         peak = req.peak_cache_len(self.cfg.max_dl)
         if peak > self.max_model_len:
@@ -702,22 +765,55 @@ class Engine:
 
     # -- the stepwise round --------------------------------------------------
 
+    def _kvq_mask(self, active):
+        """(B,) bool device mask — True where the row's KV is int8 — or
+        ``None`` on single-kind engines (which then dispatch exactly the
+        pre-compression program: no mask, no merge, bit-identical)."""
+        if len(self._kinds) == 1:
+            return None
+        m = np.zeros((self.cfg.max_batch,), bool)
+        for slot, req in active:
+            m[slot] = req.kv_kind == "int8"
+        return jnp.asarray(m)
+
+    def _dispatch(self, step_fn, params, tokens, stores, table, lengths,
+                  kvq_dev):
+        """One logical batched forward over every storage kind.
+
+        Single-kind engines run one dispatch.  Mixed engines run the step
+        once per store and merge logits row-wise by kind: a row's writes
+        land only in its OWN pages of each store (the page table confines
+        them), and a row only ever READS the store of its kind, so the
+        wrong-kind dispatch leaves unread garbage — never corruption."""
+        if kvq_dev is None:
+            k0 = self._kinds[0]
+            logits, stores[k0] = step_fn(params, tokens, stores[k0], table,
+                                         lengths)
+            return logits
+        outs = {}
+        for k in self._kinds:
+            outs[k], stores[k] = step_fn(params, tokens, stores[k], table,
+                                         lengths)
+        return jnp.where(kvq_dev[:, None, None], outs["int8"], outs["none"])
+
     def _prefill_into(self, req: Request, iface: LMInterface, params, seq,
-                      pool_k, pool_v, tables, slot):
+                      store, tables, slot):
         # same jitted program as the single-request path => bitwise
         # identical prefix KV; the cache rows scatter device->device into
-        # the request's (eagerly backed, lifetime-stable) pages
+        # the request's (eagerly backed, lifetime-stable) pages — only the
+        # store of the request's resolved kind (int8 rows quantize inside
+        # the scatter; the wrong-kind storage of these pages is never read)
         plen = req.prompt.shape[0]
         _, cache = iface.prefill(params, jnp.asarray(req.prompt[None, :-1]))
         seq.ensure_backed(seq.reservation * seq.pool.page_size)
         tables.set_row(slot, seq)
-        pool_k, pool_v = _scatter_prefill(
-            pool_k, pool_v,
+        store = _scatter_prefill(
+            store,
             cache["attn"]["k"][:, 0], cache["attn"]["v"][:, 0],
             jnp.asarray(tables.table[slot]), plen - 1,
         )
         seq.advance(plen - 1)
-        return pool_k, pool_v
+        return store
 
     def _admit(self) -> None:
         """Admit whatever fits and prefill it into both pools."""
@@ -729,13 +825,14 @@ class Engine:
             self.tracer.instant(
                 f"row{slot}", "admit", cat="lifecycle", rid=req.rid
             )
-            self._t_pk, self._t_pv = self._prefill_into(
+            kind = req.kv_kind
+            self._t_store[kind] = self._prefill_into(
                 req, self._t_iface, self.target.params, req.t_seq,
-                self._t_pk, self._t_pv, self._t_tables, slot,
+                self._t_store[kind], self._t_tables, slot,
             )
-            self._d_pk, self._d_pv = self._prefill_into(
+            self._d_store[kind] = self._prefill_into(
                 req, self._d_iface, self.draft.params, req.d_seq,
-                self._d_pk, self._d_pv, self._d_tables, slot,
+                self._d_store[kind], self._d_tables, slot,
             )
             req.state = RequestState.DECODE
             self.tracer.rec(
@@ -770,6 +867,7 @@ class Engine:
         modes = {slot: req.controller.mode for slot, req in active}
         round_dl = max(dls.values())
         any_sampled = any(not req.sampling.greedy for _, req in active)
+        kvq_dev = self._kvq_mask(active)
 
         t0 = self._now()
         d_table, d_len0 = self._d_tables.load((s, r.d_seq) for s, r in active)
@@ -791,9 +889,9 @@ class Engine:
         draft_cols: List[Any] = []
         q_cols: List[np.ndarray] = []  # per-position draft logits (sampled rounds)
         for j in range(round_dl + 1):
-            logits, self._d_pk, self._d_pv = self._d_step(
-                self.draft.params, cur_dev[:, None], self._d_pk, self._d_pv,
-                d_table, d_len0 + j,
+            logits = self._dispatch(
+                self._d_step, self.draft.params, cur_dev[:, None],
+                self._d_store, d_table, d_len0 + j, kvq_dev,
             )
             if j < round_dl:
                 if any_sampled:
@@ -828,9 +926,9 @@ class Engine:
         window = np.zeros((cfg.max_batch, round_dl + 1), np.int32)
         window[:, 0] = cur
         window[:, 1:] = drafts
-        v_logits, self._t_pk, self._t_pv = self._t_step(
-            self.target.params, jnp.asarray(window), self._t_pk, self._t_pv,
-            t_table, t_len0,
+        v_logits = self._dispatch(
+            self._t_step, self.target.params, jnp.asarray(window),
+            self._t_store, t_table, t_len0, kvq_dev,
         )
         p_logits = np.asarray(v_logits)  # (B, round_dl+1, V)
         self.tracer.rec(
@@ -967,6 +1065,10 @@ class Engine:
         touched: Dict[int, Request] = {
             req.rid: req for _, req in self._batcher.active()
         }
+        # kind mask over the step's initial actives covers every later slot
+        # too (the active set only shrinks mid-step; retired rows' merged
+        # logits are never read)
+        kvq_dev = self._kvq_mask(self._batcher.active())
         work: List[Tuple[Request, int]] = []
 
         # page tables are lifetime-stable: one cached upload serves every
@@ -1019,22 +1121,41 @@ class Engine:
                     v_tok[slot, 1: 1 + req.pending_dl] = req.pending
                     t_len[slot] = req.t_seq.length
                     v_mask[slot] = True
-                (v_logits, d_logits, self._t_pk, self._t_pv,
-                 self._d_pk, self._d_pv) = self._fused_step(
-                    self.target.params, self.draft.params,
-                    jnp.asarray(v_tok), jnp.asarray(d_tok),
-                    self._t_pk, self._t_pv, self._d_pk, self._d_pv,
-                    t_table, jnp.asarray(t_len),
-                    d_table, jnp.asarray(d_len),
-                    jnp.asarray(v_mask), jnp.asarray(d_mask),
-                )
+                v_tok_dev, d_tok_dev = jnp.asarray(v_tok), jnp.asarray(d_tok)
+                t_len_dev, d_len_dev = jnp.asarray(t_len), jnp.asarray(d_len)
+                vm_dev, dm_dev = jnp.asarray(v_mask), jnp.asarray(d_mask)
+                vs, ds = {}, {}
+                for k in self._kinds:
+                    (vs[k], ds[k], self._t_store[k],
+                     self._d_store[k]) = self._fused_step(
+                        self.target.params, self.draft.params,
+                        v_tok_dev, d_tok_dev,
+                        self._t_store[k], self._d_store[k],
+                        t_table, t_len_dev, d_table, d_len_dev,
+                        vm_dev, dm_dev,
+                    )
+                if kvq_dev is None:
+                    v_logits, d_logits = vs[self._kinds[0]], ds[self._kinds[0]]
+                else:
+                    sel = kvq_dev[:, None, None]
+                    v_logits = jnp.where(sel, vs["int8"], vs["none"])
+                    d_logits = jnp.where(sel, ds["int8"], ds["none"])
                 v_np = np.asarray(v_logits)
             else:
-                d_logits, self._d_pk, self._d_pv = self._draft_slot_step(
-                    self.draft.params, jnp.asarray(d_tok),
-                    self._d_pk, self._d_pv,
-                    d_table, jnp.asarray(d_len), jnp.asarray(d_mask),
-                )
+                d_tok_dev = jnp.asarray(d_tok)
+                d_len_dev, dm_dev = jnp.asarray(d_len), jnp.asarray(d_mask)
+                ds = {}
+                for k in self._kinds:
+                    ds[k], self._d_store[k] = self._draft_slot_step(
+                        self.draft.params, d_tok_dev, self._d_store[k],
+                        d_table, d_len_dev, dm_dev,
+                    )
+                if kvq_dev is None:
+                    d_logits = ds[self._kinds[0]]
+                else:
+                    d_logits = jnp.where(
+                        kvq_dev[:, None, None], ds["int8"], ds["none"]
+                    )
                 v_np = None
             # only drafting rows consume draft logits; skip the (B, V)
             # device->host pull on all-verify slots
@@ -1189,6 +1310,11 @@ class Engine:
         s = self._batcher.summary()
         s["kv_path"] = "paged"
         s["par_mode"] = self.cfg.par_mode
+        s["kv_quant"] = self.cfg.kv_quant
+        s["kv_bytes_per_token"] = {
+            "target": float(self._t_pool.bytes_per_token()),
+            "draft": float(self._d_pool.bytes_per_token()),
+        }
         s["kv_copy_s"] = 0.0  # no host K/V copies exist on this path
         s["table_upload_s"] = self._m_table_upload.value()
         return s

@@ -53,6 +53,15 @@ Invariants (what the engine's hot loop is allowed to assume):
   ``num_pages``) the allocator never hands out; inactive or role-masked
   batch rows write there (duplicate writes are harmless because nothing
   reads it).
+* **Scale freshness (``kv_quant="int8"``)** — a quantized pool stores K/V
+  as int8 plus a per-slot-per-head float32 scale, laid out page-granular
+  exactly like the data (``(..., page, slot, kv_head, 1)``), so a page's
+  scales travel with the page through the table.  A scale entry must never
+  outlive the value it was computed for: every write path stores value and
+  scale together (host ``append`` quantizes both in one call; the device
+  scatter writes both in one dispatch), and ``rewind``/``release`` zero
+  the scale entries of dropped positions so a reused page can never
+  dequantize with a stale scale.
 """
 from __future__ import annotations
 
@@ -66,11 +75,30 @@ __all__ = [
     "PagedSequence",
     "PoolStats",
     "device_pool_init",
+    "device_pool_store",
+    "kv_quantize_np",
 ]
+
+# "mixed" is allocator/stats-only: one page allocator backs BOTH a dense
+# and an int8 device store (the engine picks a store per request), so host
+# storage cannot be allocated in that mode and every page is accounted at
+# the sum of both kinds' bytes.
+KV_QUANT_MODES = ("none", "int8", "mixed")
+_SCALE_BYTES = 4  # float32 per-slot-per-head scale
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)  # ceil div
+
+
+def kv_quantize_np(span: np.ndarray):
+    """Symmetric per-token-per-head int8 quantization (host mirror of
+    ``models/layers._kv_quantize``): span (..., hd) -> (int8 values,
+    float32 scales (..., 1))."""
+    s = np.maximum(np.abs(span).max(axis=-1, keepdims=True), 1e-8) / 127.0
+    s = s.astype(np.float32)
+    q = np.clip(np.rint(span / s), -127, 127).astype(np.int8)
+    return q, s
 
 
 @dataclasses.dataclass
@@ -82,6 +110,9 @@ class PoolStats:
     free_pages: int  # physically free (some may be spoken for)
     available_pages: int  # free minus outstanding reservations
     high_water_pages: int
+    kv_quant: str = "none"
+    bytes_per_token: float = 0.0  # K+V bytes (incl. scales) per cached token
+    kv_bytes_total: int = 0  # bytes resident in allocated pages right now
 
     @property
     def utilization(self) -> float:
@@ -100,19 +131,38 @@ class PagedKVPool:
         page_size: int,
         dtype=np.float32,
         alloc_storage: bool = True,
+        kv_quant: str = "none",
     ):
         if num_pages <= 0 or page_size <= 0:
             raise ValueError("num_pages and page_size must be positive")
+        if kv_quant not in KV_QUANT_MODES:
+            raise ValueError(
+                f"kv_quant must be one of {KV_QUANT_MODES}, got {kv_quant!r}"
+            )
         self.n_layers = n_layers
         self.kv_heads = kv_heads
         self.head_dim = head_dim
         self.num_pages = num_pages
         self.page_size = page_size
         self.dtype = dtype
+        self.kv_quant = kv_quant
+        self.k_scale = None
+        self.v_scale = None
         if alloc_storage:
+            if kv_quant == "mixed":
+                raise NotImplementedError(
+                    "kv_quant='mixed' pools are allocator-only (the engine "
+                    "keeps one device store per kind); host-mode storage "
+                    "must pick 'none' or 'int8'"
+                )
             shape = (n_layers, num_pages, page_size, kv_heads, head_dim)
-            self.k = np.zeros(shape, dtype)
-            self.v = np.zeros(shape, dtype)
+            store_dt = np.int8 if kv_quant == "int8" else dtype
+            self.k = np.zeros(shape, store_dt)
+            self.v = np.zeros(shape, store_dt)
+            if kv_quant == "int8":
+                sshape = shape[:-1] + (1,)
+                self.k_scale = np.zeros(sshape, np.float32)
+                self.v_scale = np.zeros(sshape, np.float32)
         else:  # pure allocator: KV bytes live in a device pool
             self.k = None
             self.v = None
@@ -140,6 +190,31 @@ class PagedKVPool:
     def can_reserve(self, n_pages: int) -> bool:
         return n_pages <= self.available_pages
 
+    def bytes_per_token_by_kind(self) -> Dict[str, int]:
+        """K+V bytes one cached token occupies, split by storage kind
+        (label value is the storage dtype name: the model dtype for dense
+        pages, ``"int8"`` for compressed pages incl. their f32 scale).
+        Dense/int8 pools have one entry; ``"mixed"`` pools back every page
+        with BOTH storages and report both."""
+        base = 2 * self.n_layers * self.kv_heads
+        dense = base * self.head_dim * np.dtype(self.dtype).itemsize
+        quant = base * (self.head_dim * 1 + _SCALE_BYTES)
+        if self.kv_quant == "none":
+            return {np.dtype(self.dtype).name: dense}
+        if self.kv_quant == "int8":
+            return {"int8": quant}
+        return {np.dtype(self.dtype).name: dense, "int8": quant}
+
+    def bytes_per_token(self) -> int:
+        """K+V bytes one cached token occupies, including scale overhead for
+        quantized pools — the dtype-aware unit `kv_bytes_total` and the
+        bench's residency A/B are denominated in.  (``"mixed"`` pools sum
+        both storages: every page is backed dense AND int8.)"""
+        return sum(self.bytes_per_token_by_kind().values())
+
+    def bytes_per_page(self) -> int:
+        return self.bytes_per_token() * self.page_size
+
     def stats(self) -> PoolStats:
         return PoolStats(
             num_pages=self.num_pages,
@@ -149,6 +224,9 @@ class PagedKVPool:
             free_pages=self.free_pages,
             available_pages=self.available_pages,
             high_water_pages=self.high_water,
+            kv_quant=self.kv_quant,
+            bytes_per_token=float(self.bytes_per_token()),
+            kv_bytes_total=self.used_pages * self.bytes_per_page(),
         )
 
     # -- sequence lifecycle -------------------------------------------------
@@ -230,8 +308,18 @@ class PagedSequence:
             return
         self._ensure_capacity(self.length + l)
         pg, slot = self._flat_index(self.length, l)
-        self.pool.k[:, pg, slot] = k_span
-        self.pool.v[:, pg, slot] = v_span
+        if self.pool.kv_quant == "int8":
+            kq, ks = kv_quantize_np(np.asarray(k_span, np.float32))
+            vq, vs = kv_quantize_np(np.asarray(v_span, np.float32))
+            # value and scale land together — a slot is never readable with
+            # a scale from a previous tenant of the page
+            self.pool.k[:, pg, slot] = kq
+            self.pool.v[:, pg, slot] = vq
+            self.pool.k_scale[:, pg, slot] = ks
+            self.pool.v_scale[:, pg, slot] = vs
+        else:
+            self.pool.k[:, pg, slot] = k_span
+            self.pool.v[:, pg, slot] = v_span
         self.length += l
 
     # -- device-resident bookkeeping (no host data path) --------------------
@@ -273,9 +361,20 @@ class PagedSequence:
         # page_size — clamp the copy (only junk slots past `length` drop)
         m = min(n * ps, k_dst.shape[1])
         span = self.pool.k[:, pg].reshape(self.pool.n_layers, n * ps, *k_dst.shape[2:])
-        k_dst[:, :m] = span[:, :m]
         span_v = self.pool.v[:, pg].reshape(self.pool.n_layers, n * ps, *v_dst.shape[2:])
-        v_dst[:, :m] = span_v[:, :m]
+        if self.pool.kv_quant == "int8":
+            sshape = (self.pool.n_layers, n * ps, self.pool.kv_heads, 1)
+            ks = self.pool.k_scale[:, pg].reshape(sshape)
+            vs = self.pool.v_scale[:, pg].reshape(sshape)
+            k_dst[:, :m] = (span[:, :m].astype(np.float32) * ks[:, :m]).astype(
+                k_dst.dtype
+            )
+            v_dst[:, :m] = (span_v[:, :m].astype(np.float32) * vs[:, :m]).astype(
+                v_dst.dtype
+            )
+        else:
+            k_dst[:, :m] = span[:, :m]
+            v_dst[:, :m] = span_v[:, :m]
 
     def rewind(self, n: int, *, release_pages: bool = True) -> None:
         """Drop the last n tokens in O(pages dropped): adjust the length and
@@ -286,23 +385,48 @@ class PagedSequence:
         the table must stay stable and the pages are reserved anyway), making
         speculative rewind a pure O(1) length update — mirroring the
         engine's `rewind` contract including its n >= 0 / over-rewind
-        validation."""
+        validation.
+
+        On a quantized pool BOTH forms additionally zero the dropped
+        positions' scale entries (the partially-rewound tail of the retained
+        last page included): data past ``length`` is garbage by contract,
+        but a scale is *metadata* — left stale it could pair with a later
+        tenant's int8 values if a write path ever split value and scale.
+        Zeroing makes the failure mode loud (dequantizes to 0) instead of
+        silently plausible."""
         assert not self.released, "rewind on a released sequence"
         if n < 0:
             raise ValueError(f"rewind expects n >= 0, got {n}")
         if n > self.length:
             raise ValueError(f"over-rewind: length {self.length} < rewind {n}")
+        old_length = self.length
         self.length -= n
+        self._invalidate_scales(self.length, old_length)
         if not release_pages:
             return
         keep = pages_for(self.length, self.pool.page_size)
         while len(self.pages) > keep:
             self.pool._give_page(self.pages.pop(), back_to_reservation=True)
 
+    def _invalidate_scales(self, start: int, stop: int) -> None:
+        """Zero host-side scale entries for token positions [start, stop)
+        (clamped to backed pages) — no-op for unquantized or storage-less
+        pools (the device scatter writes value+scale in one dispatch, so
+        device pools have no stale-scale window to close)."""
+        if self.pool.k_scale is None:
+            return
+        stop = min(stop, len(self.pages) * self.pool.page_size)
+        if stop <= start:
+            return
+        pg, slot = self._flat_index(start, stop - start)
+        self.pool.k_scale[:, pg, slot] = 0.0
+        self.pool.v_scale[:, pg, slot] = 0.0
+
     def release(self) -> None:
         """Return every page and the unused reservation to the pool."""
         if self.released:
             raise RuntimeError("double release of PagedSequence")
+        self._invalidate_scales(0, len(self.pages) * self.pool.page_size)
         for page in self.pages:
             self.pool._give_page(page, back_to_reservation=False)
         self.pool._reserved_unbacked -= self.reservation - len(self.pages)
@@ -339,3 +463,36 @@ def device_pool_init(pool: PagedKVPool, dtype=None):
         pool.head_dim,
     )
     return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def device_pool_store(
+    pool: PagedKVPool, dtype=None, kv_quant: Optional[str] = None
+) -> Dict[str, "object"]:
+    """Device storage for `pool` as a dict pytree the engine threads through
+    its jitted steps: ``{"k", "v"}`` for dense pools, plus per-slot-per-head
+    float32 ``{"k_scale", "v_scale"}`` arrays (``(..., kv_heads, 1)``) when
+    the storage kind is ``"int8"`` — the pages stay int8 at rest and every
+    consumer dequantizes at the point of use.  Scales carry the same scratch
+    page as the data (index ``num_pages``).
+
+    ``kv_quant`` overrides the pool's own mode per store — a ``"mixed"``
+    pool (one allocator, two storages) builds one store per kind."""
+    import jax.numpy as jnp  # deferred: allocator stays importable sans jax
+
+    kind = kv_quant if kv_quant is not None else pool.kv_quant
+    if kind == "mixed":
+        raise ValueError(
+            "a device store holds ONE storage kind; build one per kind "
+            "with kv_quant='none' / 'int8'"
+        )
+    if kind == "int8":
+        k, v = device_pool_init(pool, dtype=jnp.int8)
+        sshape = k.shape[:-1] + (1,)
+        return {
+            "k": k,
+            "v": v,
+            "k_scale": jnp.zeros(sshape, jnp.float32),
+            "v_scale": jnp.zeros(sshape, jnp.float32),
+        }
+    k, v = device_pool_init(pool, dtype=dtype)
+    return {"k": k, "v": v}

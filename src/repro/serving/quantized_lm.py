@@ -149,13 +149,16 @@ def _qlinear(x: jnp.ndarray, qw: Params, use_pallas: bool) -> jnp.ndarray:
 
 def _paged_attn(q_, k_, v_, kvs_, lengths, pctx):
     """One layer's paged attention: scatter the span into the pool slice,
-    attend through the page table, return (att, new pool slices)."""
+    attend through the page table, return (att, new pool slices).  Pool
+    slices carrying ``k_scale`` are compressed (int8 + per-slot scales) —
+    the update quantizes on scatter and dequantizes at the consumer."""
     table, impl = pctx
     pc = L.PagedCache(
-        k=kvs_["k"], v=kvs_["v"], page_table=table, length=lengths, impl=impl
+        k=kvs_["k"], v=kvs_["v"], page_table=table, length=lengths, impl=impl,
+        k_scale=kvs_.get("k_scale"), v_scale=kvs_.get("v_scale"),
     )
-    att, npk, npv = L.paged_attention_update(q_, k_, v_, pc)
-    return att, {"k": npk, "v": npv}
+    att, new_pools = L.paged_attention_update(q_, k_, v_, pc)
+    return att, new_pools
 
 
 def _norm_only(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:

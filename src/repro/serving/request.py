@@ -95,6 +95,11 @@ class Request:
     # token -> text, used only when sampling.stop is non-empty (the engine
     # injects its detokenizer at add_request)
     detokenize: Optional[Callable[[int], str]] = None
+    # resolved KV storage kind ("none" | "int8") — the engine resolves the
+    # request's SamplingParams.kv_quant against EngineConfig.kv_quant at
+    # add_request and stamps the result here; it selects which device store
+    # the request's pages are read from for its whole lifetime
+    kv_kind: str = "none"
 
     state: RequestState = RequestState.QUEUED
     out: List[int] = dataclasses.field(default_factory=list)

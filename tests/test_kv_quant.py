@@ -1,0 +1,216 @@
+"""Engine-level compressed paged KV (EngineConfig.kv_quant).
+
+The contract under test: kv_quant="none" is BIT-IDENTICAL to the engine
+before compressed KV existed (greedy and sampled, gather and Pallas paged
+attention, two-phase and fused wdos rounds) — the int8 machinery must be
+structurally absent from the dense dispatch, not merely numerically close.
+kv_quant="int8" is a relaxed-determinism opt-in: it stays deterministic
+across schedulers and attention impls (off == wdos, gather == pallas,
+token-for-token) but is only *close* to the dense tokens.  kv_quant="mixed"
+runs both storage kinds behind ONE allocator: each row bit-matches the
+pure-mode engine of its own kind.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.speculative import SDConfig, sd_generate
+from repro.launch.serve import build_pair
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.engine import make_interface
+
+
+def _prompts(n, seed=0, vocab=512):
+    rng = np.random.RandomState(seed)
+    return [
+        rng.randint(0, vocab, size=rng.randint(2, 7)).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return build_pair(seed=0, s_max=128, quantize=False)
+
+
+def _drain(target, draft, prompts, sps, **cfg_kw):
+    cfg_kw.setdefault("page_size", 8)
+    cfg_kw.setdefault("draft_len", 3)
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=len(prompts), **cfg_kw
+    ))
+    outs, summary = eng.run(prompts, sps)
+    return outs, summary, eng
+
+
+def _sd_ref(target, draft, prompt, max_tokens, dl=3):
+    """Pre-redesign reference: the dense-cache sd_generate driver."""
+    toks, _ = sd_generate(
+        jax.random.PRNGKey(0),
+        make_interface(target), target.params,
+        make_interface(draft), draft.params,
+        jnp.asarray(np.asarray(prompt)[None]),
+        SDConfig(draft_len=dl, temperature=0.0, max_tokens=max_tokens),
+    )
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# kv_quant="none" bit-identity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("par_mode", ["off", "wdos"])
+@pytest.mark.parametrize("impl", ["gather", "pallas"])
+def test_none_greedy_bit_identical_to_dense_reference(pair, par_mode, impl):
+    """kv_quant="none" tokens == the dense sd_generate reference, under
+    BOTH schedulers and BOTH paged-attention impls."""
+    import dataclasses
+    target, draft = pair
+    if impl == "pallas":
+        target = dataclasses.replace(target, paged_attn_impl="pallas")
+        draft = dataclasses.replace(draft, paged_attn_impl="pallas")
+    prompts = _prompts(3, seed=3)
+    sp = SamplingParams(max_tokens=10)
+    outs, _, _ = _drain(target, draft, prompts, sp,
+                        par_mode=par_mode, kv_quant="none")
+    for p, o in zip(prompts, outs):
+        ref = _sd_ref(target, draft, p, 10)
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(ref))
+
+
+def test_none_sampled_bit_identical_to_default_engine(pair):
+    """Sampled (temperature/top_p) path: a kv_quant="none" engine emits the
+    SAME tokens as an engine built without the knob at all."""
+    target, draft = pair
+    prompts = _prompts(4, seed=5)
+    sps = [SamplingParams(max_tokens=12, temperature=0.8, top_p=0.9, seed=i)
+           for i in range(4)]
+    base, _, _ = _drain(target, draft, prompts, sps)
+    none, _, _ = _drain(target, draft, prompts, sps, kv_quant="none")
+    for b, n in zip(base, none):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(n))
+
+
+# ---------------------------------------------------------------------------
+# int8: deterministic across schedulers and impls, close to dense
+# ---------------------------------------------------------------------------
+
+
+def test_int8_off_equals_wdos_and_gather_equals_pallas(pair):
+    import dataclasses
+    target, draft = pair
+    prompts = _prompts(4, seed=7)
+    sp = SamplingParams(max_tokens=12)
+    off, s_off, _ = _drain(target, draft, prompts, sp,
+                           par_mode="off", kv_quant="int8")
+    wdos, _, _ = _drain(target, draft, prompts, sp,
+                        par_mode="wdos", kv_quant="int8")
+    for a, b in zip(off, wdos):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tp = dataclasses.replace(target, paged_attn_impl="pallas")
+    dp = dataclasses.replace(draft, paged_attn_impl="pallas")
+    pal, _, _ = _drain(tp, dp, prompts, sp, par_mode="off", kv_quant="int8")
+    for a, b in zip(off, pal):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert s_off["kv_quant"] == "int8"
+
+
+def test_int8_acceptance_within_bound_of_dense(pair):
+    """The opt-in gate: int8 storage may perturb logits, but the
+    speculative acceptance rate stays within 0.05 of dense."""
+    target, draft = pair
+    prompts = _prompts(6, seed=11)
+    sp = SamplingParams(max_tokens=16)
+    _, s_none, _ = _drain(target, draft, prompts, sp, kv_quant="none")
+    _, s_int8, _ = _drain(target, draft, prompts, sp, kv_quant="int8")
+    assert abs(s_int8["acceptance_rate"] - s_none["acceptance_rate"]) <= 0.05
+
+
+# ---------------------------------------------------------------------------
+# mixed: one allocator, per-request storage kinds
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_rows_bit_match_pure_engines(pair):
+    """A mixed batch interleaving fp and int8 requests: every row's tokens
+    == the same prompt drained on the PURE engine of its kind — sharing the
+    allocator with the other kind must not leak into either."""
+    target, draft = pair
+    prompts = _prompts(4, seed=13)
+    kinds = ["none", "int8", "int8", "none"]
+    sps = [SamplingParams(max_tokens=12, kv_quant=k) for k in kinds]
+    mixed, summary, eng = _drain(target, draft, prompts, sps,
+                                 kv_quant="mixed")
+    sp = SamplingParams(max_tokens=12)
+    pure = {}
+    for k in ("none", "int8"):
+        ps = [p for p, kk in zip(prompts, kinds) if kk == k]
+        outs, _, _ = _drain(target, draft, ps, sp, kv_quant=k)
+        pure[k] = dict(zip([i for i, kk in enumerate(kinds) if kk == k],
+                           outs))
+    for k in ("none", "int8"):
+        for i, ref in pure[k].items():
+            np.testing.assert_array_equal(np.asarray(mixed[i]),
+                                          np.asarray(ref))
+    assert summary["kv_quant"] == "mixed"
+    # mixed accounts BOTH stores' bytes against the shared page pool
+    bpt = summary["kv_bytes_per_token"]["target"]
+    assert bpt > 0
+
+
+def test_mixed_default_kind_is_dense(pair):
+    """Requests that don't pin kv_quant land on the dense store."""
+    target, draft = pair
+    (p,) = _prompts(1, seed=17)
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=1, page_size=8, draft_len=3, kv_quant="mixed"
+    ))
+    rid = eng.add_request(p, SamplingParams(max_tokens=4))
+    assert eng.request(rid).kv_kind == "none"
+    while eng.has_unfinished():
+        eng.step()
+
+
+# ---------------------------------------------------------------------------
+# Config/request validation and introspection
+# ---------------------------------------------------------------------------
+
+
+def test_request_pinning_incompatible_kind_raises(pair):
+    target, draft = pair
+    (p,) = _prompts(1)
+    for engine_mode, pin in (("none", "int8"), ("int8", "none")):
+        eng = Engine(target, draft, EngineConfig(
+            max_batch=1, page_size=8, kv_quant=engine_mode
+        ))
+        with pytest.raises(ValueError, match="kv_quant"):
+            eng.add_request(p, SamplingParams(max_tokens=4, kv_quant=pin))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="kv_quant"):
+        EngineConfig(kv_quant="fp4")
+    with pytest.raises(ValueError, match="kv_quant"):
+        SamplingParams(kv_quant="mixed")  # per-request pin must be concrete
+    assert EngineConfig(kv_quant="mixed").kv_kinds == ("none", "int8")
+    assert EngineConfig(kv_quant="int8").kv_kinds == ("int8",)
+    assert EngineConfig(kv_quant="mixed").resolve_kv_quant(None) == "none"
+    assert EngineConfig(kv_quant="int8").resolve_kv_quant(None) == "int8"
+
+
+def test_snapshot_and_metrics_carry_kv_bytes(pair):
+    target, draft = pair
+    prompts = _prompts(2, seed=19)
+    _, summary, eng = _drain(target, draft, prompts,
+                             SamplingParams(max_tokens=6), kv_quant="int8")
+    snap = eng.stats_snapshot()
+    assert snap["kv_quant"] == "int8"
+    assert summary["kv_bytes_per_token"]["target"] > 0
+    assert summary["kv_bytes_per_token"]["draft"] > 0
+    text = eng.metrics.render()
+    assert "kv_bytes_total" in text
+    assert "kv_bytes_per_token" in text
+    assert 'dtype="int8"' in text

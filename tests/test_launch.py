@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_smoke
-from repro.launch.mesh import make_cpu_mesh
+from repro.launch.mesh import activate_mesh, make_cpu_mesh
 from repro.launch.steps import build_cell, input_specs, param_counts
 from repro.models.common import SHAPES, Family, ShapeConfig
 
@@ -23,12 +23,6 @@ SMALL_SHAPES = {
 }
 
 
-@pytest.mark.skipif(
-    not hasattr(jax, "set_mesh"),
-    reason="pre-existing seed failure: jax.set_mesh needs a newer JAX; the "
-    "512-device production meshes are not exercisable on single-device CPU "
-    "(ROADMAP open item)",
-)
 @pytest.mark.parametrize("arch", ARCH_IDS)
 @pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
 def test_build_cell_compiles_smoke(arch, kind):
@@ -36,7 +30,7 @@ def test_build_cell_compiles_smoke(arch, kind):
     if cfg.family is Family.MOE:
         cfg = dataclasses.replace(cfg, moe_impl="a2a")  # exercise shard_map
     shape = SMALL_SHAPES[kind]
-    with jax.set_mesh(MESH):
+    with activate_mesh(MESH):
         cell = build_cell(cfg, shape, MESH, donate=False)
         compiled = cell.fn.lower(*cell.args).compile()
     cost = compiled.cost_analysis()

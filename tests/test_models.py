@@ -6,6 +6,7 @@ import pytest
 
 from repro.models import lm
 from repro.models import whisper as W
+from repro.launch.mesh import activate_mesh
 from repro.models.common import Family, ModelConfig
 
 KEY = jax.random.PRNGKey(0)
@@ -171,11 +172,6 @@ def test_whisper_decode_consistency():
     assert np.isfinite(float(loss))
 
 
-@pytest.mark.skipif(
-    not hasattr(jax, "set_mesh"),
-    reason="pre-existing seed failure: jax.set_mesh needs a newer JAX "
-    "(mesh-dependent path on single-device CPU; ROADMAP open item)",
-)
 def test_moe_a2a_matches_dense_single_device():
     """On a 1-device mesh the a2a path must equal the dense reference
     (up to capacity drops — use generous capacity)."""
@@ -186,7 +182,7 @@ def test_moe_a2a_matches_dense_single_device():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     p, _ = lm.init_lm(KEY, cfg, tp=1)
     toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         lg_a2a, _ = lm.apply_lm(p, cfg, mesh, toks)
     cfg_d = tiny(Family.MOE, n_experts=4, top_k=2, moe_impl="dense")
     lg_d, _ = lm.apply_lm(p, cfg_d, None, toks)

@@ -155,3 +155,99 @@ def test_window_last_query_equals_single_token_call():
     np.testing.assert_allclose(
         np.asarray(win[:, -1]), np.asarray(single), atol=1e-6
     )
+
+
+# ---------------------------------------------------------------------------
+# int8 compressed pools (kv_quant="int8"): in-kernel dequant epilogue
+# ---------------------------------------------------------------------------
+
+
+def _quantized_pools(kp, vp):
+    """Pool-shaped symmetric int8 quantization: (P, ps, KVS, hd) f32 ->
+    int8 values + (P, ps, KVS, 1) f32 scales (the engine's storage rule)."""
+    from repro.serving.paged_cache import kv_quantize_np
+
+    kq, ks = kv_quantize_np(np.asarray(kp, np.float32))
+    vq, vs = kv_quantize_np(np.asarray(vp, np.float32))
+    return (jnp.asarray(kq), jnp.asarray(vq),
+            jnp.asarray(ks), jnp.asarray(vs))
+
+
+@pytest.mark.parametrize(
+    "b,kvs,g,hd,page_size,max_pages,lengths",
+    [
+        (1, 1, 1, 16, 4, 2, [5]),
+        (3, 2, 2, 48, 8, 6, [29, 31, 37]),  # non-pow2 hd, prime raggedness
+        (4, 4, 1, 32, 8, 3, [3, 24, 17, 8]),
+    ],
+)
+def test_int8_matches_quantized_oracle(b, kvs, g, hd, page_size, max_pages,
+                                       lengths):
+    """The in-kernel dequant epilogue must match the gather-then-dequant
+    oracle exactly (both expand int8*scale to f32 before the fp math)."""
+    q, kp, vp, pt, lens = _case(
+        10, b, kvs, g, hd, b * max_pages + 3, page_size, max_pages, lengths
+    )
+    kq, vq, ks, vs = _quantized_pools(kp, vp)
+    got = paged_decode_attention_pallas(q, kq, vq, pt, lens,
+                                        k_scale=ks, v_scale=vs)
+    want = ref.paged_attn_ref(q, kq, vq, pt, lens, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_int8_equals_predequantized_fp_kernel():
+    """Dequantizing inside the kernel is numerically equivalent to running
+    the fp kernel over pools dequantized up front — the contract that keeps
+    the pallas path and the models/layers gather fallback interchangeable."""
+    b, kvs, g, hd, ps, mp = 2, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens = _case(11, b, kvs, g, hd, b * mp, ps, mp, [11, 27])
+    kq, vq, ks, vs = _quantized_pools(kp, vp)
+    got = paged_decode_attention_pallas(q, kq, vq, pt, lens,
+                                        k_scale=ks, v_scale=vs)
+    kd = kq.astype(jnp.float32) * ks
+    vd = vq.astype(jnp.float32) * vs
+    base = paged_decode_attention_pallas(q, kd, vd, pt, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), atol=1e-6)
+
+
+@pytest.mark.parametrize("lengths", [[1, 7, 13], [5, 23, 47]])
+def test_int8_close_to_float_reference(lengths):
+    """Quantization error stays small: int8 pools attend within a loose
+    tolerance of the ORIGINAL full-precision pools (ragged prime lengths,
+    non-pow2 hd)."""
+    b, kvs, g, hd, ps, mp = 3, 2, 2, 48, 8, 6
+    q, kp, vp, pt, lens = _case(12, b, kvs, g, hd, b * mp + 1, ps, mp, lengths)
+    kq, vq, ks, vs = _quantized_pools(kp, vp)
+    got = paged_decode_attention_pallas(q, kq, vq, pt, lens,
+                                        k_scale=ks, v_scale=vs)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.08)
+
+
+@pytest.mark.parametrize("w,lengths", [(2, [9, 30]), (4, [5, 17])])
+def test_int8_window_matches_oracle(w, lengths):
+    """5-D verify windows over int8 pools: the causally-masked window path
+    shares the dequant epilogue with the 4-D decode path."""
+    b, kvs, g, hd, ps, mp = 2, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens = _window_case(13, b, w, kvs, g, hd, b * mp, ps, mp,
+                                       lengths)
+    kq, vq, ks, vs = _quantized_pools(kp, vp)
+    got = paged_decode_attention_pallas(q, kq, vq, pt, lens,
+                                        k_scale=ks, v_scale=vs)
+    want = ref.paged_attn_ref(q, kq, vq, pt, lens, k_scale=ks, v_scale=vs)
+    assert got.shape == (b, w, kvs, g, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_int8_window_last_query_equals_single_token_call():
+    b, w, kvs, g, hd, ps, mp = 2, 3, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens = _window_case(14, b, w, kvs, g, hd, b * mp, ps, mp,
+                                       [11, 26])
+    kq, vq, ks, vs = _quantized_pools(kp, vp)
+    win = paged_decode_attention_pallas(q, kq, vq, pt, lens,
+                                       k_scale=ks, v_scale=vs)
+    single = paged_decode_attention_pallas(q[:, -1], kq, vq, pt, lens,
+                                           k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(
+        np.asarray(win[:, -1]), np.asarray(single), atol=1e-6
+    )

@@ -203,3 +203,127 @@ def test_high_water_and_stats():
     seq.release()
     assert pool.stats().used_pages == 0
     assert pool.stats().high_water_pages == 4  # sticky
+
+
+# ---------------------------------------------------------------------------
+# int8 compressed pools (kv_quant="int8")
+# ---------------------------------------------------------------------------
+
+
+def make_int8_pool(num_pages=8, page_size=4, n_layers=2, kvh=2, hd=8):
+    return PagedKVPool(
+        n_layers, kvh, hd, num_pages=num_pages, page_size=page_size,
+        kv_quant="int8",
+    )
+
+
+def rspan(pool, l, seed=0):
+    rng = np.random.RandomState(seed)
+    shape = (pool.n_layers, l, pool.kv_heads, pool.head_dim)
+    return (rng.randn(*shape).astype(np.float32),
+            rng.randn(*shape).astype(np.float32))
+
+
+def test_int8_append_gather_roundtrip_close():
+    """Host int8 pools: append quantizes, gather dequantizes; the roundtrip
+    stays within the symmetric-quantization error bound (absmax/254 per
+    slot-head row)."""
+    pool = make_int8_pool()
+    seq = pool.allocate_sequence(10)
+    k1, v1 = rspan(pool, 6, seed=1)
+    seq.append(k1, v1)
+    k2, v2 = rspan(pool, 3, seed=2)
+    seq.append(k2, v2)
+    assert pool.k.dtype == np.int8 and pool.k_scale.dtype == np.float32
+    kd = np.zeros((pool.n_layers, 12, pool.kv_heads, pool.head_dim), np.float32)
+    vd = np.zeros_like(kd)
+    seq.gather_into(kd, vd)
+    ref_k = np.concatenate([k1, k2], 1)
+    ref_v = np.concatenate([v1, v2], 1)
+    bound = np.abs(ref_k).max() / 254 + 1e-6
+    assert np.abs(kd[:, :9] - ref_k).max() <= bound
+    assert np.abs(vd[:, :9] - ref_v).max() <= np.abs(ref_v).max() / 254 + 1e-6
+
+
+def test_int8_bytes_accounting():
+    pool = make_int8_pool(n_layers=2, kvh=2, hd=8)
+    dense = make_pool(n_layers=2, kvh=2, hd=8)
+    # K+V * layers * heads * (hd int8 bytes + 4B f32 scale)
+    assert pool.bytes_per_token() == 2 * 2 * 2 * (8 + 4)
+    assert dense.bytes_per_token() == 2 * 2 * 2 * 8 * 4
+    assert dense.bytes_per_token() / pool.bytes_per_token() >= 1.8
+    seq = pool.allocate_sequence(8)
+    seq.append(*rspan(pool, 8))
+    st = pool.stats()
+    assert st.kv_quant == "int8"
+    assert st.bytes_per_token == pool.bytes_per_token()
+    assert st.kv_bytes_total == 2 * pool.bytes_per_page()
+    assert pool.bytes_per_token_by_kind() == {"int8": pool.bytes_per_token()}
+
+
+def test_mixed_pool_is_allocator_only_and_sums_bytes():
+    with pytest.raises(NotImplementedError, match="allocator-only"):
+        PagedKVPool(2, 2, 8, num_pages=4, page_size=4, kv_quant="mixed")
+    pool = PagedKVPool(2, 2, 8, num_pages=4, page_size=4,
+                       alloc_storage=False, kv_quant="mixed")
+    by_kind = pool.bytes_per_token_by_kind()
+    assert set(by_kind) == {"float32", "int8"}
+    assert pool.bytes_per_token() == sum(by_kind.values())
+
+
+def test_rewind_invalidates_scales_across_page_boundary():
+    """Regression (stale per-page metadata): rewind(release_pages=False)
+    must zero the dropped positions' scale entries — including positions in
+    KEPT pages and positions in pages past the new boundary — so a stale
+    scale can never silently dequantize a later append's bytes.  Freshness
+    is restored only by the next append writing value+scale together."""
+    pool = make_int8_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(12)
+    seq.append(*rspan(pool, 10, seed=3))  # 3 pages: 4+4+2
+    pages = list(seq.pages)
+    flat = lambda p: pool.k_scale[:, p].reshape(pool.n_layers, -1, pool.kv_heads, 1)
+    assert np.all(flat(pages[2])[:, :2] > 0)
+    # drop 7 positions: new length 3 sits mid-page-0; pages stay owned
+    seq.rewind(7, release_pages=False)
+    assert seq.pages == pages
+    # positions 3 (page 0 tail), 4..7 (page 1), 8..9 (page 2) are zeroed
+    assert np.all(flat(pages[0])[:, 3:] == 0)
+    assert np.all(flat(pages[1]) == 0)
+    assert np.all(flat(pages[2]) == 0)
+    # kept prefix scales stay intact
+    assert np.all(flat(pages[0])[:, :3] > 0)
+    # regrow: append restores freshness and the roundtrip is exact again
+    k, v = rspan(pool, 9, seed=4)
+    seq.append(k, v)
+    kd = np.zeros((pool.n_layers, 12, pool.kv_heads, pool.head_dim), np.float32)
+    seq.gather_into(kd, np.zeros_like(kd))
+    assert np.abs(kd[:, 3:12] - k).max() <= np.abs(k).max() / 254 + 1e-6
+
+
+def test_release_zeroes_scales():
+    pool = make_int8_pool(num_pages=4, page_size=4)
+    seq = pool.allocate_sequence(8)
+    seq.append(*rspan(pool, 8, seed=5))
+    pages = list(seq.pages)
+    seq.release()
+    for p in pages:
+        assert np.all(pool.k_scale[:, p] == 0)
+        assert np.all(pool.v_scale[:, p] == 0)
+
+
+def test_device_pool_store_shapes():
+    from repro.serving.paged_cache import device_pool_store
+
+    pool = PagedKVPool(3, 2, 8, num_pages=5, page_size=4,
+                       alloc_storage=False, kv_quant="int8")
+    st = device_pool_store(pool)
+    assert set(st) == {"k", "v", "k_scale", "v_scale"}
+    assert st["k"].shape == (3, 6, 4, 2, 8) and str(st["k"].dtype) == "int8"
+    assert st["k_scale"].shape == (3, 6, 4, 2, 1)
+    assert str(st["k_scale"].dtype) == "float32"
+    dense = device_pool_store(pool, kv_quant="none")
+    assert set(dense) == {"k", "v"} and str(dense["k"].dtype) == "float32"
+    mixed = PagedKVPool(3, 2, 8, num_pages=5, page_size=4,
+                        alloc_storage=False, kv_quant="mixed")
+    with pytest.raises(ValueError, match="ONE storage kind"):
+        device_pool_store(mixed)

@@ -234,3 +234,33 @@ def test_plan_mixed_slot_roles_by_readiness():
     assert plan_mixed_slot([]).rows == ()
     solo_verify = plan_mixed_slot([RowPhase(slot=0, window=2, drafted=2)])
     assert solo_verify.verify_rows == (0,) and not solo_verify.fused
+
+
+# ---------------------------------------------------------------------------
+# Compressed KV under fused rounds (EngineConfig.kv_quant="mixed")
+# ---------------------------------------------------------------------------
+
+
+def test_wdos_mixed_fp_int8_batch_bit_matches_two_phase(pair):
+    """A batch interleaving dense and int8-stored requests, drained under
+    the fused wdos scheduler: token-for-token identical to the same mixed
+    batch under two-phase rounds — the per-storage-kind dispatch split
+    composes with fused cross-request execution, and sharing one page
+    allocator across kinds never leaks between rows."""
+    target, draft = pair
+    prompts = _prompts(4, seed=23)
+    sps = [SamplingParams(max_tokens=12, kv_quant=k)
+           for k in ("none", "int8", "none", "int8")]
+    off, s_off = _drain(target, draft, prompts, sps, "off",
+                        draft_len=3, kv_quant="mixed")
+    wdos, s_wdos = _drain(target, draft, prompts, sps, "wdos",
+                          draft_len=3, kv_quant="mixed")
+    for a, b in zip(off, wdos):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert s_wdos["par_mode"] == "wdos" and s_wdos["kv_quant"] == "mixed"
+    # the fp rows are additionally bit-identical to a PURE dense wdos drain
+    dense, _ = _drain(target, draft, [prompts[0], prompts[2]],
+                      SamplingParams(max_tokens=12), "wdos",
+                      draft_len=3, kv_quant="none")
+    np.testing.assert_array_equal(np.asarray(wdos[0]), np.asarray(dense[0]))
+    np.testing.assert_array_equal(np.asarray(wdos[2]), np.asarray(dense[1]))
