@@ -42,6 +42,13 @@ echo "== open-loop Poisson load harness (TTFT/ITL/E2E percentiles) =="
 # several arrival rates) into the BENCH_serving.json written above.
 python -m benchmarks.bench_server --smoke --json BENCH_serving.json
 
+echo "== shared-prefix workload A/B (prefix_cache on vs off) =="
+# Multi-tenant Poisson workload (N system prompts x M users) against two
+# engines fed the SAME arrival schedule; appends the "prefix_cache" record
+# (hit rate, prefill tokens saved, TTFT A/B, bit-identity) — gated below.
+python -m benchmarks.bench_server --smoke --shared-prefix \
+    --json BENCH_serving.json
+
 echo "== serving perf record =="
 python - <<'EOF'
 import json
@@ -87,6 +94,25 @@ assert delta <= 0.05, f"int8 acceptance delta {delta:.3f} > 0.05"
 print(f"kv_quant OK: {bytes_ratio:.2f}x fewer bytes/token, "
       f"{resident_ratio:.2f}x resident requests @ fixed budget, "
       f"acceptance delta {delta:.3f} <= 0.05")
+EOF
+
+echo "== prefix-cache gate (sharing must hit, save prefill, stay bit-identical) =="
+# The shared-prefix A/B is only a win if (a) the radix tree actually hits,
+# (b) sharing skips a majority of prefill rows, and (c) the emitted tokens
+# are bit-identical to sharing off — the determinism contract that makes
+# prefix_cache=True a safe default for multi-tenant serving.
+python - <<'EOF'
+import json
+pc = json.load(open("BENCH_serving.json"))["prefix_cache"]
+hit = pc["hit_rate"]
+saved = pc["prefill_tokens_saved_frac"]
+assert pc["bit_identical"], "prefix sharing changed emitted tokens"
+assert hit > 0.0, f"prefix hit rate {hit:.2f} — cache never hit"
+assert saved > 0.5, f"prefill tokens saved {saved:.2%} <= 50%"
+print(f"prefix_cache OK: hit_rate {hit:.2f}, "
+      f"{saved:.0%} prefill rows skipped, "
+      f"TTFT p50 {pc['ttft_p50_off_s']*1e3:.0f} -> "
+      f"{pc['ttft_p50_on_s']*1e3:.0f} ms, bit-identical")
 EOF
 
 echo "== wdos round-timeline trace (Chrome-trace schema gate) =="

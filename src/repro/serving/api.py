@@ -238,6 +238,18 @@ class EngineConfig:
     # A request's explicit SamplingParams.kv_quant must be compatible:
     # "none"/"int8" engines reject requests pinning the other storage.
     kv_quant: str = "none"
+    # Copy-on-write prefix cache (serving/prefix_cache.py): cache prompt
+    # prefixes at page granularity in a refcounted radix tree and map hits
+    # as read-only shared pages, skipping their prefill.  Tokens are
+    # bit-identical to prefix_cache=False for every (impl, par_mode,
+    # kv_quant) combination — tests/test_prefix_cache.py.
+    prefix_cache: bool = False
+    # Pool sizing by BYTE budget instead of page count: when set, each
+    # pool gets `num_pages_for_bytes(pool_bytes, ...)` pages under its own
+    # storage kind, so compressed (int8) pools admit ~3.5x the resident
+    # requests of dense pools at the SAME budget.  Mutually exclusive with
+    # num_pages.
+    pool_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.par_mode not in ("off", "wdos"):
@@ -249,6 +261,11 @@ class EngineConfig:
                 f"kv_quant must be 'none', 'int8' or 'mixed', got "
                 f"{self.kv_quant!r}"
             )
+        if self.pool_bytes is not None:
+            if self.num_pages is not None:
+                raise ValueError("set num_pages or pool_bytes, not both")
+            if self.pool_bytes <= 0:
+                raise ValueError(f"pool_bytes must be > 0, got {self.pool_bytes}")
 
     @property
     def max_dl(self) -> int:

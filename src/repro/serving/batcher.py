@@ -113,10 +113,12 @@ class ContinuousBatcher:
         t_costs: Tuple[float, float],  # (per-layer load, per-layer compute)
         d_costs: Tuple[float, float],
         metrics: Optional[MetricsRegistry] = None,
+        prefix_cache=None,  # Optional[PrefixCache]: shared-prefix admission
     ):
         self.cfg = cfg
         self.t_pool = t_pool
         self.d_pool = d_pool
+        self.prefix_cache = prefix_cache
         self.t_layers = t_layers
         self.d_layers = d_layers
         self.t_costs = t_costs
@@ -180,22 +182,65 @@ class ContinuousBatcher:
             req.controller = DraftController(self.cfg.draft_len, self.cfg.draft_len)
         self.queue.append(req)
 
+    def _allocate_pair(self, peak: int, match):
+        """One attempt at both pools' worst-case reservations, discounted
+        by the prefix match's fully shared pages; (None, None) on failure
+        with nothing leaked."""
+        if match is not None:
+            m = match.tokens_matched
+            t_seq = self.t_pool.allocate_sequence(
+                peak, shared_pages=match.shared_pages("target"), shared_tokens=m
+            )
+            if t_seq is None:
+                return None, None
+            d_seq = self.d_pool.allocate_sequence(
+                peak, shared_pages=match.shared_pages("draft"), shared_tokens=m
+            )
+        else:
+            t_seq = self.t_pool.allocate_sequence(peak)
+            if t_seq is None:
+                return None, None
+            d_seq = self.d_pool.allocate_sequence(peak)
+        if d_seq is None:
+            t_seq.release()
+            return None, None
+        return t_seq, d_seq
+
     def admit(self) -> List[Tuple[int, Request]]:
         """Fill free slots FIFO while both pools can take the worst case.
-        Returns the newly admitted (slot, request) pairs (they need prefill)."""
+        Returns the newly admitted (slot, request) pairs (they need prefill).
+
+        With a prefix cache: the head request's longest cached prefix
+        discounts its reservation (fully shared pages cost nothing), and
+        under pool pressure admission evicts LRU zero-ref cached subtrees
+        one at a time until the reservation fits or nothing evictable is
+        left (then head-of-line stall, exactly as before)."""
         out: List[Tuple[int, Request]] = []
         for slot in range(self.cfg.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue[0]
             peak = req.peak_cache_len(self.cfg.max_dl)
-            t_seq = self.t_pool.allocate_sequence(peak)
+            match = (
+                self.prefix_cache.match(req.prompt, req.kv_kind)
+                if self.prefix_cache is not None
+                else None
+            )
+            while True:
+                t_seq, d_seq = self._allocate_pair(peak, match)
+                if t_seq is not None:
+                    break
+                if self.prefix_cache is None or self.prefix_cache.evict_one() == 0:
+                    break  # head-of-line: keep FIFO order, wait for pages
+                # eviction may have freed a node on the matched path (zero
+                # node refs until acquire) — re-resolve against the tree as
+                # it now stands before retrying the allocation
+                match = self.prefix_cache.match(req.prompt, req.kv_kind)
             if t_seq is None:
-                break  # head-of-line: keep FIFO order, wait for pages
-            d_seq = self.d_pool.allocate_sequence(peak)
-            if d_seq is None:
-                t_seq.release()
                 break
+            if match is not None:
+                self.prefix_cache.acquire(match)
+                req.prefix_match = match
             self.queue.popleft()
             req.t_seq, req.d_seq = t_seq, d_seq
             req.state = RequestState.PREFILL
@@ -223,6 +268,12 @@ class ContinuousBatcher:
         req = self.slots[slot]
         assert req is not None
         req.finish(self.step_count, reason=reason)
+        # unpin the radix path AFTER the sequences released their page
+        # references — finish/abort must never free a page another row
+        # maps, and the pool's per-page refcount guarantees it
+        if req.prefix_match is not None:
+            self.prefix_cache.release(req.prefix_match)
+            req.prefix_match = None
         self._tally_finished(req)
         self.slots[slot] = None
 

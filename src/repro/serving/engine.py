@@ -102,8 +102,10 @@ from repro.serving.observability import (
 from repro.serving.paged_cache import (
     PagedKVPool,
     device_pool_store,
+    num_pages_for_bytes,
     pages_for,
 )
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, RequestState
 from repro.serving.tracing import NULL_TRACER, Tracer
 
@@ -246,7 +248,20 @@ def _pool_for(
         raise NotImplementedError("paged pools hold dense-dtype KV (kv_quant=False)")
     if model.mesh is not None:
         raise NotImplementedError("the Engine runs the single-host path (mesh=None)")
-    if cfg.num_pages is not None:
+    if getattr(cfg, "pool_bytes", None) is not None:
+        # byte-budget sizing: admission is then effectively on COMPRESSED
+        # bytes — an int8 pool gets ~3.5x the pages (and thus resident
+        # requests) of a dense pool under the same budget
+        num_pages = num_pages_for_bytes(
+            cfg.pool_bytes,
+            n_layers=mcfg.n_layers,
+            kv_heads=L.kv_store_heads(mcfg, 1),
+            head_dim=mcfg.hd,
+            page_size=cfg.page_size,
+            dtype=_np_dtype(mcfg),
+            kv_quant=getattr(cfg, "kv_quant", "none"),
+        )
+    elif cfg.num_pages is not None:
         num_pages = cfg.num_pages
     else:
         worst = sorted((pages_for(p, cfg.page_size) for p in peaks), reverse=True)
@@ -353,14 +368,17 @@ def _make_masked_draft_step(draft: ServingModel):
 
 
 @partial(jax.jit, donate_argnums=(0,))
-def _scatter_prefill(store, k_dense, v_dense, pages, n):
-    """Scatter a freshly prefilled request's first `n` cache rows straight
+def _scatter_prefill(store, k_dense, v_dense, pages, n, start=0):
+    """Scatter a freshly prefilled request's cache rows [start, n) straight
     into its pool pages — device to device, no host round-trip.
     store: device store dict (paged_cache.device_pool_store);
     k_dense/v_dense: (L, s_max, kvh, hd); pages: (mp,) physical page ids,
-    unowned slots holding the scratch page.  `n` is traced (one compile per
-    model, not per prompt length): the fixed-width scatter covers the whole
-    table span and routes slots >= n to the scratch page.
+    unowned slots holding the scratch page.  `n`/`start` are traced (one
+    compile per model, not per prompt length): the fixed-width scatter
+    covers the whole table span and routes slots outside [start, n) to the
+    scratch page.  A prefix-cache hit passes start = tokens_matched so the
+    shared prefix pages — whose rows are already resident — are never
+    touched (rows below `start` may even map COW-protected shared pages).
 
     For an int8 store the dense prefix is quantized here (the same
     per-slot-per-head rule the decode steps apply in
@@ -372,7 +390,9 @@ def _scatter_prefill(store, k_dense, v_dense, pages, n):
     cap = pages.shape[0] * ps  # table span; may overhang s_max by < ps
     pos = jnp.arange(cap)
     scratch = (p1 - 1) * ps + pos % ps  # harmless dup writes per layer
-    flat = jnp.where(pos < n, pages[pos // ps] * ps + pos % ps, scratch)
+    flat = jnp.where(
+        (pos >= start) & (pos < n), pages[pos // ps] * ps + pos % ps, scratch
+    )
     src_k = k_dense[:, jnp.minimum(pos, s_max - 1)]
     src_v = v_dense[:, jnp.minimum(pos, s_max - 1)]
     if "k_scale" in store:
@@ -392,6 +412,15 @@ def _scatter_prefill(store, k_dense, v_dense, pages, n):
             .reshape(pool.shape)
         )
     return out
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_page(store, src, dst):
+    """Copy one physical page (every array of the store: values and, for
+    int8, scales) device-side — the copy-on-write step that privatizes a
+    partially-shared prefix page before its holder's first scatter.
+    `src`/`dst` are traced so the one compiled program serves every COW."""
+    return {name: a.at[:, dst].set(a[:, src]) for name, a in store.items()}
 
 
 class _TableSet:
@@ -515,6 +544,18 @@ class Engine:
             k: device_pool_store(self._d_pool, kv_quant=k) for k in self._kinds
         }
 
+        # copy-on-write prefix cache: a refcounted radix tree over prompt
+        # blocks that maps cache hits as read-only shared pages in BOTH
+        # pools, so the shared span's prefill is skipped entirely
+        # (serving/prefix_cache.py; admission integration lives in the
+        # batcher, the hit-path prefill in _prefill_into)
+        self._prefix: Optional[PrefixCache] = None
+        if cfg.prefix_cache:
+            self._prefix = PrefixCache(
+                {"target": self._t_pool, "draft": self._d_pool},
+                cfg.page_size,
+            )
+
         # observability: one shared registry — the batcher's fused/finish
         # counters, the engine's latency histograms, and the server's
         # GET /metrics all read and write the same families.  The tracer
@@ -536,6 +577,7 @@ class Engine:
             t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
             t_costs=_wdos_costs(target.cfg), d_costs=_wdos_costs(draft.cfg),
             metrics=self.metrics,
+            prefix_cache=self._prefix,
         )
         self._t_iface, self._d_iface = make_interface(target), make_interface(draft)
         self._t_step, self._d_step = _make_paged_step(target), _make_paged_step(draft)
@@ -622,6 +664,27 @@ class Engine:
             "round_acceptance", "Per-round accepted/drafted fraction",
             buckets=RATIO_BUCKETS,
         )
+        # prefix-cache families (registered unconditionally so the catalog
+        # is stable; they stay at zero when EngineConfig.prefix_cache=False)
+        self._m_prefix_hit_rate = m.gauge(
+            "prefix_hit_rate",
+            "Prefix-cache hit fraction over admission lookups",
+        )
+        self._m_shared_pages = m.gauge(
+            "shared_pages",
+            "Prefix-cache page residency: state='shared' counts pool pages "
+            "mapped by more than one holder, state='cached' the pages "
+            "pinned by the radix tree",
+            ("pool", "state"),
+        )
+        self._m_tokens_saved = m.counter(
+            "prefill_tokens_saved_total",
+            "Prompt rows whose prefill was skipped via shared prefix pages",
+        )
+        self._m_prefix_cow = m.counter(
+            "prefix_cow_total",
+            "Copy-on-write privatizations of a partially-shared prefix page",
+        )
 
     def _refresh_gauges(self) -> None:
         """Republish the level-style series (queue depth, active slots,
@@ -644,6 +707,14 @@ class Engine:
         drafted = self._m_drafted.value()
         if drafted:
             self._m_accept_rate.set(self._m_accepted.value() / drafted)
+        if self._prefix is not None:
+            self._m_prefix_hit_rate.set(self._prefix.hit_rate)
+            for name, pool in (
+                ("target", self._t_pool), ("draft", self._d_pool)
+            ):
+                g = self._m_shared_pages
+                g.labels(pool=name, state="shared").set(pool.shared_page_count)
+                g.labels(pool=name, state="cached").set(self._prefix.node_count)
 
     def stats_snapshot(self) -> dict:
         """One consistent, JSON-safe stats view, built in a single pass on
@@ -671,6 +742,8 @@ class Engine:
         fused = b.fused_summary()
         if fused is not None:
             snap["fused"] = fused
+        if self._prefix is not None:
+            snap["prefix_cache"] = self._prefix.stats()
         return snap
 
     # -- request lifecycle ---------------------------------------------------
@@ -796,24 +869,106 @@ class Engine:
                                          lengths)
         return jnp.where(kvq_dev[:, None, None], outs["int8"], outs["none"])
 
-    def _prefill_into(self, req: Request, iface: LMInterface, params, seq,
-                      store, tables, slot):
-        # same jitted program as the single-request path => bitwise
-        # identical prefix KV; the cache rows scatter device->device into
-        # the request's (eagerly backed, lifetime-stable) pages — only the
-        # store of the request's resolved kind (int8 rows quantize inside
-        # the scatter; the wrong-kind storage of these pages is never read)
+    def _prefill_into(self, req: Request, model: ServingModel,
+                      iface: LMInterface, seq, store, tables, slot,
+                      role: str):
+        """Prefill one request into one pool (target or draft).
+
+        Miss path: the same jitted prefill program as the single-request
+        path => bitwise identical prefix KV; the cache rows scatter
+        device->device into the request's (eagerly backed, lifetime-stable)
+        pages — only the store of the request's resolved kind (int8 rows
+        quantize inside the scatter; the wrong-kind storage of these pages
+        is never read).
+
+        Prefix-cache hit path (req.prefix_match covers ``m`` tokens): the
+        shared pages are already in the page table (mapped at admission) and
+        hold exactly the KV a full prefill would have written (prefix rows
+        are bitwise invariant to what follows them).  A partially-shared
+        last page is copy-on-written FIRST — value and scale arrays of the
+        request's store, device-side — so the shared original is never
+        written; then the unshared tail [m, plen-1) runs as a dense
+        ``extend`` over a cache seeded with the node mirrors' FP prefix
+        (bitwise equal to full-prefill tail KV) and scatters with
+        ``start=m``, leaving the shared rows untouched.  The request's
+        first write lands at ``plen-1 >= m``, always in a private page, so
+        speculative rewind (bounded below by committed-1) can never touch a
+        shared page.
+
+        Returns ``(store, dense_kv)`` where dense_kv = (k, v) host arrays
+        covering rows [0, plen-1) for radix-tree donation, or None when the
+        forward was skipped entirely (full hit — every block is cached)."""
         plen = req.prompt.shape[0]
-        _, cache = iface.prefill(params, jnp.asarray(req.prompt[None, :-1]))
-        seq.ensure_backed(seq.reservation * seq.pool.page_size)
+        match = req.prefix_match
+        m = match.tokens_matched if match is not None else 0
+        seq.ensure_backed(seq.capacity_pages * seq.pool.page_size)
+        if seq.needs_cow:
+            src, dst = seq.cow_last_shared()
+            store = _copy_page(store, src, dst)
+            if self._prefix is not None:
+                self._prefix.cow_copies += 1
+            self._m_prefix_cow.inc()
         tables.set_row(slot, seq)
+        if m >= plen - 1:
+            # full hit: rows [0, plen-1) are all resident in shared pages
+            # (the COW above privatized the write frontier); no forward runs
+            return store, None
+        if m > 0:
+            k_pre, v_pre = match.prefix_kv(role)
+            cache = lm.init_cache(
+                model.cfg, 1, model.s_max,
+                tp=model.mesh.shape["model"] if model.mesh else 1,
+            )
+            attn = dict(cache["attn"])
+            attn["k"] = attn["k"].at[:, 0, :m].set(
+                jnp.asarray(k_pre, attn["k"].dtype)
+            )
+            attn["v"] = attn["v"].at[:, 0, :m].set(
+                jnp.asarray(v_pre, attn["v"].dtype)
+            )
+            cache = dict(cache)
+            cache["attn"] = attn
+            cache["length"] = jnp.asarray(m, jnp.int32)
+            # pad the unshared tail to a power-of-two bucket so the extend
+            # compiles once per bucket, not once per tail length (causal
+            # attention: pad rows sit AFTER the tail, so tail rows are
+            # bitwise unaffected; the scatter's [start, n) bound and the
+            # mirror slice below both ignore the pad rows)
+            tail = req.prompt[m:-1]
+            width = 1 << (len(tail) - 1).bit_length()
+            # steady-state hits leave tails shorter than one page (only full
+            # blocks are cached); floor the bucket at page_size so they all
+            # share ONE compiled extend instead of one per {1, 2, 4, ...}
+            width = min(max(width, seq.pool.page_size), model.s_max - m)
+            padded = np.zeros(width, np.int32)
+            padded[: len(tail)] = tail
+            _, cache = iface.extend(
+                model.params, jnp.asarray(padded[None]), cache
+            )
+        else:
+            _, cache = iface.prefill(
+                model.params, jnp.asarray(req.prompt[None, :-1])
+            )
         store = _scatter_prefill(
             store,
             cache["attn"]["k"][:, 0], cache["attn"]["v"][:, 0],
-            jnp.asarray(tables.table[slot]), plen - 1,
+            jnp.asarray(tables.table[slot]), plen - 1, m,
         )
-        seq.advance(plen - 1)
-        return store
+        seq.advance(plen - 1 - m)
+        dense = None
+        if self._prefix is not None:
+            upto = plen - 1
+            ps = seq.pool.page_size
+            # the full-block walk guarantees nodes for blocks [0, m // ps);
+            # when that covers every full block of the prompt, insert()
+            # would be a no-op — skip the device->host KV pull entirely
+            # (the steady-state hit path: only the sub-page tail ran)
+            if m // ps < upto // ps:
+                dense = (
+                    np.asarray(cache["attn"]["k"][:, 0, :upto]),
+                    np.asarray(cache["attn"]["v"][:, 0, :upto]),
+                )
+        return store, dense
 
     def _admit(self) -> None:
         """Admit whatever fits and prefill it into both pools."""
@@ -826,14 +981,27 @@ class Engine:
                 f"row{slot}", "admit", cat="lifecycle", rid=req.rid
             )
             kind = req.kv_kind
-            self._t_store[kind] = self._prefill_into(
-                req, self._t_iface, self.target.params, req.t_seq,
-                self._t_store[kind], self._t_tables, slot,
+            self._t_store[kind], t_kv = self._prefill_into(
+                req, self.target, self._t_iface, req.t_seq,
+                self._t_store[kind], self._t_tables, slot, "target",
             )
-            self._d_store[kind] = self._prefill_into(
-                req, self._d_iface, self.draft.params, req.d_seq,
-                self._d_store[kind], self._d_tables, slot,
+            self._d_store[kind], d_kv = self._prefill_into(
+                req, self.draft, self._d_iface, req.d_seq,
+                self._d_store[kind], self._d_tables, slot, "draft",
             )
+            if self._prefix is not None:
+                if req.prefix_match is not None:
+                    self._m_tokens_saved.inc(req.prefix_match.tokens_matched)
+                if t_kv is not None and d_kv is not None:
+                    # donate the freshly prefilled FULL blocks: the tree
+                    # pins the pages (pool incref) and mirrors the dense
+                    # FP rows for future hits' seeded tail prefills
+                    self._prefix.insert(
+                        req.prompt, kind,
+                        {"target": req.t_seq.pages, "draft": req.d_seq.pages},
+                        {"target": t_kv, "draft": d_kv},
+                        upto=req.prompt.shape[0] - 1,
+                    )
             req.state = RequestState.DECODE
             self.tracer.rec(
                 f"row{slot}", "prefill", t_adm, self._now(),
@@ -1317,6 +1485,8 @@ class Engine:
         }
         s["kv_copy_s"] = 0.0  # no host K/V copies exist on this path
         s["table_upload_s"] = self._m_table_upload.value()
+        if self._prefix is not None:
+            s["prefix_cache"] = self._prefix.stats()
         return s
 
 

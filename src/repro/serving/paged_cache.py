@@ -62,11 +62,25 @@ Invariants (what the engine's hot loop is allowed to assume):
   scatter writes both in one dispatch), and ``rewind``/``release`` zero
   the scale entries of dropped positions so a reused page can never
   dequantize with a stale scale.
+* **Shared read-only prefix pages (prefix cache)** — a page may be mapped
+  by several sequences at once: ``allocate_sequence(shared_pages=...,
+  shared_tokens=...)`` maps an existing prefix (refcounting each page)
+  ahead of a discounted reservation, and ``_give_page`` only frees a page
+  when its last reference drops — releasing one mapper can never free a
+  page another row (or the radix tree) still maps.  A sequence never
+  WRITES a shared page: full shared pages sit entirely below the prefix
+  (writes start at ``length >= shared_tokens``), and the one page a write
+  could land in — a partially-shared last block — is copy-on-write
+  swapped for a private page first (``needs_cow``/``cow_last_shared``;
+  the replacement is funded by the reservation, which never discounts the
+  partial page).  Speculative rewind therefore stays confined to private
+  pages by construction, and ``rewind`` additionally refuses to pop a
+  shared page.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,9 +88,11 @@ __all__ = [
     "PagedKVPool",
     "PagedSequence",
     "PoolStats",
+    "bytes_per_token_for",
     "device_pool_init",
     "device_pool_store",
     "kv_quantize_np",
+    "num_pages_for_bytes",
 ]
 
 # "mixed" is allocator/stats-only: one page allocator backs BOTH a dense
@@ -101,6 +117,62 @@ def kv_quantize_np(span: np.ndarray):
     return q, s
 
 
+def bytes_per_token_for(
+    n_layers: int,
+    kv_heads: int,
+    head_dim: int,
+    dtype=np.float32,
+    kv_quant: str = "none",
+) -> Dict[str, int]:
+    """K+V bytes one cached token occupies under each storage kind a pool of
+    this geometry allocates.  This is derived from the ACTUAL device-store
+    layout (``device_pool_store``): dense pages are ``2 * n_layers *
+    kv_heads * head_dim`` elements of the model dtype; int8 pages store the
+    same element count as int8 PLUS one float32 scale per (slot, kv head)
+    per K and per V — the per-page scale arrays are first-class residency,
+    not bookkeeping, so every byte gauge denominated in this unit includes
+    them.  ``"mixed"`` pools back every page with BOTH storages and report
+    both kinds."""
+    if kv_quant not in KV_QUANT_MODES:
+        raise ValueError(
+            f"kv_quant must be one of {KV_QUANT_MODES}, got {kv_quant!r}"
+        )
+    base = 2 * n_layers * kv_heads  # K and V, every layer, every kv head
+    dense = base * head_dim * np.dtype(dtype).itemsize
+    quant = base * (head_dim * 1 + _SCALE_BYTES)  # int8 values + f32 scale
+    if kv_quant == "none":
+        return {np.dtype(dtype).name: dense}
+    if kv_quant == "int8":
+        return {"int8": quant}
+    return {np.dtype(dtype).name: dense, "int8": quant}
+
+
+def num_pages_for_bytes(
+    byte_budget: int,
+    n_layers: int,
+    kv_heads: int,
+    head_dim: int,
+    page_size: int,
+    dtype=np.float32,
+    kv_quant: str = "none",
+) -> int:
+    """Pages a byte budget buys under a storage kind — the admission-side
+    inverse of ``bytes_per_token_for``.  Feeding COMPRESSED bytes (not raw
+    page counts) into pool sizing is what lets an int8 pool admit ~3.5x the
+    resident requests of an fp32 pool at the same byte budget: the page
+    count scales with the true bytes/page of the storage kind."""
+    per_page = sum(
+        bytes_per_token_for(n_layers, kv_heads, head_dim, dtype, kv_quant)
+        .values()
+    ) * page_size
+    if byte_budget < per_page:
+        raise ValueError(
+            f"pool byte budget {byte_budget} is below one page "
+            f"({per_page} bytes at page_size={page_size}, kv_quant={kv_quant!r})"
+        )
+    return byte_budget // per_page
+
+
 @dataclasses.dataclass
 class PoolStats:
     num_pages: int
@@ -113,6 +185,11 @@ class PoolStats:
     kv_quant: str = "none"
     bytes_per_token: float = 0.0  # K+V bytes (incl. scales) per cached token
     kv_bytes_total: int = 0  # bytes resident in allocated pages right now
+    # bytes resident per storage kind — page-granular, derived from the
+    # device-store layout, so int8/mixed totals include the per-page f32
+    # scale arrays (kv_bytes_total is exactly the sum of these)
+    kv_bytes_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    shared_pages: int = 0  # pages mapped by more than one holder (ref > 1)
 
     @property
     def utilization(self) -> float:
@@ -171,6 +248,9 @@ class PagedKVPool:
         self._allocated: set = set()
         self._reserved_unbacked = 0
         self.high_water = 0
+        # page refcounts for SHARED pages only (allocated pages default to
+        # ref 1); a page frees when its last reference drops
+        self._ref: Dict[int, int] = {}
 
     # -- accounting ---------------------------------------------------------
 
@@ -196,14 +276,10 @@ class PagedKVPool:
         pages, ``"int8"`` for compressed pages incl. their f32 scale).
         Dense/int8 pools have one entry; ``"mixed"`` pools back every page
         with BOTH storages and report both."""
-        base = 2 * self.n_layers * self.kv_heads
-        dense = base * self.head_dim * np.dtype(self.dtype).itemsize
-        quant = base * (self.head_dim * 1 + _SCALE_BYTES)
-        if self.kv_quant == "none":
-            return {np.dtype(self.dtype).name: dense}
-        if self.kv_quant == "int8":
-            return {"int8": quant}
-        return {np.dtype(self.dtype).name: dense, "int8": quant}
+        return bytes_per_token_for(
+            self.n_layers, self.kv_heads, self.head_dim,
+            self.dtype, self.kv_quant,
+        )
 
     def bytes_per_token(self) -> int:
         """K+V bytes one cached token occupies, including scale overhead for
@@ -216,6 +292,11 @@ class PagedKVPool:
         return self.bytes_per_token() * self.page_size
 
     def stats(self) -> PoolStats:
+        used_tokens = self.used_pages * self.page_size
+        by_kind = {
+            kind: bpt * used_tokens
+            for kind, bpt in self.bytes_per_token_by_kind().items()
+        }
         return PoolStats(
             num_pages=self.num_pages,
             page_size=self.page_size,
@@ -226,25 +307,86 @@ class PagedKVPool:
             high_water_pages=self.high_water,
             kv_quant=self.kv_quant,
             bytes_per_token=float(self.bytes_per_token()),
-            kv_bytes_total=self.used_pages * self.bytes_per_page(),
+            kv_bytes_total=sum(by_kind.values()),
+            kv_bytes_by_kind=by_kind,
+            shared_pages=self.shared_page_count,
         )
+
+    # -- shared-page refcounting (prefix cache) -------------------------------
+
+    @property
+    def shared_page_count(self) -> int:
+        """Pages currently held by more than one reference (mapped by
+        several sequences and/or pinned by the prefix-cache radix tree)."""
+        return len(self._ref)
+
+    def page_ref(self, page: int) -> int:
+        """Reference count of `page` (0 when free, 1 for a sole owner)."""
+        if page not in self._allocated:
+            return 0
+        return self._ref.get(page, 1)
+
+    def incref_page(self, page: int) -> None:
+        """Add a reference to an ALLOCATED page (map it into another
+        sequence, or pin it in the prefix-cache tree).  Every reference is
+        returned through ``_give_page``, which frees only the last one."""
+        if page not in self._allocated:
+            raise RuntimeError(f"incref of unallocated page {page}")
+        self._ref[page] = self._ref.get(page, 1) + 1
 
     # -- sequence lifecycle -------------------------------------------------
 
-    def allocate_sequence(self, max_tokens: int) -> Optional["PagedSequence"]:
+    def allocate_sequence(
+        self,
+        max_tokens: int,
+        shared_pages: Optional[Sequence[int]] = None,
+        shared_tokens: int = 0,
+    ) -> Optional["PagedSequence"]:
         """Reserve worst-case capacity for one request; None if it won't fit.
 
         `max_tokens` is the cache high-water mark (prompt + generation +
-        draft/verify window), not just the prompt length."""
-        need = pages_for(max_tokens, self.page_size)
-        if need > self.num_pages:
+        draft/verify window), not just the prompt length.
+
+        ``shared_pages``/``shared_tokens`` map an existing read-only prefix
+        (prefix cache hit): the listed pages — covering exactly
+        ``shared_tokens`` positions — are refcounted and become the front of
+        the new sequence's page table, and the reservation is discounted by
+        the number of FULLY shared pages.  A partially-shared last page is
+        deliberately NOT discounted: its reservation slot funds the private
+        copy ``cow_last_shared`` swaps in before the sequence's first write
+        into that block."""
+        capacity = pages_for(max_tokens, self.page_size)
+        if capacity > self.num_pages:
             raise ValueError(
-                f"request needs {need} pages > pool capacity {self.num_pages}"
+                f"request needs {capacity} pages > pool capacity "
+                f"{self.num_pages}"
             )
+        shared = list(shared_pages) if shared_pages else []
+        if shared:
+            if not 0 < shared_tokens <= max_tokens:
+                raise ValueError(
+                    f"shared_tokens {shared_tokens} out of (0, {max_tokens}]"
+                )
+            if pages_for(shared_tokens, self.page_size) != len(shared):
+                raise ValueError(
+                    f"{len(shared)} shared pages cover "
+                    f"{pages_for(shared_tokens, self.page_size)} blocks, not "
+                    f"shared_tokens={shared_tokens}"
+                )
+        elif shared_tokens:
+            raise ValueError("shared_tokens without shared_pages")
+        full_shared = shared_tokens // self.page_size
+        need = capacity - full_shared
         if not self.can_reserve(need):
             return None
+        for page in shared:
+            self.incref_page(page)
         self._reserved_unbacked += need
-        return PagedSequence(self, reservation=need)
+        return PagedSequence(
+            self, reservation=need,
+            shared_pages=shared, shared_tokens=shared_tokens,
+            capacity_pages=capacity,
+        )
 
     # -- internal page ops (called by PagedSequence) ------------------------
 
@@ -258,6 +400,21 @@ class PagedKVPool:
     def _give_page(self, page: int, *, back_to_reservation: bool) -> None:
         if page not in self._allocated:
             raise RuntimeError(f"double-free of page {page}")
+        ref = self._ref.get(page, 1)
+        if ref > 1:
+            # another sequence (or the prefix tree) still maps this page:
+            # drop one reference, keep the page allocated.  A shared page
+            # was never part of this holder's reservation, so it cannot
+            # return to one.
+            if back_to_reservation:
+                raise RuntimeError(
+                    f"shared page {page} cannot return to a reservation"
+                )
+            if ref == 2:
+                del self._ref[page]
+            else:
+                self._ref[page] = ref - 1
+            return
         self._allocated.remove(page)
         self._free.append(page)
         if back_to_reservation:
@@ -265,13 +422,34 @@ class PagedKVPool:
 
 
 class PagedSequence:
-    """One request's page table + length over a shared PagedKVPool."""
+    """One request's page table + length over a shared PagedKVPool.
 
-    def __init__(self, pool: PagedKVPool, reservation: int):
+    A sequence may start life with a read-only SHARED PREFIX (prefix cache
+    hit): ``pages[:n_shared]`` are refcounted pages owned jointly with other
+    sequences and/or the prefix tree, covering ``shared_tokens`` committed
+    positions, and ``length`` starts at ``shared_tokens``.  Shared pages are
+    never written; when ``shared_tokens`` ends mid-page the holder must call
+    ``cow_last_shared()`` before its first write (``append``/``advance``
+    enforce this).  Rewind never reaches below ``shared_tokens``, so the
+    speculative-rewind contract only ever touches private pages."""
+
+    def __init__(
+        self,
+        pool: PagedKVPool,
+        reservation: int,
+        shared_pages: Sequence[int] = (),
+        shared_tokens: int = 0,
+        capacity_pages: Optional[int] = None,
+    ):
         self.pool = pool
-        self.pages: List[int] = []
-        self.length = 0
+        self.pages: List[int] = list(shared_pages)
+        self.length = shared_tokens
         self.reservation = reservation
+        self.n_shared = len(self.pages)
+        self.shared_tokens = shared_tokens
+        self.capacity_pages = (
+            capacity_pages if capacity_pages is not None else reservation
+        )
         self.released = False
 
     # -- index helpers ------------------------------------------------------
@@ -285,11 +463,53 @@ class PagedSequence:
     def _ensure_capacity(self, n_tokens: int) -> None:
         need = pages_for(n_tokens, self.pool.page_size)
         while len(self.pages) < need:
-            if len(self.pages) >= self.reservation:
+            if len(self.pages) >= self.capacity_pages:
                 raise RuntimeError(
-                    f"sequence exceeded its reservation of {self.reservation} pages"
+                    f"sequence exceeded its reservation-backed capacity of "
+                    f"{self.capacity_pages} pages"
                 )
             self.pages.append(self.pool._take_page())
+
+    # -- shared-prefix / copy-on-write ---------------------------------------
+
+    @property
+    def owned_pages(self) -> int:
+        """Pages this sequence owns privately (excludes the shared prefix)."""
+        return len(self.pages) - self.n_shared
+
+    @property
+    def needs_cow(self) -> bool:
+        """True while the write frontier sits inside a shared page: the
+        prefix ends mid-block, so the first write would scatter into a page
+        other holders read.  ``cow_last_shared()`` clears it."""
+        return self.n_shared > 0 and self.length < self.n_shared * self.pool.page_size
+
+    def cow_last_shared(self) -> Tuple[int, int]:
+        """Swap the partially-shared last prefix page for a private copy.
+
+        Funded by this sequence's reservation — allocation deliberately does
+        not discount the partial block.  On host-storage pools the page
+        contents (values AND scales) are copied here; storage-less pools
+        return ``(src, dst)`` so the device-resident caller can mirror the
+        copy in its jax stores before the next table upload.  The source
+        page loses one reference."""
+        assert not self.released, "cow on a released sequence"
+        if not self.needs_cow:
+            raise RuntimeError("cow_last_shared: no partially-shared page")
+        if self.owned_pages >= self.reservation:
+            raise RuntimeError("cow_last_shared: reservation exhausted")
+        src = self.pages[self.n_shared - 1]
+        dst = self.pool._take_page()
+        if self.pool.k is not None:
+            self.pool.k[:, dst] = self.pool.k[:, src]
+            self.pool.v[:, dst] = self.pool.v[:, src]
+            if self.pool.k_scale is not None:
+                self.pool.k_scale[:, dst] = self.pool.k_scale[:, src]
+                self.pool.v_scale[:, dst] = self.pool.v_scale[:, src]
+        self.pages[self.n_shared - 1] = dst
+        self.n_shared -= 1
+        self.pool._give_page(src, back_to_reservation=False)
+        return src, dst
 
     # -- data path ----------------------------------------------------------
 
@@ -306,6 +526,10 @@ class PagedSequence:
         l = k_span.shape[1]
         if l == 0:
             return
+        if self.needs_cow:
+            raise RuntimeError(
+                "append into a partially-shared page; call cow_last_shared() first"
+            )
         self._ensure_capacity(self.length + l)
         pg, slot = self._flat_index(self.length, l)
         if self.pool.kv_quant == "int8":
@@ -339,6 +563,11 @@ class PagedSequence:
         assert not self.released, "advance on a released sequence"
         if n < 0:
             raise ValueError(f"advance expects n >= 0, got {n}")
+        if n > 0 and self.needs_cow:
+            raise RuntimeError(
+                "advance into a partially-shared page; call cow_last_shared() "
+                "first (the device scatter would have written a shared page)"
+            )
         self._ensure_capacity(self.length + n)
         self.length += n
 
@@ -399,12 +628,17 @@ class PagedSequence:
             raise ValueError(f"rewind expects n >= 0, got {n}")
         if n > self.length:
             raise ValueError(f"over-rewind: length {self.length} < rewind {n}")
+        if self.length - n < self.shared_tokens:
+            raise ValueError(
+                f"rewind below the shared prefix: {self.length - n} < "
+                f"{self.shared_tokens} committed shared tokens"
+            )
         old_length = self.length
         self.length -= n
         self._invalidate_scales(self.length, old_length)
         if not release_pages:
             return
-        keep = pages_for(self.length, self.pool.page_size)
+        keep = max(pages_for(self.length, self.pool.page_size), self.n_shared)
         while len(self.pages) > keep:
             self.pool._give_page(self.pages.pop(), back_to_reservation=True)
 
@@ -415,23 +649,37 @@ class PagedSequence:
         device pools have no stale-scale window to close)."""
         if self.pool.k_scale is None:
             return
+        # never scribble on pages other holders still read: skip the shared
+        # prefix and any privately-listed page the prefix tree pinned after
+        # this sequence donated it (pool ref > 1)
+        start = max(start, self.n_shared * self.pool.page_size)
         stop = min(stop, len(self.pages) * self.pool.page_size)
         if stop <= start:
             return
         pg, slot = self._flat_index(start, stop - start)
+        sole = np.asarray([self.pool.page_ref(int(p)) <= 1 for p in pg])
+        pg, slot = pg[sole], slot[sole]
+        if len(pg) == 0:
+            return
         self.pool.k_scale[:, pg, slot] = 0.0
         self.pool.v_scale[:, pg, slot] = 0.0
 
     def release(self) -> None:
-        """Return every page and the unused reservation to the pool."""
+        """Return every page reference and the unused reservation to the
+        pool.  Shared pages (prefix hits, or private pages later donated to
+        the prefix tree) only lose a reference here; a page is freed at its
+        last reference, so releasing one row can never free a page another
+        row still maps."""
         if self.released:
             raise RuntimeError("double release of PagedSequence")
         self._invalidate_scales(0, len(self.pages) * self.pool.page_size)
+        owned = self.owned_pages
         for page in self.pages:
             self.pool._give_page(page, back_to_reservation=False)
-        self.pool._reserved_unbacked -= self.reservation - len(self.pages)
+        self.pool._reserved_unbacked -= self.reservation - owned
         self.pages = []
         self.length = 0
+        self.n_shared = 0
         self.released = True
 
 

@@ -1,0 +1,314 @@
+"""Copy-on-write prefix cache: a refcounted radix tree over prompt tokens.
+
+Production traffic is millions of users hitting a handful of system
+prompts, so the dominant prefill cost is redundant: every request
+recomputes KV for the same prefix.  This module caches prompt prefixes at
+PAGE-BLOCK granularity — one radix-tree node per ``page_size``-token block
+— and maps cache hits straight into new requests' page tables as
+READ-ONLY SHARED PAGES (``PagedSequence`` shared-prefix support in
+``paged_cache.py``), so the shared span's prefill is skipped entirely.
+
+Structure and contracts:
+
+* **One tree per KV storage kind.**  In a ``kv_quant="mixed"`` engine an
+  int8 request's pages hold garbage in the dense store arrays (and vice
+  versa), so pages are only shareable between requests of the same kind.
+* **A node = one full block**, keyed by the block's token ids.  It holds
+  one page id per pool role (``target``/``draft``) — pinned with a pool
+  reference the tree owns until eviction — plus a host FP *mirror* of the
+  block's dense KV per role.  The mirror is what makes sharing
+  bit-identical under quantized storage: the engine seeds a dense cache
+  with the FP prefix and runs the tail prefill as an ``extend``, which
+  produces exactly the KV a full prefill would have (the quantized page
+  bytes were themselves produced from this same dense KV).
+* **Partial matches** (the prompt diverges mid-block, or the cached block
+  covers more than ``plen - 1`` tokens) map the final page partially;
+  the holding sequence must copy-on-write it before its first scatter
+  (``PagedSequence.cow_last_shared``), so the shared original is never
+  written.
+* **Refcounts at two levels.**  ``_Node.ref`` counts live *requests*
+  currently matched through the node (acquire/release from the batcher);
+  ``PagedKVPool`` refcounts the *pages* (tree pin + every mapping
+  sequence).  Donating requests do NOT hold node refs — evicting a node
+  whose donor still runs merely drops the tree's page reference.
+* **Eviction is LRU over zero-ref leaves** whose pages would actually
+  free (pool refcount 1, i.e. only the tree holds them), driven by the
+  batcher's admission retry loop under pool pressure.
+
+Everything here is host-side bookkeeping: no jax imports, O(blocks) dict
+walks per admission, nothing on the per-token path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .paged_cache import PagedKVPool
+
+__all__ = ["PrefixCache", "PrefixMatch"]
+
+
+@dataclasses.dataclass
+class _Node:
+    """One full prompt block: its tokens, one pinned page per pool role,
+    and a host FP mirror of the block's dense KV per role."""
+
+    key: bytes
+    tokens: np.ndarray  # int32 (page_size,)
+    pages: Dict[str, int]
+    mirrors: Dict[str, Tuple[np.ndarray, np.ndarray]]  # role -> (k, v)
+    parent: Optional["_Node"]
+    children: Dict[bytes, "_Node"] = dataclasses.field(default_factory=dict)
+    ref: int = 0  # live requests matched through this node
+    tick: int = 0  # LRU clock (monotone counter, not wall time)
+
+
+class PrefixMatch:
+    """The longest cached prefix for one prompt: the node path, how many
+    tokens it covers (capped at ``plen - 1``), and accessors for the pages
+    to map and the dense-KV seed for the tail prefill."""
+
+    def __init__(self, kind: str, nodes: List[_Node], tokens_matched: int):
+        self.kind = kind
+        self.nodes = nodes
+        self.tokens_matched = tokens_matched
+
+    @property
+    def partial(self) -> bool:
+        """True when the final page is only partially covered — the mapping
+        sequence will copy-on-write it before its first write."""
+        ps = len(self.nodes[0].tokens)
+        return self.tokens_matched % ps != 0
+
+    def shared_pages(self, role: str) -> List[int]:
+        return [n.pages[role] for n in self.nodes]
+
+    def prefix_kv(self, role: str) -> Tuple[np.ndarray, np.ndarray]:
+        """Dense (k, v) for the matched prefix, shape (L, m, kvh, hd) —
+        the seed for running the unshared tail as a dense ``extend``."""
+        m = self.tokens_matched
+        k = np.concatenate([n.mirrors[role][0] for n in self.nodes], axis=1)
+        v = np.concatenate([n.mirrors[role][1] for n in self.nodes], axis=1)
+        return k[:, :m], v[:, :m]
+
+
+def _lcp(a: np.ndarray, b: np.ndarray) -> int:
+    """Length of the longest common prefix of two int token arrays."""
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if len(neq) else n
+
+
+class PrefixCache:
+    """Radix tree of prompt blocks -> shared pages, one tree per KV kind.
+
+    ``pools`` maps pool roles (``"target"``/``"draft"``) to the
+    ``PagedKVPool`` whose pages the corresponding role's nodes pin; every
+    node carries one page per role so a hit discounts BOTH pools'
+    prefills."""
+
+    def __init__(self, pools: Dict[str, PagedKVPool], page_size: int):
+        self.pools = dict(pools)
+        self.page_size = page_size
+        self._roots: Dict[str, _Node] = {}
+        self._clock = itertools.count(1)
+        # counters for /metrics and the bench harness
+        self.lookups = 0
+        self.hits = 0
+        self.tokens_saved = 0
+        self.node_count = 0
+        self.evictions = 0
+        self.cow_copies = 0
+
+    # -- lookup ---------------------------------------------------------------
+
+    def _root(self, kind: str) -> _Node:
+        root = self._roots.get(kind)
+        if root is None:
+            root = _Node(
+                key=b"", tokens=np.zeros(0, np.int32), pages={}, mirrors={},
+                parent=None,
+            )
+            self._roots[kind] = root
+        return root
+
+    def match(self, prompt, kind: str) -> Optional[PrefixMatch]:
+        """Longest cached prefix of ``prompt`` under ``kind``'s tree, or
+        None.  The match is capped at ``len(prompt) - 1`` tokens: the last
+        prompt token must be (re)fed to produce first-decode logits, so its
+        KV row is always private."""
+        self.lookups += 1
+        prompt = np.asarray(prompt, np.int32)
+        ps = self.page_size
+        limit = len(prompt) - 1
+        if limit < 1:
+            return None
+        node, nodes, m = self._root(kind), [], 0
+        while m + ps <= limit:
+            child = node.children.get(prompt[m : m + ps].tobytes())
+            if child is None:
+                break
+            nodes.append(child)
+            node = child
+            m += ps
+        # divergence (or the limit) lies mid-block: take the child with the
+        # longest common prefix over the remaining tokens — its page will be
+        # mapped partially and copy-on-written by the holder
+        want = prompt[m:limit]
+        best, best_r = None, 0
+        for child in node.children.values():
+            r = _lcp(child.tokens, want)
+            if r > best_r:
+                best, best_r = child, r
+        if best is not None:
+            nodes.append(best)
+            m += best_r
+        if m == 0:
+            return None
+        self.hits += 1
+        return PrefixMatch(kind, nodes, m)
+
+    # -- request refs -----------------------------------------------------------
+
+    def acquire(self, match: PrefixMatch) -> None:
+        """A matched request was admitted: pin its node path against
+        eviction for the request's lifetime.  ``tokens_saved`` counts here
+        (admission), not at lookup — a stalled request may be re-matched
+        several times before a slot frees."""
+        tick = next(self._clock)
+        for node in match.nodes:
+            node.ref += 1
+            node.tick = tick
+        self.tokens_saved += match.tokens_matched
+
+    def release(self, match: PrefixMatch) -> None:
+        """The matched request retired (finish OR abort): unpin its path.
+        Page references are dropped separately by ``PagedSequence.release``;
+        the tree's own page pins stay until eviction."""
+        tick = next(self._clock)
+        for node in match.nodes:
+            if node.ref <= 0:
+                raise RuntimeError("prefix-cache release without acquire")
+            node.ref -= 1
+            node.tick = tick
+
+    # -- insertion ----------------------------------------------------------------
+
+    def insert(
+        self,
+        prompt,
+        kind: str,
+        page_lists: Dict[str, List[int]],
+        kv: Dict[str, Tuple[np.ndarray, np.ndarray]],
+        upto: int,
+    ) -> int:
+        """Donate a freshly prefilled request's blocks to the tree.
+
+        ``page_lists[role]`` is the donor sequence's page table,
+        ``kv[role]`` its dense (k, v) covering at least ``upto`` rows, and
+        ``upto`` the number of committed prefill rows (``plen - 1``).  Only
+        FULL blocks are inserted — a partial tail block would be written by
+        the donor's own decode.  Already-present blocks are skipped; new
+        nodes pin the donor's pages with a pool reference (the donor keeps
+        its own — last reference frees).  Returns nodes inserted."""
+        prompt = np.asarray(prompt, np.int32)
+        ps = self.page_size
+        node, inserted = self._root(kind), 0
+        tick = next(self._clock)
+        for i in range(upto // ps):
+            block = prompt[i * ps : (i + 1) * ps]
+            key = block.tobytes()
+            child = node.children.get(key)
+            if child is None:
+                pages = {role: page_lists[role][i] for role in self.pools}
+                for role, page in pages.items():
+                    self.pools[role].incref_page(page)
+                mirrors = {
+                    role: (
+                        np.array(kv[role][0][:, i * ps : (i + 1) * ps]),
+                        np.array(kv[role][1][:, i * ps : (i + 1) * ps]),
+                    )
+                    for role in self.pools
+                }
+                child = _Node(
+                    key=key, tokens=block.copy(), pages=pages,
+                    mirrors=mirrors, parent=node,
+                )
+                node.children[key] = child
+                self.node_count += 1
+                inserted += 1
+            child.tick = tick
+            node = child
+        return inserted
+
+    # -- eviction -------------------------------------------------------------
+
+    def evict_one(self) -> int:
+        """Free the least-recently-used evictable leaf; returns pages freed
+        (0 when nothing is evictable).  Evictable = no children, no live
+        request refs, and every page's pool refcount is 1 (only the tree
+        holds it — evicting anything else frees no memory)."""
+        best: Optional[_Node] = None
+        stack = [
+            child for root in self._roots.values()
+            for child in root.children.values()
+        ]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node.children or node.ref > 0:
+                continue
+            if any(
+                self.pools[role].page_ref(page) != 1
+                for role, page in node.pages.items()
+            ):
+                continue
+            if best is None or node.tick < best.tick:
+                best = node
+        if best is None:
+            return 0
+        for role, page in best.pages.items():
+            self.pools[role]._give_page(page, back_to_reservation=False)
+        assert best.parent is not None
+        del best.parent.children[best.key]
+        self.node_count -= 1
+        self.evictions += 1
+        return len(best.pages)
+
+    def evict_pages(self, want: int) -> int:
+        """Evict until ``want`` pages were freed or nothing evictable is
+        left; returns pages actually freed."""
+        freed = 0
+        while freed < want:
+            got = self.evict_one()
+            if got == 0:
+                break
+            freed += got
+        return freed
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def cached_pages(self) -> int:
+        """Pages currently pinned by the tree (per role sum)."""
+        return self.node_count * len(self.pools)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hit_rate,
+            "tokens_saved": self.tokens_saved,
+            "nodes": self.node_count,
+            "evictions": self.evictions,
+            "cow_copies": self.cow_copies,
+        }

@@ -40,7 +40,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import enum
-from typing import Callable, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -108,6 +108,10 @@ class Request:
     d_seq: Optional[PagedSequence] = None  # draft-model KV pages
     controller: Optional[DraftController] = None
     finish_reason: Optional[str] = None  # "length" | "abort" once FINISHED
+    # prefix-cache hit this request was admitted with (PrefixMatch), held
+    # until retire so the batcher can unpin the matched radix-tree path;
+    # None when the cache is off or the lookup missed
+    prefix_match: Optional[Any] = None
 
     # stats
     rounds: int = 0

@@ -462,6 +462,15 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--par-mode", choices=["off", "wdos"], default="off")
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across requests "
+                         "(radix tree, copy-on-write; tokens stay "
+                         "bit-identical to sharing off)")
+    ap.add_argument("--tokenizer", default=None, metavar="VOCAB_JSON",
+                    help="BPE vocab file (BPETokenizer.save) used to "
+                         "detokenize streamed tokens; 'builtin' trains the "
+                         "self-contained default vocab; omitted -> decimal "
+                         "token ids")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="export a Chrome-trace/Perfetto JSON timeline of "
                          "the whole serving session to PATH on shutdown")
@@ -479,12 +488,22 @@ def main(argv=None):
     if args.trace_out or args.trace_jsonl:
         tracer = Tracer(jsonl_path=args.trace_jsonl)
 
+    detokenize = None
+    if args.tokenizer is not None:
+        from repro.serving.tokenizer import BPETokenizer
+
+        tok = (
+            BPETokenizer.trained() if args.tokenizer == "builtin"
+            else BPETokenizer.load(args.tokenizer)
+        )
+        detokenize = tok.piece
+
     print(f"building TLM/DLM pair (quantize={not args.no_quant}) ...")
     target, draft = build_pair(seed=0, s_max=256, quantize=not args.no_quant)
     engine = Engine(target, draft, EngineConfig(
         max_batch=args.max_batch, page_size=args.page_size,
-        par_mode=args.par_mode,
-    ), trace=tracer)
+        par_mode=args.par_mode, prefix_cache=args.prefix_cache,
+    ), trace=tracer, detokenize=detokenize)
 
     async def _run():
         server = CompletionServer(

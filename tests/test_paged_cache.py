@@ -327,3 +327,61 @@ def test_device_pool_store_shapes():
                         alloc_storage=False, kv_quant="mixed")
     with pytest.raises(ValueError, match="ONE storage kind"):
         device_pool_store(mixed)
+
+
+def test_shared_page_refcounts_release_in_any_order():
+    """Shared pages free only at the LAST reference: a donor sequence, the
+    prefix tree's pin, and a follower mapping the same pages may release
+    in any order without freeing a page another holder still maps."""
+    pool = make_pool(num_pages=8, page_size=4)
+    donor = pool.allocate_sequence(8)
+    k, v = span(pool, 8, 3.0)
+    donor.append(k, v)
+    pages = list(donor.pages)
+    for p in pages:  # the tree pins every full block
+        pool.incref_page(p)
+    follower = pool.allocate_sequence(
+        12, shared_pages=pages, shared_tokens=8
+    )
+    assert [pool.page_ref(p) for p in pages] == [3, 3]
+    assert pool.shared_page_count == 2
+    free0 = pool.free_pages
+
+    donor.release()  # donor exits first; its pages must NOT free
+    assert pool.free_pages == free0
+    assert [pool.page_ref(p) for p in pages] == [2, 2]
+    kd = np.zeros((pool.n_layers, 12, pool.kv_heads, pool.head_dim), np.float32)
+    follower.gather_into(kd, np.zeros_like(kd))
+    np.testing.assert_array_equal(kd[:, :8], k)  # rows still readable
+
+    follower.release()  # down to the tree's ref alone
+    assert pool.free_pages == free0
+    assert [pool.page_ref(p) for p in pages] == [1, 1]
+    for p in pages:  # tree eviction drops the last ref -> pages free
+        pool._give_page(p, back_to_reservation=False)
+    assert pool.free_pages == free0 + 2
+    assert pool.shared_page_count == 0
+
+
+def test_double_release_raises():
+    """Regression: releasing a sequence twice must fail loudly instead of
+    double-decrefing pages another holder may since have re-acquired."""
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(8)
+    seq.append(*span(pool, 6))
+    seq.release()
+    free0 = pool.free_pages
+    with pytest.raises(RuntimeError, match="double release"):
+        seq.release()
+    assert pool.free_pages == free0  # second call changed nothing
+
+    # the same guard holds for a sequence mapping shared pages
+    donor = pool.allocate_sequence(4)
+    donor.append(*span(pool, 4))
+    pages = list(donor.pages)
+    fol = pool.allocate_sequence(8, shared_pages=pages, shared_tokens=4)
+    fol.release()
+    with pytest.raises(RuntimeError, match="double release"):
+        fol.release()
+    assert pool.page_ref(pages[0]) == 1  # donor's ref untouched
+    donor.release()

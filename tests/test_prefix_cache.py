@@ -1,0 +1,316 @@
+"""Copy-on-write prefix cache (serving/prefix_cache.py + engine wiring).
+
+Three layers of coverage:
+
+* radix-tree unit semantics on host pools — match walk, partial (mid-block)
+  matches, acquire/release refcounts, LRU eviction that never frees a page
+  another holder maps;
+* the tentpole determinism contract — tokens with ``prefix_cache=True`` are
+  BIT-IDENTICAL to sharing off for every (paged-attn impl, par_mode,
+  kv_quant) combination, across full hits, partial hits, and COW;
+* the byte-budget satellites — ``EngineConfig.pool_bytes`` admission counts
+  compressed bytes (int8 fits ~3.5x the resident requests of fp at the same
+  budget), and the engine exports the prefix metric families.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.serve import build_pair
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.paged_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
+
+PS = 4  # unit-test page size
+
+
+def make_pools(num_pages=32):
+    return {
+        "target": PagedKVPool(2, 2, 8, num_pages=num_pages, page_size=PS),
+        "draft": PagedKVPool(2, 2, 8, num_pages=num_pages, page_size=PS),
+    }
+
+
+def dense_kv(pools, n, seed=0):
+    rng = np.random.RandomState(seed)
+    out = {}
+    for role, p in pools.items():
+        k = rng.randn(p.n_layers, n, p.kv_heads, p.head_dim).astype(np.float32)
+        out[role] = (k, -k)
+    return out
+
+
+def donate(cache, pools, prompt, upto, seed=0):
+    """Simulate a donor request: allocate + append per pool, insert blocks."""
+    prompt = np.asarray(prompt, np.int32)
+    kv = dense_kv(pools, upto, seed=seed)
+    seqs = {}
+    for role, p in pools.items():
+        seq = p.allocate_sequence(upto + PS)
+        seq.append(*kv[role])
+        seqs[role] = seq
+    cache.insert(
+        prompt, "none", {r: s.pages for r, s in seqs.items()}, kv, upto
+    )
+    return seqs, kv
+
+
+# ---------------------------------------------------------------------------
+# Radix-tree unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_match_full_blocks_and_cap():
+    pools = make_pools()
+    cache = PrefixCache(pools, PS)
+    prompt = np.arange(10, 23, dtype=np.int32)  # 13 tokens, 3 full blocks
+    donate(cache, pools, prompt, upto=12)
+    assert cache.node_count == 3
+
+    # identical prompt: full-block walk, capped at plen - 1 = 12
+    m = cache.match(prompt, "none")
+    assert m is not None and m.tokens_matched == 12 and not m.partial
+    assert len(m.shared_pages("target")) == 3
+
+    # a prompt of exactly one cached block + 1: the cap keeps the last
+    # token private even though the whole block is cached
+    m2 = cache.match(prompt[: PS + 1], "none")
+    assert m2 is not None and m2.tokens_matched == PS
+
+    # different kind => different tree
+    assert cache.match(prompt, "int8") is None
+
+
+def test_match_partial_midblock_divergence():
+    pools = make_pools()
+    cache = PrefixCache(pools, PS)
+    prompt = np.arange(10, 23, dtype=np.int32)
+    donate(cache, pools, prompt, upto=12)
+
+    fork = prompt.copy()
+    fork[6:] = 400 + np.arange(7)  # shares 1 full block + 2 tokens of block 2
+    m = cache.match(fork, "none")
+    assert m is not None and m.tokens_matched == 6 and m.partial
+    # the partially-matched node's page is mapped — COW is the holder's job
+    assert len(m.shared_pages("target")) == 2
+    k, v = m.prefix_kv("target")
+    assert k.shape[1] == 6 and v.shape[1] == 6
+
+
+def test_prefix_kv_matches_donor_rows():
+    pools = make_pools()
+    cache = PrefixCache(pools, PS)
+    prompt = np.arange(30, 43, dtype=np.int32)
+    _, kv = donate(cache, pools, prompt, upto=12, seed=3)
+    m = cache.match(prompt, "none")
+    for role in ("target", "draft"):
+        k, v = m.prefix_kv(role)
+        np.testing.assert_array_equal(k, kv[role][0][:, :12])
+        np.testing.assert_array_equal(v, kv[role][1][:, :12])
+
+
+def test_eviction_respects_refcounts_and_lru():
+    pools = make_pools()
+    cache = PrefixCache(pools, PS)
+    p1 = np.arange(0, 9, dtype=np.int32)
+    p2 = np.arange(100, 109, dtype=np.int32)
+    seqs1, _ = donate(cache, pools, p1, upto=8, seed=1)
+    seqs2, _ = donate(cache, pools, p2, upto=8, seed=2)
+    assert cache.node_count == 4
+
+    # donors still map every page (pool ref 2): nothing is evictable
+    assert cache.evict_one() == 0
+
+    for s in seqs1.values():
+        s.release()
+    # p1's leaf is now sole-owned by the tree; a live request ref pins it
+    m1 = cache.match(p1, "none")
+    cache.acquire(m1)
+    assert cache.evict_one() == 0
+    cache.release(m1)
+
+    # LRU: p1's leaf was touched by the match above... touch it again via
+    # p2 ordering — the oldest evictable leaf goes first
+    free_before = pools["target"].free_pages
+    assert cache.evict_one() == 2  # one page per role
+    assert pools["target"].free_pages == free_before + 1
+    assert cache.node_count == 3
+    assert cache.evictions == 1
+
+    # the interior p1 node is now a leaf and evictable; p2's nodes are
+    # still pinned by their donor sequences
+    assert cache.evict_one() == 2
+    assert cache.evict_one() == 0
+    assert cache.node_count == 2
+    for s in seqs2.values():
+        s.release()
+
+
+def test_eviction_never_frees_mapped_page():
+    pools = make_pools()
+    cache = PrefixCache(pools, PS)
+    prompt = np.arange(50, 59, dtype=np.int32)
+    seqs, _ = donate(cache, pools, prompt, upto=8)
+    for s in seqs.values():
+        s.release()
+
+    # a follower maps the cached pages (zero NODE refs — not yet acquired):
+    # its POOL refs alone must keep eviction away
+    m = cache.match(prompt, "none")
+    follower = {
+        role: p.allocate_sequence(
+            12, shared_pages=m.shared_pages(role), shared_tokens=8
+        )
+        for role, p in pools.items()
+    }
+    assert cache.evict_one() == 0
+    for s in follower.values():
+        s.release()
+    assert cache.evict_one() == 2
+
+
+def test_insert_is_idempotent_and_skips_partial_tail():
+    pools = make_pools()
+    cache = PrefixCache(pools, PS)
+    prompt = np.arange(0, 11, dtype=np.int32)  # upto=10: 2 full blocks
+    seqs, kv = donate(cache, pools, prompt, upto=10)
+    assert cache.node_count == 2  # the 2-token tail block is NOT cached
+    n = cache.insert(
+        prompt, "none", {r: s.pages for r, s in seqs.items()}, kv, 10
+    )
+    assert n == 0 and cache.node_count == 2  # re-donation is a no-op
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity: the tentpole acceptance matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return build_pair(seed=0, s_max=128, quantize=False)
+
+
+def _workload():
+    """Donor + mid-block divergence (COW) + full-hit prefix + exact repeat:
+    every sharing path the engine implements."""
+    donor = np.arange(7, 48, dtype=np.int32)  # 41 tokens, 5 full blocks @8
+    fork = np.concatenate([donor[:33], np.arange(200, 208, dtype=np.int32)])
+    fullhit = donor[:34].copy()  # prefix of donor: full hit on partial page
+    repeat = donor.copy()
+    return donor, [fork, fullhit, repeat]
+
+
+def _run_engine(pair, prefix_on, impl, par_mode, kv_quant):
+    target, draft = pair
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=2, page_size=8, draft_len=3, par_mode=par_mode,
+        kv_quant=kv_quant, paged_attn_impl=impl, prefix_cache=prefix_on,
+    ))
+    donor, followers = _workload()
+    sp = SamplingParams(max_tokens=6)
+    first, _ = eng.run([donor], sp)
+    rest, summary = eng.run(followers, sp)
+    return [np.asarray(t) for t in first + rest], summary
+
+
+@pytest.mark.parametrize("impl", ["gather", "pallas"])
+@pytest.mark.parametrize("par_mode", ["off", "wdos"])
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+def test_sharing_bit_identical(pair, impl, par_mode, kv_quant):
+    """prefix_cache=True must emit bitwise the tokens of sharing off, for
+    every (impl, par_mode, kv_quant) combination, across partial hits
+    (seeded tail extend), COW, and full hits (no forward at all)."""
+    off, _ = _run_engine(pair, False, impl, par_mode, kv_quant)
+    on, summary = _run_engine(pair, True, impl, par_mode, kv_quant)
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a, b)
+    st = summary["prefix_cache"]
+    assert st["hits"] >= 3  # every follower matched
+    assert st["cow_copies"] >= 1  # the partial-page paths copy-on-wrote
+    assert st["tokens_saved"] > 0
+
+
+def test_sharing_survives_abort_and_rerun(pair):
+    """Aborting a request holding shared pages must only drop references —
+    later requests still hit the same nodes and stay bit-identical."""
+    target, draft = pair
+    donor, followers = _workload()
+    sp = SamplingParams(max_tokens=6)
+
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=2, page_size=8, draft_len=3, prefix_cache=True,
+    ))
+    ref = Engine(target, draft, EngineConfig(
+        max_batch=2, page_size=8, draft_len=3,
+    ))
+    eng.run([donor], sp)
+    ref.run([donor], sp)
+
+    rid = eng.add_request(followers[0], sp)
+    eng.step()
+    assert eng.abort(rid)
+    t_pool, _d = eng.pool_stats()
+    assert t_pool.used_pages > 0  # tree pins survive the abort
+
+    for f in followers:
+        got = np.asarray(eng.run([f], sp)[0][0])
+        want = np.asarray(ref.run([f], sp)[0][0])
+        np.testing.assert_array_equal(got, want)
+    assert eng.summary()["prefix_cache"]["hits"] >= 3
+
+
+# ---------------------------------------------------------------------------
+# Byte-budget admission (satellite: compressed bytes, not raw page counts)
+# ---------------------------------------------------------------------------
+
+
+def _resident_at_budget(pair, kv_quant, pool_bytes):
+    target, draft = pair
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=16, page_size=8, draft_len=3,
+        kv_quant=kv_quant, pool_bytes=pool_bytes,
+    ))
+    prompt = np.arange(3, 19, dtype=np.int32)  # 16 tokens
+    for i in range(16):
+        eng.add_request(prompt + i, SamplingParams(max_tokens=24))
+    eng.step()
+    return eng.num_active()
+
+
+def test_int8_admits_more_requests_at_same_byte_budget(pair):
+    """The batcher admits against POOL BYTES: at one fixed budget an int8
+    engine must hold ~3.5x the resident requests of an fp engine (int8
+    values + f32 scales vs f32 values)."""
+    budget = 256 * 1024
+    fp = _resident_at_budget(pair, "none", budget)
+    int8 = _resident_at_budget(pair, "int8", budget)
+    assert 0 < fp < 16, f"budget not binding for fp ({fp} resident)"
+    ratio = int8 / fp
+    assert ratio >= 3.0, f"int8/fp resident ratio {ratio:.2f} < 3.0"
+
+
+# ---------------------------------------------------------------------------
+# Metrics export (satellite: prefix metric families)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_metric_families_export(pair):
+    target, draft = pair
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=2, page_size=8, draft_len=3, prefix_cache=True,
+    ))
+    donor, followers = _workload()
+    sp = SamplingParams(max_tokens=4)
+    eng.run([donor], sp)
+    eng.run(followers, sp)
+    text = eng.metrics.render()
+    assert "prefix_hit_rate" in text
+    assert "prefill_tokens_saved_total" in text
+    assert 'shared_pages{pool="target",state="cached"}' in text
+    assert "prefix_cow_total" in text
+    # the gauges carry live values, not just registered headers
+    hit_lines = [
+        ln for ln in text.splitlines()
+        if "prefix_hit_rate" in ln and not ln.startswith("#")
+    ]
+    assert hit_lines and float(hit_lines[0].rsplit(" ", 1)[1]) > 0

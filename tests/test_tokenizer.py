@@ -1,0 +1,186 @@
+"""BPE tokenizer (serving/tokenizer.py) + the detokenizer seam under it.
+
+The tokenizer half covers the vocabulary contract: deterministic training,
+exact round-trips (pieces are valid ``str``, decode is concatenation), the
+JSON persistence the server's ``--tokenizer`` flag loads, and the decimal
+fallback for out-of-vocab ids.
+
+The request half drives ``Request.commit`` with REAL multi-char BPE pieces
+— the paths ``default_detokenize``'s one-token-one-text rendering never
+exercised: stop strings spanning BPE token boundaries, holdback through
+multi-byte (non-ASCII) pieces, and ``take_delta`` never retracting text.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.api import SamplingParams
+from repro.serving.request import Request
+from repro.serving.tokenizer import (
+    BPETokenizer,
+    DEFAULT_CORPUS,
+    DEFAULT_VOCAB_SIZE,
+)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return BPETokenizer.trained()
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary contract
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_is_exact(tok):
+    for text in (
+        DEFAULT_CORPUS,
+        "the quick brown fox jumps over the lazy dog",
+        "résumé café naïve touché — em dash",
+        "日本語のテキスト, 中文文本.",
+        "stop at 42 -> {} [] !=",
+    ):
+        ids = tok.encode(text)
+        assert tok.decode(ids) == text
+        assert all(0 <= i < tok.vocab_size for i in ids)
+
+
+def test_merges_actually_compress(tok):
+    ids = tok.encode(DEFAULT_CORPUS)
+    assert len(ids) < len(DEFAULT_CORPUS) / 2  # multi-char pieces dominate
+    assert any(len(tok.piece(i)) >= 4 for i in ids)
+
+
+def test_vocab_fits_smoke_models(tok):
+    assert tok.vocab_size <= DEFAULT_VOCAB_SIZE  # every id a valid model token
+
+
+def test_training_is_deterministic():
+    a = BPETokenizer.train(DEFAULT_CORPUS * 2, 300)
+    b = BPETokenizer.train(DEFAULT_CORPUS * 2, 300)
+    assert a.pieces == b.pieces and a.merges == b.merges
+
+
+def test_unknown_characters_raise(tok):
+    with pytest.raises(ValueError, match="alphabet"):
+        tok.encode("Ω particle")
+
+
+def test_decimal_fallback_for_out_of_vocab(tok):
+    assert tok.piece(tok.vocab_size + 7) == f"{tok.vocab_size + 7} "
+    assert tok.piece(-1) == "-1 "
+    # mixed stream: in-vocab pieces concatenate, stragglers render decimal
+    ids = tok.encode("the pool") + [9999]
+    assert tok.decode(ids) == "the pool9999 "
+
+
+def test_save_load_roundtrip(tok, tmp_path):
+    path = str(tmp_path / "vocab.json")
+    tok.save(path)
+    loaded = BPETokenizer.load(path)
+    assert loaded.pieces == tok.pieces and loaded.merges == tok.merges
+    text = "speculative decoding drafts tokens"
+    assert loaded.encode(text) == tok.encode(text)
+
+
+# ---------------------------------------------------------------------------
+# Detokenizer seam: Request.commit with real BPE pieces
+# ---------------------------------------------------------------------------
+
+
+def _req(tok, n, stop):
+    return Request(
+        rid=0, prompt=np.asarray([1, 2], np.int32), max_new_tokens=n,
+        sampling=SamplingParams(max_tokens=n, stop=stop),
+        detokenize=tok.piece,
+    )
+
+
+def test_stop_string_spanning_token_boundary(tok):
+    """A stop string that no single piece contains — it only exists across
+    a BPE token boundary — must still fire, truncating at the token
+    boundary before the match."""
+    ids = tok.encode("the quick brown fox jumps over the lazy dog. ")
+    texts = [tok.piece(i) for i in ids]
+    j = next(
+        i for i in range(len(texts) - 1)
+        if len(texts[i]) >= 2 and len(texts[i + 1]) >= 2
+    )
+    stop = texts[j][-1] + texts[j + 1][:2]
+    assert all(stop not in t for t in texts)  # it genuinely spans pieces
+    full = "".join(texts)
+
+    req = _req(tok, len(ids), (stop,))
+    for t in ids:
+        req.commit([t])
+    assert req.stop_hit and req.finish_reason == "stop"
+    out_text = "".join(tok.piece(t) for t in req.out)
+    assert stop not in out_text
+    assert full.startswith(out_text)
+    assert len(out_text) <= full.find(stop)
+    # truncation lands on a token boundary: out is a prefix of ids
+    assert req.out == [int(t) for t in ids[: len(req.out)]]
+
+
+def test_holdback_with_multibyte_piece(tok):
+    """A committed piece containing non-ASCII chars whose text is a proper
+    prefix of a stop string is HELD (not delivered) until later text
+    proves no match is coming — then flushes, never retracted."""
+    piece = next(
+        p for p in tok.pieces
+        if any(ord(c) > 127 for c in p) and len(p) >= 2
+    )
+    pid = tok.pieces.index(piece)
+    other = tok.pieces.index("q")  # breaks any match continuing the stop
+    stop = piece + "zz"
+
+    req = _req(tok, 4, (stop,))
+    req.commit([pid])
+    assert req.take_delta() == []  # whole piece held back
+    assert req.emittable_len() == 0
+    req.commit([other])
+    assert req.take_delta() == [pid, other]  # flushed in order, none lost
+    assert not req.stop_hit
+
+
+def test_take_delta_monotone_across_holdback_and_stop(tok):
+    """Concatenated deltas == final delivered output: held tokens arrive
+    late but are never retracted, even when a stop truncates mid-stream."""
+    ids = tok.encode("paged attention maps token positions to pages")
+    texts = [tok.piece(i) for i in ids]
+    full = "".join(texts)
+    # stop on text deep in the stream, spanning a boundary when possible
+    k = len(full) * 2 // 3
+    stop = full[k : k + 3]
+
+    req = _req(tok, len(ids), (stop,))
+    deltas, marks = [], []
+    for t in ids:
+        req.commit([t])
+        d = req.take_delta()
+        deltas.append(d)
+        marks.append(req._delta_mark)
+        if req.stop_hit:
+            break
+    assert marks == sorted(marks)  # the delivery watermark never regresses
+    flat = [t for d in deltas for t in d]
+    assert flat == req.out[: req.emittable_len()]
+    assert req.stop_hit
+    assert stop not in "".join(tok.piece(t) for t in flat)
+
+
+def test_holdback_flushes_at_budget(tok):
+    """A held tail must be delivered once the budget resolves the request
+    (no future token can complete the match) — holdback delays, it never
+    drops tokens."""
+    ids = tok.encode("the server batches")
+    last_text = tok.piece(ids[-1])
+    stop = last_text + "never-matches"
+
+    req = _req(tok, len(ids), (stop,))
+    for t in ids[:-1]:
+        req.commit([t])
+    assert req.take_delta() == [int(t) for t in ids[:-1]]
+    req.commit([ids[-1]])  # fills the budget exactly -> holdback resolves
+    assert req.take_delta() == [int(ids[-1])]
+    assert not req.stop_hit
