@@ -35,9 +35,15 @@ additionally records the wdos arm with the span tracer and exports the
 staggered round timeline as Chrome-trace JSON (open in
 https://ui.perfetto.dev; see docs/OBSERVABILITY.md).
 
+`--spec-mode both` A/Bs tree-structured speculation against single-chain
+drafting on a low-acceptance sampled workload: accepted tokens per
+request-round, rounds-to-drain, and the greedy bit-identity leg (tree and
+chain greedy streams must match token-for-token).
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
         [--kv-path {paged,host,both}] [--paged-attn {auto,gather,pallas}]
-        [--par-mode {off,wdos,both}] [--json PATH] [--trace-out PATH]
+        [--par-mode {off,wdos,both}] [--spec-mode {chain,tree,both}]
+        [--json PATH] [--trace-out PATH]
 """
 import argparse
 import dataclasses
@@ -236,6 +242,77 @@ def _par_ab(target, draft, prompts, max_tokens, rows, record,
     ))
 
 
+def _tree_spec_ab(target, draft, rows, record, arms):
+    """A/B chain vs tree speculation on a low-acceptance sampled workload.
+
+    Matched drafting depth (draft_len 3 on both sides); the tree arm
+    branches top-2 at EVERY draft step with a budget covering the full
+    fan-out (2 + 4 + 8 = 14 nodes), so it hedges each position the chain
+    bets on.  The comparable metric is accepted tokens per REQUEST-round
+    (engine-step counts are batched across the whole batch and can tie);
+    ``scripts/ci.sh`` gates tree >= chain on it.  Each arm also replays a
+    greedy wave on its warm engine: greedy tree output must be
+    bit-identical to greedy chain output (branching changes rounds, never
+    content — the lossless contract from tests/test_tree_spec.py)."""
+    from repro.serving import Engine, EngineConfig, SamplingParams
+
+    n_req = 4
+    max_tokens = 16
+    prompts = _prompts(n_req, seed=3)
+    sps = [SamplingParams(temperature=1.5, seed=100 + i, max_tokens=max_tokens)
+           for i in range(n_req)]
+    configs = {
+        "chain": dict(draft_len=3),
+        "tree": dict(draft_len=3, spec_mode="tree", tree_budget=14,
+                     spec_branches=2, branch_threshold=1.0),
+    }
+    out = {"arms": {}, "requests": n_req, "max_tokens": max_tokens,
+           "temperature": 1.5}
+    record["tree_spec"] = out
+    greedy_tokens = {}
+    for name in arms:
+        eng = Engine(target, draft, EngineConfig(
+            max_batch=n_req, page_size=8, **configs[name]
+        ))
+        rids = [eng.add_request(p, sp) for p, sp in zip(prompts, sps)]
+        t0 = time.perf_counter()
+        while eng.has_unfinished():
+            eng.step()
+        dt = time.perf_counter() - t0
+        reqs = [eng.request(r) for r in rids]
+        acc = (sum(r.accepted for r in reqs)
+               / max(sum(r.rounds for r in reqs), 1))
+        summary = eng.summary()
+        # greedy wave on the SAME warm engine (no re-jit): the lossless leg
+        outs_g, _ = eng.run(prompts, SamplingParams(max_tokens=max_tokens))
+        greedy_tokens[name] = [np.asarray(t) for t in outs_g]
+        out["arms"][name] = {
+            "accepted_per_request_round": acc,
+            "rounds_to_drain": summary["rounds"],
+            "emitted": summary["emitted"],
+            "wall_s": dt,
+        }
+        rows.append((
+            f"serving_spec_{name}", 0.0,
+            f"{acc:.3f} accepted tok/request-round; "
+            f"{summary['rounds']} rounds to drain (sampled T=1.5)",
+        ))
+    if "chain" in out["arms"] and "tree" in out["arms"]:
+        for a, b in zip(greedy_tokens["chain"], greedy_tokens["tree"]):
+            np.testing.assert_array_equal(
+                a, b, err_msg="greedy tree stream != greedy chain stream"
+            )
+        out["greedy_bit_identical"] = True
+        c = out["arms"]["chain"]["accepted_per_request_round"]
+        t = out["arms"]["tree"]["accepted_per_request_round"]
+        out["accepted_per_round_ratio"] = t / max(c, 1e-9)
+        rows.append((
+            "serving_spec_tree_ab", 0.0,
+            f"{out['accepted_per_round_ratio']:.2f}x accepted/round vs "
+            f"chain ({c:.3f} -> {t:.3f}); greedy streams bit-identical",
+        ))
+
+
 def _kv_quant_ab(target, draft, prompts, max_tokens, rows, record, arms,
                  page_size=16):
     """A/B the paged-KV storage precisions at a FIXED pool byte budget.
@@ -308,7 +385,8 @@ def _kv_quant_ab(target, draft, prompts, max_tokens, rows, record, arms,
 
 
 def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
-        par_mode: str = "off", kv_quant: str = "none", json_path: str = None,
+        par_mode: str = "off", kv_quant: str = "none",
+        spec_mode: str = "chain", json_path: str = None,
         trace_out: str = None):
     from repro.launch.serve import build_pair
     from repro.serving import Engine, EngineConfig, SamplingParams
@@ -457,6 +535,12 @@ def run(smoke: bool = False, kv_path: str = "both", paged_attn: str = "auto",
         arms = ("none", "int8") if kv_quant == "both" else (kv_quant,)
         _kv_quant_ab(target, draft, prompts, max_tokens, rows, record, arms)
 
+    # --- tree-speculation A/B (top-k branch trees vs single draft chains)
+    if spec_mode != "chain":
+        record["meta"]["spec_mode"] = spec_mode
+        arms = ("chain", "tree") if spec_mode == "both" else (spec_mode,)
+        _tree_spec_ab(target, draft, rows, record, arms)
+
     # --- PAR scheduler A/B (fused cross-request rounds vs two-phase)
     if par_mode == "both":
         _par_ab(target, draft, prompts, max_tokens, rows, record,
@@ -499,6 +583,13 @@ def main(argv=None):
              "request capacity + acceptance delta)",
     )
     ap.add_argument(
+        "--spec-mode", choices=["chain", "tree", "both"], default="chain",
+        help="speculation shape for the tree-spec section: chain (skip the "
+             "section), tree-only, or 'both' to A/B top-k branch trees vs "
+             "single draft chains (accepted tokens per request-round on a "
+             "low-acceptance sampled workload + greedy bit-identity)",
+    )
+    ap.add_argument(
         "--json", default="BENCH_serving.json", metavar="PATH",
         help="machine-readable output (perf trajectory across PRs); "
              "'' disables",
@@ -514,6 +605,7 @@ def main(argv=None):
     for n, us, derived in run(
         smoke=args.smoke, kv_path=args.kv_path, paged_attn=args.paged_attn,
         par_mode=args.par_mode, kv_quant=args.kv_quant,
+        spec_mode=args.spec_mode,
         json_path=args.json or None, trace_out=args.trace_out or None,
     ):
         print(f"{n},{us:.1f},{derived}")

@@ -19,9 +19,13 @@ echo "== serving benchmark (smoke, Engine over device-resident paged KV) =="
 # arm with the span tracer and exports the staggered round timeline as
 # Perfetto-loadable Chrome-trace JSON (validated below).  --kv-quant both
 # A/Bs int8 KV pools against dense at a fixed pool byte budget (bytes/token,
-# resident-request capacity, acceptance delta — gated below).
+# resident-request capacity, acceptance delta — gated below).  --spec-mode
+# both A/Bs tree-structured speculation against single-chain drafting on a
+# low-acceptance sampled workload (accepted tokens per request-round +
+# greedy bit-identity — gated below).
 python -m benchmarks.bench_serving --smoke --kv-path paged --par-mode both \
-    --kv-quant both --json BENCH_serving.json --trace-out TRACE_wdos.json
+    --kv-quant both --spec-mode both \
+    --json BENCH_serving.json --trace-out TRACE_wdos.json
 
 echo "== paged-path kernel smoke (batch 4, Pallas interpret mode) =="
 # Exercises the kernel-wired decode path end to end every run: the Engine
@@ -115,6 +119,23 @@ print(f"prefix_cache OK: hit_rate {hit:.2f}, "
       f"{pc['ttft_p50_on_s']*1e3:.0f} ms, bit-identical")
 EOF
 
+echo "== tree-speculation gate (branch trees must out-accept chains, losslessly) =="
+# Tree speculation pays for its extra verified nodes only if it commits more
+# tokens per round than chain drafting on the SAME workload — and it is only
+# shippable if greedy output is untouched (branching changes rounds, never
+# content).  Gate both, on the A/B the bench just recorded.
+python - <<'EOF'
+import json
+ts = json.load(open("BENCH_serving.json"))["tree_spec"]
+chain = ts["arms"]["chain"]["accepted_per_request_round"]
+tree = ts["arms"]["tree"]["accepted_per_request_round"]
+assert ts["greedy_bit_identical"], "greedy tree stream != greedy chain stream"
+assert tree > chain, \
+    f"tree accepted/round {tree:.3f} <= chain {chain:.3f}"
+print(f"tree_spec OK: {chain:.3f} -> {tree:.3f} accepted tok/request-round "
+      f"({ts['accepted_per_round_ratio']:.2f}x), greedy bit-identical")
+EOF
+
 echo "== wdos round-timeline trace (Chrome-trace schema gate) =="
 # The bench's --trace-out must round-trip through the Chrome-trace schema
 # checker non-empty — the same JSON a developer drops into Perfetto.
@@ -131,6 +152,19 @@ assert "engine" in tracks and any(t.startswith("row") for t in tracks), tracks
 print(f"TRACE_wdos.json OK: {len(events)} events across "
       f"{len(tracks)} tracks {sorted(tracks)}")
 EOF
+
+echo "== property-based suites (hypothesis-randomized oracles) =="
+# hypothesis is a first-class dev dependency (requirements-dev.txt): with
+# it installed the dedicated property module runs here as a gate, and the
+# @given oracles embedded in test_kernels/test_quantization/test_rotation/
+# test_paged_attn run inside the tier-1 suite below.  A bare runtime env
+# (requirements.txt only) degrades to per-test skips via tests/_optional.py
+# instead of failing collection — so this stanza notices, never breaks.
+if python -c "import hypothesis" >/dev/null 2>&1; then
+    python -m pytest -x -q tests/test_properties.py
+else
+    echo "hypothesis not installed: property tests skip individually in the tier-1 run"
+fi
 
 echo "== tier-1 tests (gate) =="
 # Mesh-dependent tests in test_launch.py / test_models.py run on every JAX

@@ -255,21 +255,27 @@ def mixed_slot_instrs(
     t_costs: Tuple[float, float],  # (per-layer EMAC load, per-layer compute)
     d_costs: Tuple[float, float],  # (per-layer RERAM load, per-layer compute)
     verify_width: int,
+    draft_width: int = 1,
 ) -> None:
     """Price ONE fused slot: a RERAM-fed DLM pipeline per drafting row
     (plus the straggler pipeline each verifying row's DLM side runs) and an
     EMAC-fed TLM pipeline per verifying row, all sharing no edges — the DAG
-    the 4-queue WDOS overlaps and the in-order baseline serializes."""
+    the 4-queue WDOS overlaps and the in-order baseline serializes.
+
+    ``draft_width`` scales the DLM compute per layer: chain speculation
+    drafts one token per micro-step (width 1), tree speculation re-feeds
+    the whole fixed-width draft window each micro-step so every DLM
+    pipeline computes ``tree_budget + 1`` tokens wide."""
     d_load, d_comp = d_costs
     t_load, t_comp = t_costs
     for slot in plan.draft_rows:
         layer_pipeline_instrs(
-            builder, d_layers, Queue.RERAM, d_load, d_comp,
+            builder, d_layers, Queue.RERAM, d_load, d_comp * draft_width,
             tag=f"s{slot}.draft",
         )
     for slot in plan.verify_rows:
         layer_pipeline_instrs(
-            builder, d_layers, Queue.RERAM, d_load, d_comp,
+            builder, d_layers, Queue.RERAM, d_load, d_comp * draft_width,
             tag=f"s{slot}.straggler",
         )
         layer_pipeline_instrs(

@@ -30,6 +30,12 @@ __all__ = [
     "sample_token_host",
     "sd_generate",
     "SDStats",
+    "tree_ancestor_mask",
+    "tree_depths",
+    "tree_children",
+    "topk_tokens_host",
+    "speculative_tree_sample_host",
+    "speculative_tree_accept_greedy_host",
 ]
 
 
@@ -257,6 +263,167 @@ def speculative_sample_host(
         jax.random.categorical(k_res, jnp.log(jnp.asarray(dist) + 1e-20))
     )
     return [int(t) for t in d[:n_acc]] + [next_tok], n_acc
+
+
+# ---------------------------------------------------------------------------
+# Tree speculation: topology helpers + lossless tree rejection sampling
+# ---------------------------------------------------------------------------
+#
+# A speculation TREE generalizes the draft chain: each drafted node may fan
+# out to several candidate children (top-k at low-confidence positions), and
+# the target model scores the WHOLE tree in one ancestor-masked dispatch.
+#
+# Window layout convention (shared with the engine and the paged kernels):
+# window slot 0 re-feeds the last committed token (the tree root's context);
+# window slot 1+i holds drafted node i.  Nodes are indexed in drafting (BFS)
+# order; ``parents[i]`` is the node index of i's parent, or -1 when i's
+# parent is the root (last_tok).  Window-indexed logits follow the same
+# convention: row 0 is the distribution after last_tok, row 1+i after node i.
+
+
+def tree_children(parents) -> list:
+    """children[w] = node indices whose parent occupies window slot w, in
+    drafting order (node i sits at window slot 1+i; root at slot 0)."""
+    kids: list = [[] for _ in range(len(parents) + 1)]
+    for i, par in enumerate(parents):
+        kids[0 if par < 0 else 1 + par].append(i)
+    return kids
+
+
+def tree_ancestor_mask(parents, width: int = None) -> np.ndarray:
+    """(W, W) float32 ancestor mask for one request's tree window.
+
+    Row w sees column j iff window slot j is slot w itself or an ancestor of
+    it; slot 0 (last_tok) is an ancestor of every node.  ``width`` pads with
+    self-visible-only rows (their softmax stays finite via prefix+self and
+    their output is ignored) so every round compiles at ONE fixed width."""
+    t = len(parents)
+    w = t + 1 if width is None else width
+    assert w >= t + 1, (w, t)
+    m = np.eye(w, dtype=np.float32)
+    for i in range(t):
+        m[1 + i, 0] = 1.0
+        par = parents[i]
+        if par >= 0:
+            m[1 + i] = np.maximum(m[1 + i], m[1 + par])
+    return m
+
+
+def tree_depths(parents, width: int = None) -> np.ndarray:
+    """(W,) int32 window-relative depth of each slot: slot 0 (last_tok) is
+    depth 0, node i is depth(parent) + 1.  These are the RoPE position
+    offsets of the tree window (BFS slot order != position order).  Padded
+    slots repeat depth 0 (garbage rows, positions irrelevant)."""
+    t = len(parents)
+    w = t + 1 if width is None else width
+    d = np.zeros((w,), np.int32)
+    for i in range(t):
+        d[1 + i] = (d[1 + parents[i]] if parents[i] >= 0 else d[0]) + 1
+    return d
+
+
+def topk_tokens_host(logits: np.ndarray, k: int) -> list:
+    """Top-k token ids, highest logit first, first-max-first on ties — so
+    element 0 is exactly ``np.argmax(logits)`` (the greedy chain token)."""
+    order = np.argsort(-np.asarray(logits, np.float32), kind="stable")
+    return [int(t) for t in order[:k]]
+
+
+def speculative_tree_sample_host(
+    key: jax.Array,
+    nodes,  # (T,) int drafted token per node, BFS order
+    parents,  # (T,) int parent node index per node (-1 = root)
+    p_logits: np.ndarray,  # (>= T+1, V) target logits, window-indexed
+    q_logits: np.ndarray,  # (>= T+1, V) draft logits, window-indexed
+    temperature: float,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> Tuple[list, list, int]:
+    """Lossless TREE rejection sampling (SpecInfer-style multi-branch
+    verify) for one request's round.
+
+    Walks the tree from the root: at each position the residual starts as
+    the filtered target distribution; each candidate child (drawn i.i.d.
+    from the filtered draft distribution during drafting — with
+    replacement, which is what keeps the rule exact) is accepted with
+    probability ``min(1, r(x)/q(x))``; on rejection the residual updates to
+    ``norm(max(r - q, 0))``.  When every child is rejected (or the position
+    has none) the final token samples from the current residual, exactly as
+    the chain rule's residual/bonus draw — so for fan-out-1 trees this
+    reduces to ``speculative_sample_host`` decision-for-decision, and the
+    emitted tokens are always distributed exactly as autoregressive
+    sampling from the target.
+
+    Per-decision randomness comes from ``jax.random.fold_in(key, i)`` with
+    i counting accept tests and residual draws in walk order, so a round is
+    reproducible from the request's accept key alone.
+
+    Returns (committed tokens [path + 1 residual/bonus], accepted node
+    indices in path order, n_accepted)."""
+    temp = max(temperature, 1e-6)
+
+    def _filtered(logits):
+        lg = _top_k_filter_host(np.asarray(logits, np.float32), top_k) / temp
+        if top_p < 1.0:
+            lg = _top_p_filter_host(lg, top_p)
+        return _softmax_host(lg)
+
+    kids = tree_children(parents)
+    committed: list = []
+    path: list = []
+    slot = 0  # current window slot (context position)
+    decision = 0
+    while True:
+        p_w = _filtered(p_logits[slot])
+        q_w = _filtered(q_logits[slot])
+        r = p_w
+        accepted = None
+        for c in kids[slot]:
+            tok = int(nodes[c])
+            u = float(jax.random.uniform(jax.random.fold_in(key, decision)))
+            decision += 1
+            if u * q_w[tok] < r[tok]:  # u < r/q without the divide
+                accepted = c
+                break
+            residual = np.maximum(r - q_w, 0.0)
+            res_sum = float(residual.sum())
+            r = residual / res_sum if res_sum > 1e-9 else r
+        if accepted is not None:
+            committed.append(int(nodes[accepted]))
+            path.append(accepted)
+            slot = 1 + accepted
+            continue
+        next_tok = int(
+            jax.random.categorical(
+                jax.random.fold_in(key, decision),
+                jnp.log(jnp.asarray(r) + 1e-20),
+            )
+        )
+        committed.append(next_tok)
+        return committed, path, len(path)
+
+
+def speculative_tree_accept_greedy_host(
+    nodes, parents, p_logits: np.ndarray
+) -> Tuple[list, list, int]:
+    """Greedy (temperature-0) tree verify: descend to the first child that
+    matches the target argmax at each position, emit the argmax correction
+    when no child does.  Every committed token IS the target argmax at its
+    position, so greedy tree and greedy chain emit the identical sequence —
+    the tree only changes how many tokens commit per round."""
+    kids = tree_children(parents)
+    committed: list = []
+    path: list = []
+    slot = 0
+    while True:
+        top = int(np.argmax(p_logits[slot]))
+        match = next((c for c in kids[slot] if int(nodes[c]) == top), None)
+        if match is None:
+            committed.append(top)
+            return committed, path, len(path)
+        committed.append(top)
+        path.append(match)
+        slot = 1 + match
 
 
 def sd_generate(

@@ -77,8 +77,13 @@ __all__ = ["paged_decode_attention_pallas"]
 
 def _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref, *,
                  n_pages: int, page_size: int, window: int, group: int,
-                 scale: float):
-    """One online-softmax step over one (already dequantized, f32) page."""
+                 scale: float, tm=None):
+    """One online-softmax step over one (already dequantized, f32) page.
+
+    ``tm`` (optional, (W, W) f32 for this batch row) replaces the causal
+    window mask with an arbitrary intra-window visibility relation — the
+    speculation-tree ancestor mask.  ``tm=None`` keeps the historical
+    causal path bit-exact."""
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -98,7 +103,31 @@ def _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref, *,
     # slot is masked) and reduces to `pos < length` when W == 1.
     pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
     w = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0) // group
-    scores = jnp.where(pos <= len_ref[b] - window + w, scores, -1e30)
+    if tm is None:
+        scores = jnp.where(pos <= len_ref[b] - window + w, scores, -1e30)
+    else:
+        # Tree mask, gather-free (TPU wants matmuls, not dynamic indexing):
+        # expand tm to query rows with a row-onehot (W*G, W), then project
+        # onto this page's kv slots with a col-onehot (W, page_size) built
+        # from each slot's window-relative index.  Committed-prefix slots
+        # (pos < length - W) stay visible to every query.
+        r_iota = jax.lax.broadcasted_iota(jnp.int32, (window * group, window), 0)
+        j_iota = jax.lax.broadcasted_iota(jnp.int32, (window * group, window), 1)
+        row_onehot = (r_iota // group == j_iota).astype(jnp.float32)
+        mask_rows = jax.lax.dot_general(
+            row_onehot, tm, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (W*G, W)
+        slot_iota = jax.lax.broadcasted_iota(jnp.int32, (window, page_size), 0)
+        col_iota = jax.lax.broadcasted_iota(jnp.int32, (window, page_size), 1)
+        rel = p * page_size + col_iota - (len_ref[b] - window)
+        col_onehot = (rel == slot_iota).astype(jnp.float32)
+        win_vis = jax.lax.dot_general(
+            mask_rows, col_onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (W*G, page_size)
+        visible = (pos < len_ref[b] - window) | (win_vis > 0.5)
+        scores = jnp.where(visible, scores, -1e30)
 
     m_prev = m_ref[...]  # (W*G, 1)
     m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
@@ -135,6 +164,22 @@ def _kernel_quant(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
     _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref, **kw)
 
 
+def _kernel_tree(pt_ref, len_ref, q_ref, k_ref, v_ref, tm_ref, o_ref,
+                 m_ref, l_ref, acc_ref, **kw):
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref,
+                 tm=tm_ref[0], **kw)
+
+
+def _kernel_quant_tree(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                       tm_ref, o_ref, m_ref, l_ref, acc_ref, **kw):
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0, :, 0, :]
+    _attend_page(k, v, len_ref, q_ref, o_ref, m_ref, l_ref, acc_ref,
+                 tm=tm_ref[0], **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention_pallas(
     q: jnp.ndarray,  # (B, KVS, G, hd) or (B, W, KVS, G, hd)
@@ -145,6 +190,7 @@ def paged_decode_attention_pallas(
     interpret: Optional[bool] = None,
     k_scale: Optional[jnp.ndarray] = None,  # (P, page_size, KVS, 1) f32
     v_scale: Optional[jnp.ndarray] = None,
+    tree_mask: Optional[jnp.ndarray] = None,  # (B, W, W) window visibility
 ) -> jnp.ndarray:
     """Attention through the page table (no dense cache copy), f32 out.
 
@@ -154,7 +200,12 @@ def paged_decode_attention_pallas(
 
     With ``k_scale``/``v_scale`` (both or neither) the pools are int8 and
     each page is dequantized inside the kernel (``value * scale`` per slot
-    per kv-head) — the compressed-at-rest path."""
+    per kv-head) — the compressed-at-rest path.
+
+    ``tree_mask`` (5-D q only) replaces the intra-window causal mask with a
+    per-row (W, W) visibility relation — query slot w sees window slot j iff
+    ``tree_mask[b, w, j]`` — turning the verify window into a speculation
+    tree; every query still sees the committed prefix."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     windowed = q.ndim == 5
@@ -186,6 +237,20 @@ def paged_decode_attention_pallas(
     if quantized:
         in_specs += [page_spec(1), page_spec(1)]
         inputs += [k_scale, v_scale]
+    treed = tree_mask is not None
+    if treed:
+        assert windowed, "tree_mask requires a 5-D window q"
+        assert tree_mask.shape == (b, w, w), (tree_mask.shape, (b, w, w))
+        in_specs += [
+            pl.BlockSpec((1, w, w), lambda i, j, p, pt, ln: (i, 0, 0))
+        ]
+        inputs += [tree_mask.astype(jnp.float32)]
+    kernels = {
+        (False, False): _kernel,
+        (True, False): _kernel_quant,
+        (False, True): _kernel_tree,
+        (True, True): _kernel_quant_tree,
+    }
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # page_table, lengths
         grid=grid,
@@ -201,7 +266,7 @@ def paged_decode_attention_pallas(
     )
     out = pl.pallas_call(
         functools.partial(
-            _kernel_quant if quantized else _kernel,
+            kernels[(quantized, treed)],
             n_pages=n_pages, page_size=page_size,
             window=w, group=g, scale=scale,
         ),

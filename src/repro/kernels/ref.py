@@ -63,6 +63,7 @@ def paged_attn_ref(
     lengths: jnp.ndarray,  # (B,) int32 valid tokens (incl. the window when 5-D)
     k_scale: jnp.ndarray = None,  # (P, page_size, KVS, 1) f32 (int8 pools)
     v_scale: jnp.ndarray = None,
+    tree_mask: jnp.ndarray = None,  # (B, W, W) visibility among window slots
 ) -> jnp.ndarray:
     """Oracle for kernels.paged_attn.paged_decode_attention_pallas: gather
     the pages into a dense cache, then masked softmax attention per row.
@@ -70,7 +71,14 @@ def paged_attn_ref(
     reference semantics of the kernel's in-page dequant epilogue.
 
     A 5-D q is a W-token causally-masked window whose last query sits at
-    absolute position ``lengths - 1`` (the speculative verify span)."""
+    absolute position ``lengths - 1`` (the speculative verify span).
+
+    ``tree_mask`` generalizes the causal window to a speculation TREE: the
+    window occupies absolute kv slots ``lengths - W .. lengths - 1`` and
+    query slot w sees kv window slot j iff ``tree_mask[b, w, j]`` (the
+    ancestor relation), while every query still sees the whole committed
+    prefix (positions < lengths - W).  ``tree_mask=None`` is the bit-exact
+    causal-window path above (chain speculation)."""
     windowed = q.ndim == 5
     if not windowed:
         q = q[:, None]  # (B, 1, KVS, G, hd); lengths = prefix == window end
@@ -86,9 +94,18 @@ def paged_attn_ref(
         "bwkgh,bskh->bwkgs", q.astype(jnp.float32) * scale, k,
         preferred_element_type=jnp.float32,
     )
-    # query w attends kv positions <= lengths - W + w
-    horizon = lengths[:, None] - w + jnp.arange(w)[None, :]  # (B, W)
-    valid = jnp.arange(s)[None, None] <= horizon[..., None]  # (B, W, S)
+    if tree_mask is None:
+        # query w attends kv positions <= lengths - W + w
+        horizon = lengths[:, None] - w + jnp.arange(w)[None, :]  # (B, W)
+        valid = jnp.arange(s)[None, None] <= horizon[..., None]  # (B, W, S)
+    else:
+        # window slot of each kv position (clipped; gated by in_window)
+        rel = jnp.arange(s)[None, :] - (lengths[:, None] - w)  # (B, S)
+        in_window = (rel >= 0) & (rel < w)
+        idx = jnp.broadcast_to(jnp.clip(rel, 0, w - 1)[:, None, :], (b, w, s))
+        win_vis = jnp.take_along_axis(tree_mask.astype(bool), idx, axis=2)
+        prefix = jnp.arange(s)[None, None, :] < (lengths[:, None, None] - w)
+        valid = prefix | (in_window[:, None, :] & win_vis)  # (B, W, S)
     scores = jnp.where(valid[:, :, None, None], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bwkgs,bskh->bwkgh", p, v, preferred_element_type=jnp.float32)

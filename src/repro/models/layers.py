@@ -167,6 +167,9 @@ class PagedCache:
     impl: str = "gather"  # "gather" | "pallas"
     k_scale: Optional[jnp.ndarray] = None  # (P(+scratch), page_size, kvh, 1)
     v_scale: Optional[jnp.ndarray] = None
+    # (B, S, S) intra-window visibility (speculation-tree ancestor mask);
+    # None keeps the causal window semantics bit-exact (chain mode)
+    tree_mask: Optional[jnp.ndarray] = None
 
 
 def forward_cache_ctx(cache, b: int, s: int, paged_impl: str):
@@ -176,9 +179,10 @@ def forward_cache_ctx(cache, b: int, s: int, paged_impl: str):
     A cache carrying ``page_table`` is the device-resident paged pool
     (``{"lengths" (B,), "page_table" (B, mp), "attn": {"k": (L, P, ps,
     kvh, hd), ...}}``): offset is the per-row length vector and paged_ctx
-    the ``(page_table, impl)`` pair the per-layer attention needs.  A
-    dense cache (or None) yields the scalar offset and
-    ``paged_ctx = None``.
+    the ``(page_table, impl, tree_mask)`` triple the per-layer attention
+    needs (``tree_mask``/``win_pos`` cache keys are the speculation-tree
+    extras — see ``PagedCache``).  A dense cache (or None) yields the
+    scalar offset and ``paged_ctx = None``.
 
     Role-mask semantics (fused cross-request PAR dispatches): an optional
     ``"role_mask"`` (B,) bool entry selects which rows PARTICIPATE in this
@@ -201,10 +205,17 @@ def forward_cache_ctx(cache, b: int, s: int, paged_impl: str):
             scratch = cache["attn"]["k"].shape[1] - 1
             offset = jnp.where(mask, offset, 0)
             table = jnp.where(mask[:, None], table, scratch)
-        positions = jnp.broadcast_to(
-            offset[:, None] + jnp.arange(s)[None, :], (b, s)
-        )
-        return offset, positions, (table, paged_impl)
+        win_pos = cache.get("win_pos")  # (B, S) tree depths, optional
+        if win_pos is None:
+            positions = jnp.broadcast_to(
+                offset[:, None] + jnp.arange(s)[None, :], (b, s)
+            )
+        else:
+            # speculation tree: slot order in the window is BFS (stable pool
+            # slots), but RoPE positions follow tree DEPTH — node i sits at
+            # absolute position offset + depth(i)
+            positions = offset[:, None] + win_pos
+        return offset, positions, (table, paged_impl, cache.get("tree_mask"))
     offset = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
     positions = jnp.broadcast_to(offset + jnp.arange(s)[None, :], (b, s))
     return offset, positions, None
@@ -271,7 +282,7 @@ def paged_attention_update(
         q5 = q.reshape(b, s, kvh, g, hd)  # H is (kv-head, group)-major
         out = paged_decode_attention_pallas(
             q5, new_k, new_v, pc.page_table, new_len,
-            k_scale=new_ks, v_scale=new_vs,
+            k_scale=new_ks, v_scale=new_vs, tree_mask=pc.tree_mask,
         )
         return out.reshape(b, s, h, hd).astype(q.dtype), new_pools
     if pc.impl != "gather":
@@ -290,11 +301,48 @@ def paged_attention_update(
         vsd = new_vs[pc.page_table.reshape(-1)].reshape(b, mp * ps, kvh, 1)
         kd = (kd.astype(jnp.float32) * ksd).astype(q.dtype)
         vd = (vd.astype(jnp.float32) * vsd).astype(q.dtype)
-    if s == 1:
+    if pc.tree_mask is not None:
+        out = _tree_window_attention(q, kd, vd, new_len, pc.tree_mask)
+    elif s == 1:
         out = _decode_attention(q, kd, vd, new_len)
     else:
         out = flash_attention(q, kd, vd, causal=True, q_offset=pc.length)
     return out, new_pools
+
+
+def _tree_window_attention(
+    q: jnp.ndarray,  # (B, W, H, hd) — the full speculation-tree window
+    kd: jnp.ndarray,  # (B, T, kvh, hd) dense gathered (dequantized) K
+    vd: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,) valid tokens INCLUDING the window
+    tree_mask: jnp.ndarray,  # (B, W, W) intra-window visibility
+) -> jnp.ndarray:
+    """Gather-path tree attention: window query w sees the committed prefix
+    (positions < lengths - W) plus window slot j iff ``tree_mask[b, w, j]``.
+    Same masked-softmax math as the causal gather path, generalized mask —
+    the dense mirror of the Pallas kernel's tree branch."""
+    b, w, h, hd = q.shape
+    t, kvh = kd.shape[1], kd.shape[2]
+    g = h // kvh
+    q5 = q.reshape(b, w, kvh, g, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum(
+        "bwkgh,btkh->bwkgt", q5 * scale, kd.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    rel = jnp.arange(t)[None, :] - (lengths[:, None] - w)  # (B, T)
+    in_window = (rel >= 0) & (rel < w)
+    idx = jnp.broadcast_to(jnp.clip(rel, 0, w - 1)[:, None, :], (b, w, t))
+    win_vis = jnp.take_along_axis(tree_mask.astype(bool), idx, axis=2)
+    prefix = jnp.arange(t)[None, None, :] < (lengths[:, None, None] - w)
+    valid = prefix | (in_window[:, None, :] & win_vis)  # (B, W, T)
+    scores = jnp.where(valid[:, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bwkgt,btkh->bwkgh", p, vd.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, w, h, hd).astype(q.dtype)
 
 
 def _kv_quantize(k: jnp.ndarray):

@@ -276,22 +276,23 @@ def _dense_block(
     length: Optional[jnp.ndarray],
     positions: jnp.ndarray,
     is_moe: bool,
-    paged: Optional[Tuple] = None,  # (page_table, impl) device pool
+    paged: Optional[Tuple] = None,  # (page_table, impl, tree_mask) pool ctx
 ):
     """Pre-norm attn + FFN. kv = (k_slice, v_slice) cache buffers or None.
 
-    With `paged` (a ``(page_table, impl)`` pair), kv holds one layer's
-    slice of the device-resident paged pool and `length` is the per-row
-    (B,) length vector; attention scatters and attends through the page
-    table instead of the dense buffers."""
+    With `paged` (a ``(page_table, impl, tree_mask)`` triple), kv holds one
+    layer's slice of the device-resident paged pool and `length` is the
+    per-row (B,) length vector; attention scatters and attends through the
+    page table instead of the dense buffers."""
     tp = _tp_of(mesh)
     cache = None
     if paged is not None:
-        page_table, impl = paged
+        page_table, impl, tree_mask = paged
         cache = L.PagedCache(k=kv[0], v=kv[1], page_table=page_table,
                              length=length, impl=impl,
                              k_scale=kv[2] if len(kv) > 2 else None,
-                             v_scale=kv[3] if len(kv) > 2 else None)
+                             v_scale=kv[3] if len(kv) > 2 else None,
+                             tree_mask=tree_mask)
     elif kv is not None:
         cache = L.Cache(k=kv[0], v=kv[1], length=length,
                         k_scale=kv[2] if len(kv) > 2 else None,

@@ -250,12 +250,50 @@ class EngineConfig:
     # requests of dense pools at the SAME budget.  Mutually exclusive with
     # num_pages.
     pool_bytes: Optional[int] = None
+    # Speculation topology:
+    #   "chain" — single-branch drafting (one candidate continuation per
+    #             round; the historical APSD behaviour, bit-identical);
+    #   "tree"  — TREE drafting: a frontier node fans out to
+    #             ``spec_branches`` top-k candidate children whenever its
+    #             draft top-1 probability falls below ``branch_threshold``
+    #             (and the ``tree_budget`` node budget allows), and the
+    #             target verifies the WHOLE tree in one ancestor-masked
+    #             dispatch.  Accepted tokens stay distribution-exact
+    #             (lossless tree rejection sampling,
+    #             core/speculative.speculative_tree_sample_host); expected
+    #             accepted tokens/round rises precisely on low-acceptance
+    #             requests.
+    spec_mode: str = "chain"
+    spec_branches: int = 2  # fan-out at a branching position (tree mode)
+    tree_budget: int = 8  # max drafted nodes per tree round (tree mode)
+    # branch when the draft's top-1 probability < branch_threshold: 0.0
+    # never branches (a chain-shaped tree), 1.0 branches at every frontier
+    # position the node budget allows
+    branch_threshold: float = 0.6
 
     def __post_init__(self):
         if self.par_mode not in ("off", "wdos"):
             raise ValueError(
                 f"par_mode must be 'off' or 'wdos', got {self.par_mode!r}"
             )
+        if self.spec_mode not in ("chain", "tree"):
+            raise ValueError(
+                f"spec_mode must be 'chain' or 'tree', got {self.spec_mode!r}"
+            )
+        if self.spec_mode == "tree":
+            if self.spec_branches < 2:
+                raise ValueError(
+                    f"spec_branches must be >= 2, got {self.spec_branches}"
+                )
+            if self.tree_budget < 1:
+                raise ValueError(
+                    f"tree_budget must be >= 1, got {self.tree_budget}"
+                )
+            if not (0.0 <= self.branch_threshold <= 1.0):
+                raise ValueError(
+                    f"branch_threshold must be in [0, 1], got "
+                    f"{self.branch_threshold}"
+                )
         if self.kv_quant not in ("none", "int8", "mixed"):
             raise ValueError(
                 f"kv_quant must be 'none', 'int8' or 'mixed', got "
@@ -270,6 +308,14 @@ class EngineConfig:
     @property
     def max_dl(self) -> int:
         return self.long_dl if self.adaptive else self.draft_len
+
+    @property
+    def spec_window(self) -> int:
+        """Worst-case speculative tokens resident in a request's cache at
+        once — what admission must reserve beyond prompt + max_tokens.  A
+        chain round writes at most ``max_dl`` uncommitted drafts; a tree
+        round writes the whole padded window (``tree_budget`` nodes)."""
+        return self.tree_budget if self.spec_mode == "tree" else self.max_dl
 
     @property
     def kv_kinds(self) -> Tuple[str, ...]:

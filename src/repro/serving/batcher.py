@@ -220,7 +220,13 @@ class ContinuousBatcher:
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue[0]
-            peak = req.peak_cache_len(self.cfg.max_dl)
+            # spec_window == max_dl for chain speculation; tree speculation
+            # reserves tree_budget + 1 window positions instead (the fan-out
+            # tree's sibling branches all land in the reserved tail, so a
+            # mid-round abort frees them with the ordinary release path)
+            peak = req.peak_cache_len(
+                getattr(self.cfg, "spec_window", self.cfg.max_dl)
+            )
             match = (
                 self.prefix_cache.match(req.prompt, req.kv_kind)
                 if self.prefix_cache is not None
@@ -340,7 +346,8 @@ class ContinuousBatcher:
     # -- fused PAR slot telemetry (par_mode="wdos") --------------------------
 
     def record_fused_slot(
-        self, plan: MixedSlotPlan, wall_s: float, verify_width: int
+        self, plan: MixedSlotPlan, wall_s: float, verify_width: int,
+        draft_width: int = 1,
     ) -> None:
         """Account one executed fused slot: measured wall time by slot kind
         plus the discrete-event pricing of exactly this plan (so the model
@@ -365,6 +372,7 @@ class ContinuousBatcher:
         sch.mixed_slot_instrs(
             b, plan, self.t_layers, self.d_layers,
             self.t_costs, self.d_costs, verify_width,
+            draft_width=draft_width,
         )
         if not b.instrs:
             return

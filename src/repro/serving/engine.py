@@ -79,6 +79,11 @@ from repro.core.speculative import (
     sample_token_host,
     speculative_accept_greedy_host,
     speculative_sample_host,
+    speculative_tree_accept_greedy_host,
+    speculative_tree_sample_host,
+    topk_tokens_host,
+    tree_ancestor_mask,
+    tree_depths,
 )
 from repro.models import layers as L
 from repro.models import lm
@@ -309,6 +314,31 @@ def _make_paged_step(model: ServingModel):
     return step
 
 
+def _make_tree_step(model: ServingModel):
+    """jit of one batched TREE-window forward (spec_mode="tree"): the window
+    holds a draft tree in BFS order, ``win_pos`` gives each slot its RoPE
+    depth offset, and ``tree_mask`` (B, W, W) restricts window-internal
+    attention to each slot's own root-path (models/layers.forward_cache_ctx
+    threads both through the paged attention consumers; the Pallas kernel
+    applies the mask in place, the gather fallback through
+    ``_tree_window_attention``).  Same donation/store contract as
+    ``_make_paged_step``."""
+
+    @partial(jax.jit, donate_argnums=(2,))
+    def step(params, tokens, store, page_table, lengths, win_pos, tree_mask):
+        cache = {
+            "lengths": lengths,
+            "page_table": page_table,
+            "win_pos": win_pos,
+            "tree_mask": tree_mask,
+            "attn": dict(store),
+        }
+        logits, nc = model._apply(params, tokens, cache)
+        return logits, {name: nc["attn"][name] for name in store}
+
+    return step
+
+
 def _make_fused_step(target: ServingModel, draft: ServingModel):
     """jit of ONE fused PAR dispatch: the target model's verify pass (width
     ``max_dl + 1``, rows selected by `v_mask`) and the draft model's
@@ -359,6 +389,66 @@ def _make_masked_draft_step(draft: ServingModel):
             "lengths": lengths,
             "page_table": page_table,
             "role_mask": mask,
+            "attn": dict(store),
+        }
+        logits, nc = draft._apply(params, tokens, cache)
+        return logits, {name: nc["attn"][name] for name in store}
+
+    return step
+
+
+def _make_fused_tree_step(target: ServingModel, draft: ServingModel):
+    """jit of ONE fused tree-PAR dispatch: both sides run the FULL
+    fixed-width tree window (``tree_budget + 1``) — the target verifies
+    complete trees on rows selected by `v_mask` while the draft side
+    re-feeds every active row's partial tree (for verifying rows that is
+    the straggler dispatch landing the leaf KV).  Tree masks and depth
+    positions ride per side; widths are fixed so the program compiles
+    once."""
+
+    @partial(jax.jit, donate_argnums=(4, 5))
+    def step(t_params, d_params, v_tokens, d_tokens,
+             t_store, d_store,
+             t_table, t_len, d_table, d_len, v_mask, d_mask,
+             t_win_pos, t_tree_mask, d_win_pos, d_tree_mask):
+        t_cache = {
+            "lengths": t_len,
+            "page_table": t_table,
+            "role_mask": v_mask,
+            "win_pos": t_win_pos,
+            "tree_mask": t_tree_mask,
+            "attn": dict(t_store),
+        }
+        v_logits, t_nc = target._apply(t_params, v_tokens, t_cache)
+        d_cache = {
+            "lengths": d_len,
+            "page_table": d_table,
+            "role_mask": d_mask,
+            "win_pos": d_win_pos,
+            "tree_mask": d_tree_mask,
+            "attn": dict(d_store),
+        }
+        d_logits, d_nc = draft._apply(d_params, d_tokens, d_cache)
+        return (v_logits, d_logits,
+                {name: t_nc["attn"][name] for name in t_store},
+                {name: d_nc["attn"][name] for name in d_store})
+
+    return step
+
+
+def _make_masked_tree_draft_step(draft: ServingModel):
+    """jit of a draft-only tree-PAR slot (no row is tree-full): one
+    full-width tree re-feed with the per-row role mask."""
+
+    @partial(jax.jit, donate_argnums=(2,))
+    def step(params, tokens, store, page_table, lengths, mask,
+             win_pos, tree_mask):
+        cache = {
+            "lengths": lengths,
+            "page_table": page_table,
+            "role_mask": mask,
+            "win_pos": win_pos,
+            "tree_mask": tree_mask,
             "attn": dict(store),
         }
         logits, nc = draft._apply(params, tokens, cache)
@@ -421,6 +511,102 @@ def _copy_page(store, src, dst):
     partially-shared prefix page before its holder's first scatter.
     `src`/`dst` are traced so the one compiled program serves every COW."""
     return {name: a.at[:, dst].set(a[:, src]) for name, a in store.items()}
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _compact_slots(store, src, dst):
+    """Batched flat-slot copy over every array of a device store — the
+    tree-verify COMPACTION step: after acceptance walks a non-leftmost
+    root path, the accepted nodes' KV rows (scattered at their BFS window
+    slots) are copied down to the chain positions the committed sequence
+    expects, so rewind-to-committed leaves the pool bit-identical to a
+    chain round that drafted the same tokens.  `src`/`dst` are fixed-width
+    (padded with the scratch page's flat slots: harmless self-copies), so
+    one compiled program serves every round; the gather reads the donated
+    input before the scatter writes, so overlapping src/dst spans are
+    safe."""
+    out = {}
+    for name, a in store.items():
+        nl, p1, ps = a.shape[0], a.shape[1], a.shape[2]
+        flat = a.reshape(nl, p1 * ps, *a.shape[3:])
+        out[name] = flat.at[:, dst].set(flat[:, src]).reshape(a.shape)
+    return out
+
+
+def _sample_tree_level(req, cfg, logits: np.ndarray) -> None:
+    """Grow one request's draft tree by ONE level from a window logits
+    matrix (W, V) — row 0 is the distribution after the committed tip, row
+    1+i after drafted node i.  Frontier nodes (deepest fully-grown level)
+    each fan out to ``spec_branches`` children when the draft's top-1
+    probability is below ``branch_threshold`` (a low-confidence position —
+    the paper's adaptive parallel-speculation cue) and the per-round node
+    budget still covers the fan-out; otherwise one child.  Greedy requests
+    take the top-k distinct tokens (child 0 is the argmax, so the chain
+    path is always a subtree and greedy tree output is token-identical to
+    greedy chain); sampled requests draw i.i.d. children from the
+    request's draft key stream indexed by ``tree_draws`` (the with-
+    replacement draws the tree rejection rule in core/speculative.py is
+    exact for) and stash the logits row for the accept rule.  Mutates the
+    request's tree phase state in place; when the budget is exhausted
+    before any child lands, stamps ``tree_depth`` to ``tree_dl`` so the
+    tree reads as full."""
+    parents = req.tree_parents
+    depths = tree_depths(parents, len(parents) + 1)
+    d = req.tree_depth
+    if d == 0:
+        frontier = [0]
+    else:
+        frontier = [1 + i for i in range(len(parents)) if depths[1 + i] == d]
+    sp = req.sampling
+    grew = False
+    for slot in frontier:
+        budget = cfg.tree_budget - len(req.tree_nodes)
+        if budget <= 0:
+            break
+        row = logits[slot]
+        # draft top-1 probability (softmax max) — the branch cue
+        conf = 1.0 / float(
+            np.exp(row.astype(np.float64) - float(row.max())).sum()
+        )
+        k = (
+            cfg.spec_branches
+            if conf < cfg.branch_threshold and budget >= cfg.spec_branches
+            else 1
+        )
+        if sp.greedy:
+            toks = topk_tokens_host(row, k)
+        else:
+            toks = [
+                int(sample_token_host(
+                    req.draft_key(req.tree_draws + i), row,
+                    sp.temperature, sp.top_k, sp.top_p,
+                ))
+                for i in range(k)
+            ]
+            req.tree_draws += k
+            req.tree_q[slot] = row.copy()
+        for t in toks:
+            req.tree_parents.append(slot - 1)
+            req.tree_nodes.append(int(t))
+        grew = True
+    req.tree_depth = d + 1 if grew else req.tree_dl
+
+
+def _tree_window_rows(req, width: int):
+    """(tokens, positions, mask) window rows for one request's tree: slot 0
+    re-feeds the committed tip at depth 0, slot 1+i holds drafted node i at
+    its tree depth; the ancestor mask keeps padded slots self-visible so
+    their (overwritten-later) softmax stays finite."""
+    toks = np.zeros((width,), np.int32)
+    toks[0] = req.last_tok
+    n = len(req.tree_nodes)
+    if n:
+        toks[1: 1 + n] = req.tree_nodes
+    return (
+        toks,
+        tree_depths(req.tree_parents, width),
+        tree_ancestor_mask(req.tree_parents, width),
+    )
 
 
 class _TableSet:
@@ -584,6 +770,12 @@ class Engine:
         if cfg.par_mode == "wdos":
             self._fused_step = _make_fused_step(target, draft)
             self._draft_slot_step = _make_masked_draft_step(draft)
+        if cfg.spec_mode == "tree":
+            self._t_tree_step = _make_tree_step(target)
+            self._d_tree_step = _make_tree_step(draft)
+            if cfg.par_mode == "wdos":
+                self._fused_tree_step = _make_fused_tree_step(target, draft)
+                self._draft_tree_slot_step = _make_masked_tree_draft_step(draft)
         self._t_tables = _TableSet(cfg.max_batch, self._t_pool, self.max_model_len)
         self._d_tables = _TableSet(cfg.max_batch, self._d_pool, self.max_model_len)
         self._requests: Dict[int, Request] = {}
@@ -769,12 +961,12 @@ class Engine:
             # did not allocate (e.g. kv_quant="int8" on a "none" engine)
             kv_kind=self.cfg.resolve_kv_quant(sp.kv_quant),
         )
-        peak = req.peak_cache_len(self.cfg.max_dl)
+        peak = req.peak_cache_len(self.cfg.spec_window)
         if peak > self.max_model_len:
             raise ValueError(
                 f"request peak cache length {peak} (prompt {req.prompt.shape[0]} "
-                f"+ max_tokens {sp.max_tokens} + draft window "
-                f"{self.cfg.max_dl}) exceeds max_model_len={self.max_model_len}"
+                f"+ max_tokens {sp.max_tokens} + speculation window "
+                f"{self.cfg.spec_window}) exceeds max_model_len={self.max_model_len}"
             )
         self._next_id += 1
         self._requests[req.rid] = req
@@ -850,23 +1042,25 @@ class Engine:
         return jnp.asarray(m)
 
     def _dispatch(self, step_fn, params, tokens, stores, table, lengths,
-                  kvq_dev):
+                  kvq_dev, *extra):
         """One logical batched forward over every storage kind.
 
         Single-kind engines run one dispatch.  Mixed engines run the step
         once per store and merge logits row-wise by kind: a row's writes
         land only in its OWN pages of each store (the page table confines
         them), and a row only ever READS the store of its kind, so the
-        wrong-kind dispatch leaves unread garbage — never corruption."""
+        wrong-kind dispatch leaves unread garbage — never corruption.
+        ``extra`` forwards step-specific trailing operands (the tree
+        steps' win_pos / tree_mask)."""
         if kvq_dev is None:
             k0 = self._kinds[0]
             logits, stores[k0] = step_fn(params, tokens, stores[k0], table,
-                                         lengths)
+                                         lengths, *extra)
             return logits
         outs = {}
         for k in self._kinds:
             outs[k], stores[k] = step_fn(params, tokens, stores[k], table,
-                                         lengths)
+                                         lengths, *extra)
         return jnp.where(kvq_dev[:, None, None], outs["int8"], outs["none"])
 
     def _prefill_into(self, req: Request, model: ServingModel,
@@ -1015,7 +1209,16 @@ class Engine:
         dispatches (``par_mode="wdos"``).  Returns a ``RequestOutput`` per
         request that progressed, with the incrementally verified tokens.
         The two modes emit bit-identical tokens; "wdos" may commit more
-        than one window per request per round."""
+        than one window per request per round.
+
+        Under ``spec_mode="tree"`` the same two schedulers run the
+        tree-speculation round instead: top-k branch drafting into a
+        fixed-width window, one causally-tree-masked verify dispatch, and
+        the lossless multi-branch accept walk (core/speculative.py)."""
+        if self.cfg.spec_mode == "tree":
+            if self.cfg.par_mode == "wdos":
+                return self._step_fused_tree()
+            return self._step_two_phase_tree()
         if self.cfg.par_mode == "wdos":
             return self._step_fused()
         return self._step_two_phase()
@@ -1143,6 +1346,212 @@ class Engine:
             for seq in (req.t_seq, req.d_seq):
                 seq.advance(round_dl + 1)
                 seq.rewind(round_dl - n_acc, release_pages=False)
+        self._batcher.model_round(work)
+        for slot, req in active:
+            if req.done:
+                self._t_tables.clear_row(slot)
+                self._d_tables.clear_row(slot)
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        f"row{slot}", "finish", cat="lifecycle",
+                        rid=req.rid, reason=req.finish_reason or "length",
+                    )
+                self._batcher.retire(slot)
+        self._batcher.step_count += 1
+        self._m_steps.inc()
+        t_end = self._now()
+        self._m_round_wall.observe(t_end - t_step)
+        self.tracer.rec(
+            "engine", f"step#{self._batcher.step_count}", t_step, t_end,
+            cat="step", par_mode="off", rows=len(active),
+        )
+        self._refresh_gauges()
+
+        return [self._output_for(req, t_end) for req in progressed]
+
+    # -- tree speculation (spec_mode="tree") ---------------------------------
+
+    def _tree_verify_commit(self, slot, req, p_win, mode, dl, moves_t,
+                            moves_d, work) -> int:
+        """Accept/commit one verified tree row: walk the lossless
+        multi-branch accept rule over the window logits (W, V), commit the
+        accepted root path (+ the residual/bonus token), queue the KV
+        compaction moves that relocate the path's BFS slots to the chain
+        positions the committed sequence expects, and advance/rewind both
+        sequences back to committed-1.  Returns the accepted count."""
+        w = self.cfg.tree_budget + 1
+        sp = req.sampling
+        nodes, parents = req.tree_nodes, req.tree_parents
+        if sp.greedy:
+            new, path, n_acc = speculative_tree_accept_greedy_host(
+                nodes, parents, p_win
+            )
+        else:
+            q_win = np.zeros((w, p_win.shape[-1]), np.float32)
+            for qslot, row in req.tree_q.items():
+                q_win[qslot] = row
+            new, path, n_acc = speculative_tree_sample_host(
+                req.accept_key(), nodes, parents, p_win, q_win,
+                sp.temperature, sp.top_k, sp.top_p,
+            )
+        drafted_n = len(nodes)
+        req.commit(new)
+        req.record_round(mode, dl, n_acc, len(new))
+        req.rounds += 1
+        req.drafted += drafted_n
+        req.accepted += n_acc
+        req.controller.observe(n_acc, dl)
+        self._m_drafted.inc(drafted_n)
+        self._m_accepted.inc(n_acc)
+        self._m_round_accept.observe(n_acc / dl if dl else 0.0)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                f"row{slot}", "commit", cat="commit",
+                rid=req.rid, drafted=drafted_n, accepted=n_acc,
+            )
+        work.append((req, dl))
+        # the accepted path sits at BFS window slots base+1+path[i]; the
+        # committed sequence needs its KV at the chain slots base+1+i.  A
+        # leftmost path (always, at fan-out 1) is already in place.  RoPE
+        # agrees by construction: path[i] is a depth-(i+1) node, encoded at
+        # position base+1+i — exactly its destination slot.
+        if path != list(range(n_acc)):
+            for seq, mv in (
+                (req.t_seq, moves_t[req.kv_kind]),
+                (req.d_seq, moves_d[req.kv_kind]),
+            ):
+                base = seq.length
+                src = seq.flat_slots(base + 1 + np.asarray(path, np.int64))
+                dst = seq.flat_slots(
+                    base + 1 + np.arange(n_acc, dtype=np.int64)
+                )
+                mv[0].extend(int(x) for x in src)
+                mv[1].extend(int(x) for x in dst)
+        # both models wrote the full W-wide window; keep n_acc + 1
+        # (draft invariant: cache == committed[:-1], incl. straggler)
+        for seq in (req.t_seq, req.d_seq):
+            seq.advance(w)
+            seq.rewind(w - 1 - n_acc, release_pages=False)
+        req.clear_tree()
+        return n_acc
+
+    def _compact_pools(self, moves_t, moves_d) -> None:
+        """Flush queued tree-compaction moves: one fixed-width
+        ``_compact_slots`` dispatch per (pool, kind) that has any, padded
+        with scratch-page self-copies so each compiles once."""
+        cap = self.cfg.max_batch * self.cfg.tree_budget
+        for moves, stores, pool in (
+            (moves_t, self._t_store, self._t_pool),
+            (moves_d, self._d_store, self._d_pool),
+        ):
+            scratch = pool.num_pages * pool.page_size  # the extra page's 1st slot
+            for k, (src, dst) in moves.items():
+                if not src:
+                    continue
+                s = np.full((cap,), scratch, np.int64)
+                d = np.full((cap,), scratch, np.int64)
+                s[: len(src)] = src
+                d[: len(dst)] = dst
+                stores[k] = _compact_slots(
+                    stores[k], jnp.asarray(s), jnp.asarray(d)
+                )
+
+    def _step_two_phase_tree(self) -> List[RequestOutput]:
+        """Tree-speculation round, two-phase schedule: grow every active
+        request's draft tree one LEVEL per draft dispatch — the whole
+        fixed-width window re-feeds at the SAME base length each time, so
+        each level's frontier attends its ancestors through the tree mask
+        and pad slots hold not-yet-read garbage — then verify every
+        complete tree in ONE tree-masked target dispatch and walk the
+        multi-branch accept rule per row.  Dispatch count matches a chain
+        round of the same depth (round_depth + 1 draft + 1 verify)."""
+        cfg = self.cfg
+        t_step = self._now()
+        self._admit()
+        active = self._batcher.active()
+        if not active:
+            self._batcher.step_count += 1
+            self._m_steps.inc()
+            self._refresh_gauges()
+            return []
+
+        w = cfg.tree_budget + 1
+        b = cfg.max_batch
+        # the controller's draft length is the tree DEPTH target; the node
+        # budget (tree_budget) caps how much width the fan-out rule may
+        # spend along the way
+        dls = {
+            slot: min(req.controller.draft_len(), cfg.tree_budget)
+            for slot, req in active
+        }
+        modes = {slot: req.controller.mode for slot, req in active}
+        round_depth = max(dls.values())
+        kvq_dev = self._kvq_mask(active)
+
+        t0 = self._now()
+        d_table, d_len0 = self._d_tables.load((s, r.d_seq) for s, r in active)
+        t_table, t_len0 = self._t_tables.load((s, r.t_seq) for s, r in active)
+        t_draft0 = self._now()
+        self._m_table_upload.inc(t_draft0 - t0)
+
+        for slot, req in active:
+            req.begin_tree(dls[slot])
+
+        diag = np.arange(w)
+
+        def window_inputs():
+            tok = np.zeros((b, w), np.int32)
+            pos = np.zeros((b, w), np.int32)
+            tm = np.zeros((b, w, w), np.float32)
+            tm[:, diag, diag] = 1.0  # inactive rows: self-only, finite softmax
+            for slot, req in active:
+                tok[slot], pos[slot], tm[slot] = _tree_window_rows(req, w)
+            return jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(tm)
+
+        # ---- draft phase: round_depth level-growing dispatches + 1
+        # straggler feeding the complete tree (lands the leaf KV for
+        # fully-accepted paths; rewind drops the rest)
+        for j in range(round_depth + 1):
+            tok_dev, pos_dev, tm_dev = window_inputs()
+            logits = self._dispatch(
+                self._d_tree_step, self.draft.params, tok_dev,
+                self._d_store, d_table, d_len0, kvq_dev, pos_dev, tm_dev,
+            )
+            if j < round_depth:
+                l_np = np.asarray(logits)
+                for slot, req in active:
+                    if not req.tree_full:
+                        _sample_tree_level(req, cfg, l_np[slot])
+        t_verify0 = self._now()
+        self.tracer.rec(
+            "engine", "draft_phase", t_draft0, t_verify0,
+            cat="phase", rows=len(active), dl=round_depth,
+        )
+
+        # ---- verify phase: one tree-masked batched pass over full trees
+        tok_dev, pos_dev, tm_dev = window_inputs()
+        v_logits = self._dispatch(
+            self._t_tree_step, self.target.params, tok_dev,
+            self._t_store, t_table, t_len0, kvq_dev, pos_dev, tm_dev,
+        )
+        p_logits = np.asarray(v_logits)  # (B, W, V)
+        self.tracer.rec(
+            "engine", "verify_phase", t_verify0, self._now(),
+            cat="phase", rows=len(active),
+        )
+
+        # ---- per-request accept / commit / compaction
+        work: List[Tuple[Request, int]] = []
+        progressed: List[Request] = []
+        moves_t = {k: ([], []) for k in self._kinds}
+        moves_d = {k: ([], []) for k in self._kinds}
+        for slot, req in active:
+            self._tree_verify_commit(
+                slot, req, p_logits[slot], modes[slot], dls[slot],
+                moves_t, moves_d, work,
+            )
+            progressed.append(req)
+        self._compact_pools(moves_t, moves_d)
         self._batcher.model_round(work)
         for slot, req in active:
             if req.done:
@@ -1426,6 +1835,194 @@ class Engine:
                             reason=req.finish_reason or "length",
                         )
                     self._batcher.retire(slot)
+
+        self._batcher.model_round(work)
+        self._batcher.step_count += 1
+        self._m_steps.inc()
+        t_end = self._now()
+        self._m_round_wall.observe(t_end - t_step)
+        self.tracer.rec(
+            "engine", f"step#{self._batcher.step_count}", t_step, t_end,
+            cat="step", par_mode="wdos", rows=len(touched),
+        )
+        self._refresh_gauges()
+
+        return [self._output_for(req, t_end) for req in touched.values()]
+
+    def _step_fused_tree(self) -> List[RequestOutput]:
+        """One tree-speculation round as a horizon of fused dispatches
+        (spec_mode="tree", par_mode="wdos"): every slot the WDOS planner
+        sends tree-full rows to VERIFY — the tree-masked target window
+        fused with the draft side's straggler re-feed of the same complete
+        tree — while everyone else grows its tree one level from the same
+        fused program's draft logits.  Phase state (the partial tree)
+        carries across engine steps exactly like the chain window, and
+        ``rounds`` increments only at commit, so a request's trees and
+        tokens are identical to the two-phase tree scheduler's."""
+        cfg = self.cfg
+        t_step = self._now()
+        self._admit()
+        if not self._batcher.active():
+            self._batcher.step_count += 1
+            self._m_steps.inc()
+            self._refresh_gauges()
+            return []
+        w = cfg.tree_budget + 1  # fixed window width, BOTH sides
+        horizon = min(cfg.max_dl, cfg.tree_budget) + 2
+        b = cfg.max_batch
+        diag = np.arange(w)
+        touched: Dict[int, Request] = {
+            req.rid: req for _, req in self._batcher.active()
+        }
+        kvq_dev = self._kvq_mask(self._batcher.active())
+        work: List[Tuple[Request, int]] = []
+
+        t0 = self._now()
+        d_table = self._d_tables.table_dev()
+        t_table = self._t_tables.table_dev()
+        self._m_table_upload.inc(self._now() - t0)
+
+        for _ in range(horizon):
+            active = self._batcher.active()
+            if not active:
+                break
+            by_slot = dict(active)
+            for _, req in active:
+                if req.tree_dl is None:
+                    req.begin_tree(
+                        min(req.controller.draft_len(), cfg.tree_budget)
+                    )
+            plan = sch.plan_mixed_slot([
+                sch.RowPhase(slot=s, window=r.tree_dl, drafted=r.tree_depth)
+                for s, r in active
+            ])
+
+            # every active row re-feeds its current tree on the draft side
+            # at its BASE length (verify rows feed the complete tree — the
+            # straggler landing the leaf KV inside the verify slot)
+            d_tok = np.zeros((b, w), np.int32)
+            d_pos = np.zeros((b, w), np.int32)
+            d_tm = np.zeros((b, w, w), np.float32)
+            d_tm[:, diag, diag] = 1.0
+            d_len = np.zeros((b,), np.int32)
+            d_mask = np.zeros((b,), bool)
+            for slot, req in active:
+                d_tok[slot], d_pos[slot], d_tm[slot] = _tree_window_rows(req, w)
+                d_len[slot] = req.d_seq.length
+                d_mask[slot] = True
+
+            slot_t0 = self._now()
+            if plan.verify_rows:
+                v_tok = np.zeros((b, w), np.int32)
+                t_pos = np.zeros((b, w), np.int32)
+                t_tm = np.zeros((b, w, w), np.float32)
+                t_tm[:, diag, diag] = 1.0
+                t_len = np.zeros((b,), np.int32)
+                v_mask = np.zeros((b,), bool)
+                for slot in plan.verify_rows:
+                    req = by_slot[slot]
+                    v_tok[slot], t_pos[slot], t_tm[slot] = _tree_window_rows(
+                        req, w
+                    )
+                    t_len[slot] = req.t_seq.length
+                    v_mask[slot] = True
+                heads = (jnp.asarray(v_tok), jnp.asarray(d_tok))
+                tails = (
+                    t_table, jnp.asarray(t_len), d_table, jnp.asarray(d_len),
+                    jnp.asarray(v_mask), jnp.asarray(d_mask),
+                    jnp.asarray(t_pos), jnp.asarray(t_tm),
+                    jnp.asarray(d_pos), jnp.asarray(d_tm),
+                )
+                vs, ds = {}, {}
+                for k in self._kinds:
+                    (vs[k], ds[k], self._t_store[k],
+                     self._d_store[k]) = self._fused_tree_step(
+                        self.target.params, self.draft.params, *heads,
+                        self._t_store[k], self._d_store[k], *tails,
+                    )
+                if kvq_dev is None:
+                    v_logits, d_logits = vs[self._kinds[0]], ds[self._kinds[0]]
+                else:
+                    sel = kvq_dev[:, None, None]
+                    v_logits = jnp.where(sel, vs["int8"], vs["none"])
+                    d_logits = jnp.where(sel, ds["int8"], ds["none"])
+                v_np = np.asarray(v_logits)
+            else:
+                d_tok_dev = jnp.asarray(d_tok)
+                tails = (
+                    d_table, jnp.asarray(d_len), jnp.asarray(d_mask),
+                    jnp.asarray(d_pos), jnp.asarray(d_tm),
+                )
+                ds = {}
+                for k in self._kinds:
+                    ds[k], self._d_store[k] = self._draft_tree_slot_step(
+                        self.draft.params, d_tok_dev, self._d_store[k],
+                        *tails,
+                    )
+                if kvq_dev is None:
+                    d_logits = ds[self._kinds[0]]
+                else:
+                    d_logits = jnp.where(
+                        kvq_dev[:, None, None], ds["int8"], ds["none"]
+                    )
+                v_np = None
+            # tree growth consumes the WHOLE window's logits (one row per
+            # frontier node), not just the last column
+            d_np = np.asarray(d_logits) if plan.draft_rows else None
+            slot_t1 = self._now()
+            self._batcher.record_fused_slot(
+                plan, slot_t1 - slot_t0, w, draft_width=w
+            )
+            if self.tracer.enabled:
+                kind = (
+                    "fused" if plan.fused
+                    else "verify_only" if plan.verify_rows
+                    else "draft_only"
+                )
+                self.tracer.rec(
+                    "engine", "fused_slot", slot_t0, slot_t1, cat="fused",
+                    kind=kind, draft_rows=len(plan.draft_rows),
+                    verify_rows=len(plan.verify_rows),
+                )
+                for slot in plan.draft_rows:
+                    self.tracer.rec(
+                        f"row{slot}", "draft", slot_t0, slot_t1,
+                        cat="draft", rid=by_slot[slot].rid,
+                    )
+                for slot in plan.verify_rows:
+                    self.tracer.rec(
+                        f"row{slot}", "verify", slot_t0, slot_t1,
+                        cat="verify", rid=by_slot[slot].rid,
+                    )
+
+            # draft rows: one more tree level (same fan-out rule and the
+            # same (round, draw-index) key stream as the two-phase path)
+            for slot in plan.draft_rows:
+                _sample_tree_level(by_slot[slot], cfg, d_np[slot])
+
+            # verify rows: accept/commit + queue compaction, retire done
+            moves_t = {k: ([], []) for k in self._kinds}
+            moves_d = {k: ([], []) for k in self._kinds}
+            for slot in plan.verify_rows:
+                req = by_slot[slot]
+                dl = req.tree_dl
+                self._tree_verify_commit(
+                    slot, req, v_np[slot], req.controller.mode, dl,
+                    moves_t, moves_d, work,
+                )
+                if req.done:
+                    self._t_tables.clear_row(slot)
+                    self._d_tables.clear_row(slot)
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            f"row{slot}", "finish", cat="lifecycle",
+                            rid=req.rid,
+                            reason=req.finish_reason or "length",
+                        )
+                    self._batcher.retire(slot)
+            # flush compaction BEFORE the next fused dispatch: a committed
+            # row's next window overlaps its old BFS slots
+            self._compact_pools(moves_t, moves_d)
 
         self._batcher.model_round(work)
         self._batcher.step_count += 1

@@ -460,6 +460,23 @@ class PagedSequence:
         page_idx = pos // self.pool.page_size
         return np.asarray(self.pages, np.int64)[page_idx], pos % self.pool.page_size
 
+    def flat_slots(self, positions) -> np.ndarray:
+        """Flat pool-slot index (page * page_size + in-page slot) of each
+        absolute token position — the device-store row a position occupies
+        once pool arrays are viewed as (n_layers, P * page_size, ...).
+
+        Positions must be backed (< len(pages) * page_size).  This is the
+        public indexing the engine's tree-path compaction uses to copy
+        accepted-branch KV into canonical chain order on device."""
+        assert not self.released, "flat_slots on a released sequence"
+        pos = np.asarray(positions, np.int64)
+        ps = self.pool.page_size
+        assert pos.size == 0 or (
+            pos.min() >= 0 and pos.max() < len(self.pages) * ps
+        ), (positions, len(self.pages))
+        pages = np.asarray(self.pages, np.int64)[pos // ps]
+        return pages * ps + pos % ps
+
     def _ensure_capacity(self, n_tokens: int) -> None:
         need = pages_for(n_tokens, self.pool.page_size)
         while len(self.pages) < need:

@@ -152,10 +152,11 @@ def _paged_attn(q_, k_, v_, kvs_, lengths, pctx):
     attend through the page table, return (att, new pool slices).  Pool
     slices carrying ``k_scale`` are compressed (int8 + per-slot scales) —
     the update quantizes on scatter and dequantizes at the consumer."""
-    table, impl = pctx
+    table, impl, tree_mask = pctx
     pc = L.PagedCache(
         k=kvs_["k"], v=kvs_["v"], page_table=table, length=lengths, impl=impl,
         k_scale=kvs_.get("k_scale"), v_scale=kvs_.get("v_scale"),
+        tree_mask=tree_mask,
     )
     att, new_pools = L.paged_attention_update(q_, k_, v_, pc)
     return att, new_pools

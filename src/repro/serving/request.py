@@ -144,6 +144,23 @@ class Request:
     pending: List[int] = dataclasses.field(default_factory=list)
     pending_q: List[np.ndarray] = dataclasses.field(default_factory=list)
 
+    # -- tree-speculation phase state (spec_mode="tree"): the draft TREE in
+    # flight.  tree_dl is the round's target depth (None between rounds);
+    # tree_nodes[i] / tree_parents[i] are the drafted token and parent NODE
+    # index (-1 = root) in drafting (BFS) order — window slot 1+i; tree_depth
+    # is the deepest fully-grown level; tree_draws counts sampled child
+    # draws this round (the draft_key position index, so a request's tree is
+    # identical no matter the batch composition); tree_q maps a window slot
+    # to the draft logits row its children were sampled from (sampled
+    # requests only — the tree rejection rule needs q at every branch
+    # point).  Survives across fused engine steps like the chain window.
+    tree_dl: Optional[int] = None
+    tree_nodes: List[int] = dataclasses.field(default_factory=list)
+    tree_parents: List[int] = dataclasses.field(default_factory=list)
+    tree_depth: int = 0
+    tree_draws: int = 0
+    tree_q: dict = dataclasses.field(default_factory=dict)
+
     # -- stop-sequence state (sampling.stop non-empty): the detokenized
     # generated text plus each output token's cumulative text end offset,
     # so a match maps back to a token-boundary truncation point.  The two
@@ -209,6 +226,34 @@ class Request:
         """Token the next draft micro-step consumes: the last proposal of
         the open window, or the committed tip when the window is empty."""
         return int(self.pending[-1]) if self.pending else self.last_tok
+
+    # -- tree-speculation phase (spec_mode="tree") ---------------------------
+
+    def begin_tree(self, dl: int) -> None:
+        """Open a fresh draft tree targeting depth `dl`."""
+        if dl < 1:
+            raise ValueError(f"tree depth must be >= 1, got {dl}")
+        self.tree_dl = dl
+        self.tree_nodes = []
+        self.tree_parents = []
+        self.tree_depth = 0
+        self.tree_draws = 0
+        self.tree_q = {}
+
+    def clear_tree(self) -> None:
+        self.tree_dl = None
+        self.tree_nodes = []
+        self.tree_parents = []
+        self.tree_depth = 0
+        self.tree_draws = 0
+        self.tree_q = {}
+
+    @property
+    def tree_full(self) -> bool:
+        """Ready to verify: the tree reached its target depth (or exhausted
+        its node budget early, in which case the grower stamps tree_depth
+        forward to tree_dl)."""
+        return self.tree_dl is not None and self.tree_depth >= self.tree_dl
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -345,6 +390,7 @@ class Request:
     def finish(self, step: int, reason: str = "length") -> None:
         self.state = RequestState.FINISHED
         self.clear_window()
+        self.clear_tree()
         if self.finish_reason is None:
             self.finish_reason = reason
         self.finished_step = step

@@ -1,20 +1,23 @@
-"""Optional-dependency shims for the test suite.
+"""Degradation shims for `hypothesis` in a bare runtime environment.
 
-`hypothesis` is a dev-only dependency (requirements-dev.txt).  Test modules
-that mix property-based and example-based tests import `given / settings / st`
-from here: when hypothesis is absent the property tests skip individually and
-the example tests still run (a bare `from hypothesis import ...` used to error
-the whole collection).  Modules that are *entirely* property-based should use
-``pytest.importorskip("hypothesis")`` instead.
+`hypothesis` is a first-class dev dependency — pinned in
+requirements-dev.txt and run by `scripts/ci.sh` — not an optional extra.
+This module exists for the OTHER environment: a runtime install
+(requirements.txt only) where the suite must still collect and the
+example-based tests must still run.  Modules that mix property-based and
+example-based tests import `given / settings / st` from here: without
+hypothesis the property tests skip individually instead of a bare
+`from hypothesis import ...` erroring the whole collection.  Modules that
+are *entirely* property-based use ``pytest.importorskip("hypothesis")``
+instead (tests/test_properties.py).
 """
 import pytest
 
+__all__ = ["given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
-
-    HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:  # pragma: no cover - exercised only without dev deps
-    HAVE_HYPOTHESIS = False
 
     class _StrategyStub:
         """`st.<anything>(...)(.map/.filter/...)` placeholder; supports

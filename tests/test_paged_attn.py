@@ -251,3 +251,140 @@ def test_int8_window_last_query_equals_single_token_call():
     np.testing.assert_allclose(
         np.asarray(win[:, -1]), np.asarray(single), atol=1e-6
     )
+
+
+# ---------------------------------------------------------------------------
+# Speculation-tree windows (tree_mask): kernel vs oracle vs gather fallback
+# ---------------------------------------------------------------------------
+
+from _optional import given, settings, st  # noqa: E402
+from repro.core.speculative import tree_ancestor_mask  # noqa: E402
+
+
+def _random_parents(rng, n):
+    """A valid drafting-order topology: node i's parent is -1 (the window
+    root) or any earlier node — uniform, so draws range over chains, stars
+    and ragged mixed-fanout trees."""
+    return [int(rng.randint(-1, i)) for i in range(n)]
+
+
+def _tree_case(seed, b, w, kvs, g, hd, ps, mp, lengths, node_counts=None):
+    """A `_window_case` plus a per-row (W, W) ancestor mask; rows with fewer
+    than w - 1 nodes get self-visible-only padding rows (the engine's fixed
+    dispatch width)."""
+    q, kp, vp, pt, lens = _window_case(
+        seed, b, w, kvs, g, hd, b * mp, ps, mp, lengths
+    )
+    rng = np.random.RandomState(seed + 1)
+    tm = np.zeros((b, w, w), np.float32)
+    for i in range(b):
+        n = w - 1 if node_counts is None else node_counts[i]
+        tm[i] = tree_ancestor_mask(_random_parents(rng, n), w)
+    return q, kp, vp, pt, lens, jnp.asarray(tm)
+
+
+@pytest.mark.parametrize(
+    "seed,w,lengths", [(20, 3, [9, 30]), (21, 5, [7, 17]), (22, 7, [8, 32])]
+)
+def test_tree_window_matches_oracle(seed, w, lengths):
+    """Random topologies: the kernel's in-window tree mask must agree with
+    the gather+dense oracle row-for-row (full prefix + ancestor columns)."""
+    b, kvs, g, hd, ps, mp = 2, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens, tm = _tree_case(seed, b, w, kvs, g, hd, ps, mp, lengths)
+    got = paged_decode_attention_pallas(q, kp, vp, pt, lens, tree_mask=tm)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens, tree_mask=tm)
+    assert got.shape == (b, w, kvs, g, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_chain_tree_mask_equals_causal_window():
+    """A chain-shaped tree (lower-triangular ancestor mask) must reproduce
+    the causal-window path bit-for-bit-close on BOTH implementations — the
+    equivalence spec_mode='tree' relies on when every fan-out is 1."""
+    b, w, kvs, g, hd, ps, mp = 2, 4, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens = _window_case(23, b, w, kvs, g, hd, b * mp, ps, mp,
+                                       [11, 26])
+    chain = tree_ancestor_mask([i - 1 for i in range(w - 1)], w)
+    tm = jnp.asarray(np.broadcast_to(chain, (b, w, w)).copy())
+    got = paged_decode_attention_pallas(q, kp, vp, pt, lens, tree_mask=tm)
+    causal = paged_decode_attention_pallas(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(causal), atol=1e-6)
+    got_ref = ref.paged_attn_ref(q, kp, vp, pt, lens, tree_mask=tm)
+    causal_ref = ref.paged_attn_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(
+        np.asarray(got_ref), np.asarray(causal_ref), atol=1e-6
+    )
+
+
+def test_tree_gather_fallback_matches_oracle():
+    """models/layers._tree_window_attention (the non-pallas engine path)
+    computes the same tree semantics over a dense gathered cache."""
+    b, w, kvs, g, hd, ps, mp = 2, 5, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens, tm = _tree_case(24, b, w, kvs, g, hd, ps, mp, [9, 28])
+    kd = ref.gather_pages_ref(kp, pt)
+    vd = ref.gather_pages_ref(vp, pt)
+    got = L._tree_window_attention(
+        q.reshape(b, w, kvs * g, hd), kd, vd, lens, tm
+    ).reshape(b, w, kvs, g, hd)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens, tree_mask=tm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_tree_window_ragged_node_counts():
+    """Rows with different live node counts share ONE fixed-width dispatch;
+    padded (self-visible-only) rows must not perturb any live row."""
+    b, w, kvs, g, hd, ps, mp = 3, 6, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens, tm = _tree_case(
+        25, b, w, kvs, g, hd, ps, mp, [7, 19, 30], node_counts=[0, 2, 5]
+    )
+    got = paged_decode_attention_pallas(q, kp, vp, pt, lens, tree_mask=tm)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens, tree_mask=tm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    assert bool(np.isfinite(np.asarray(got)).all())
+
+
+@pytest.mark.parametrize("seed,w,lengths", [(26, 3, [9, 30]), (27, 5, [7, 17])])
+def test_int8_tree_window_matches_oracle(seed, w, lengths):
+    """Tree masks compose with the int8 dequant epilogue: quantized pools,
+    random topologies, kernel vs gather-then-dequant oracle."""
+    b, kvs, g, hd, ps, mp = 2, 2, 2, 32, 8, 4
+    q, kp, vp, pt, lens, tm = _tree_case(seed, b, w, kvs, g, hd, ps, mp, lengths)
+    kq, vq, ks, vs_ = _quantized_pools(kp, vp)
+    got = paged_decode_attention_pallas(q, kq, vq, pt, lens,
+                                        k_scale=ks, v_scale=vs_, tree_mask=tm)
+    want = ref.paged_attn_ref(q, kq, vq, pt, lens,
+                              k_scale=ks, v_scale=vs_, tree_mask=tm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_tree_window_matches_oracle_property(data):
+    """Property sweep (hypothesis, skipped when absent — the seeded variants
+    above always run): random width, batch, ragged per-row node counts,
+    ragged prefix lengths, both precisions."""
+    w = data.draw(st.integers(min_value=2, max_value=6), label="w")
+    b = data.draw(st.integers(min_value=1, max_value=3), label="b")
+    seed = data.draw(st.integers(min_value=0, max_value=2**16 - 1),
+                     label="seed")
+    quantized = data.draw(st.booleans(), label="int8")
+    ps, mp = 8, 3
+    counts = [
+        data.draw(st.integers(min_value=0, max_value=w - 1), label=f"n{i}")
+        for i in range(b)
+    ]
+    lengths = [
+        data.draw(st.integers(min_value=w, max_value=ps * mp), label=f"len{i}")
+        for i in range(b)
+    ]
+    q, kp, vp, pt, lens, tm = _tree_case(
+        seed, b, w, 2, 2, 32, ps, mp, lengths, node_counts=counts
+    )
+    if quantized:
+        kp, vp, ks, vs_ = _quantized_pools(kp, vp)
+        kw = {"k_scale": ks, "v_scale": vs_}
+    else:
+        kw = {}
+    got = paged_decode_attention_pallas(q, kp, vp, pt, lens, tree_mask=tm, **kw)
+    want = ref.paged_attn_ref(q, kp, vp, pt, lens, tree_mask=tm, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

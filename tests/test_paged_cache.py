@@ -385,3 +385,77 @@ def test_double_release_raises():
         fol.release()
     assert pool.page_ref(pages[0]) == 1  # donor's ref untouched
     donor.release()
+
+
+# ---------------------------------------------------------------------------
+# flat_slots: the tree-compaction indexing contract
+# ---------------------------------------------------------------------------
+
+
+def test_flat_slots_maps_positions_to_pool_rows():
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(12)
+    seq.append(*span(pool, 10))
+    pages = list(seq.pages)
+    got = seq.flat_slots([0, 3, 4, 9])
+    assert got.tolist() == [
+        pages[0] * 4 + 0, pages[0] * 4 + 3, pages[1] * 4 + 0, pages[2] * 4 + 1
+    ]
+    assert seq.flat_slots([]).size == 0
+
+
+def test_flat_slots_requires_backed_positions():
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(12)
+    seq.append(*span(pool, 5))  # 2 pages backed
+    with pytest.raises(AssertionError):
+        seq.flat_slots([8])  # 3rd page not backed
+    seq.release()
+    with pytest.raises(AssertionError, match="released"):
+        seq.flat_slots([0])
+
+
+def test_flat_slots_stable_across_tree_advance_rewind():
+    """The engine queues compaction moves between advance(W) and
+    rewind(W-1-n, release_pages=False); positions must keep mapping through
+    the SAME physical pages across that dance."""
+    pool = make_pool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(16)
+    seq.append(*span(pool, 6))
+    before = seq.flat_slots(np.arange(6))
+    seq.advance(7)  # the W=7 tree window scattered in place on device
+    mid = seq.flat_slots(np.arange(13))
+    seq.rewind(5, release_pages=False)  # keep n_acc + 1 = 2
+    after = seq.flat_slots(np.arange(8))
+    np.testing.assert_array_equal(before, mid[:6])
+    np.testing.assert_array_equal(mid[:8], after)
+
+
+# ---------------------------------------------------------------------------
+# Engine regression: abort mid-tree-round frees every sibling reservation
+# ---------------------------------------------------------------------------
+
+
+def test_abort_mid_tree_round_frees_sibling_pages():
+    """A tree round reserves the full tree_budget + 1 window on both pools;
+    aborting while branches are in flight must return every page (no leaked
+    sibling reservations) and leave the other request draining normally."""
+    from repro.launch.serve import build_pair
+    from repro.serving import Engine, EngineConfig, SamplingParams
+
+    target, draft = build_pair(seed=0, s_max=128, quantize=False)
+    eng = Engine(target, draft, EngineConfig(
+        max_batch=2, page_size=8, spec_mode="tree", tree_budget=6,
+        spec_branches=2, branch_threshold=1.0, par_mode="wdos",
+    ))
+    rng = np.random.RandomState(0)
+    sp = SamplingParams(temperature=2.0, seed=3, max_tokens=16)
+    rid = eng.add_request(rng.randint(0, 512, size=5).astype(np.int32), sp)
+    eng.add_request(rng.randint(0, 512, size=4).astype(np.int32), sp)
+    eng.step()  # wdos trees stay in flight across steps
+    assert eng.abort(rid)
+    while eng.has_unfinished():
+        eng.step()
+    t_st, d_st = eng.pool_stats()
+    assert t_st.used_pages == 0, t_st
+    assert d_st.used_pages == 0, d_st

@@ -314,3 +314,38 @@ def test_prefix_metric_families_export(pair):
         if "prefix_hit_rate" in ln and not ln.startswith("#")
     ]
     assert hit_lines and float(hit_lines[0].rsplit(" ", 1)[1]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Tree speculation: shared prefix pages survive tree rewind + compaction
+# ---------------------------------------------------------------------------
+
+
+def test_sharing_bit_identical_with_tree_spec(pair):
+    """spec_mode='tree' advances the full window then rewinds W-1-n_acc
+    positions every round and compacts accepted branches in place; neither
+    may touch a SHARED prefix page — prefix_cache=True must stay
+    bit-identical to sharing off, and the donor's nodes must still be
+    matchable after the tree drains."""
+    target, draft = pair
+    donor, followers = _workload()
+    sp = SamplingParams(max_tokens=6)
+
+    def run(prefix_on):
+        eng = Engine(target, draft, EngineConfig(
+            max_batch=2, page_size=8, prefix_cache=prefix_on,
+            spec_mode="tree", tree_budget=5, spec_branches=2,
+        ))
+        first, _ = eng.run([donor], sp)
+        rest, summary = eng.run(followers, sp)
+        return [np.asarray(t) for t in first + rest], summary, eng
+
+    off, _, _ = run(False)
+    on, summary, eng = run(True)
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a, b)
+    st = summary["prefix_cache"]
+    assert st["hits"] >= 3  # every follower matched despite tree rewinds
+    # cached nodes are still intact and matchable post-drain
+    again, _ = eng.run([donor.copy()], sp)
+    np.testing.assert_array_equal(np.asarray(again[0]), np.asarray(off[0]))

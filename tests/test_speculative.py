@@ -207,3 +207,329 @@ def test_speculative_sample_host_top_p_residual_stays_in_nucleus():
         )
         for j, tok in enumerate(out):
             assert tok in nucleus[j], (i, j, tok)
+
+
+# ---------------------------------------------------------------------------
+# Tree speculation: topology helpers + lossless multi-branch verification
+# ---------------------------------------------------------------------------
+
+
+def test_tree_children_and_depths():
+    parents = [-1, -1, 0, 0, 1, 3]
+    kids = sd.tree_children(parents)
+    assert kids[0] == [0, 1]  # the root's (last_tok's) children
+    assert kids[1] == [2, 3]  # node 0 sits at window slot 1
+    assert kids[2] == [4]
+    assert kids[4] == [5]
+    d = sd.tree_depths(parents, 8)
+    assert d.tolist() == [0, 1, 1, 2, 2, 2, 3, 0]  # pad slot repeats depth 0
+
+
+def test_tree_ancestor_mask_topology():
+    # root -> node0 -> {node1, node2}; node1 -> node3
+    parents = [-1, 0, 0, 1]
+    m = sd.tree_ancestor_mask(parents, 6)
+    want = np.eye(6, dtype=np.float32)
+    want[1, 0] = 1.0                      # node 0 sees the root
+    want[2, [0, 1]] = 1.0                 # node 1 sees root + node 0
+    want[3, [0, 1]] = 1.0                 # node 2 sees root + node 0
+    want[4, [0, 1, 2]] = 1.0              # node 3 sees root, node 0, node 1
+    # node 3 must NOT see its parent's sibling (slot 3), pad row only itself
+    np.testing.assert_array_equal(m, want)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tree_greedy_fanout1_equals_chain(seed):
+    """A chain-shaped tree (every node fan-out 1) must reproduce the chain
+    greedy verify decision-for-decision: same committed tokens, same n_acc,
+    and the accepted path is the leftmost prefix."""
+    rng = np.random.RandomState(seed)
+    vs, dl = 16, 4
+    p = rng.randn(dl + 1, vs).astype(np.float32)
+    drafts = [int(t) for t in rng.randint(0, vs, size=dl)]
+    for i in range(min(seed + 1, dl)):  # force a nontrivial accepted prefix
+        drafts[i] = int(np.argmax(p[i]))
+    chain, n_chain = sd.speculative_accept_greedy_host(drafts, p, dl)
+    parents = [i - 1 for i in range(dl)]
+    committed, path, n_acc = sd.speculative_tree_accept_greedy_host(
+        drafts, parents, p
+    )
+    assert committed == chain
+    assert n_acc == n_chain
+    assert path == list(range(n_acc))
+
+
+@pytest.mark.parametrize("seed", [4, 5, 6, 7])
+def test_tree_greedy_commits_argmax_walk(seed):
+    """Every token greedy tree verify emits IS the target argmax at its
+    position, for arbitrary topologies — the invariant that makes greedy
+    tree and greedy chain produce the identical token stream."""
+    rng = np.random.RandomState(seed)
+    vs, n = 12, 7
+    parents = [int(rng.randint(-1, i)) for i in range(n)]
+    p = rng.randn(n + 1, vs).astype(np.float32)
+    nodes = []
+    for i in range(n):
+        slot = 0 if parents[i] < 0 else 1 + parents[i]
+        if rng.rand() < 0.5:  # half the nodes guess their parent's argmax
+            nodes.append(int(np.argmax(p[slot])))
+        else:
+            nodes.append(int(rng.randint(0, vs)))
+    committed, path, n_acc = sd.speculative_tree_accept_greedy_host(
+        nodes, parents, p
+    )
+    assert n_acc == len(path) == len(committed) - 1
+    slot = 0
+    for j, tok in enumerate(committed):
+        assert tok == int(np.argmax(p[slot])), (j, slot)
+        if j < len(path):
+            assert nodes[path[j]] == tok
+            assert (parents[path[j]] < 0 and slot == 0) or (
+                slot == 1 + parents[path[j]]
+            )
+            slot = 1 + path[j]
+
+
+def test_tree_sample_self_draft_accepts_every_level():
+    """q == p: the first candidate at every position passes the u*q < r test
+    with probability 1, so a chain tree accepts its full depth (the tree
+    analogue of self-draft chain SD accepting everything)."""
+    rng = np.random.RandomState(7)
+    vs, n = 10, 5
+    logits = rng.randn(n + 1, vs).astype(np.float32)
+    parents = [i - 1 for i in range(n)]
+    nodes = [int(np.argmax(logits[i])) for i in range(n)]
+    committed, path, n_acc = sd.speculative_tree_sample_host(
+        jax.random.PRNGKey(0), nodes, parents, logits, logits, temperature=1.0
+    )
+    assert n_acc == n
+    assert path == list(range(n))
+    assert committed[:n] == nodes
+
+
+def test_tree_sample_deterministic_in_key():
+    rng = np.random.RandomState(8)
+    vs, n = 12, 6
+    parents = [int(rng.randint(-1, i)) for i in range(n)]
+    nodes = [int(t) for t in rng.randint(0, vs, size=n)]
+    p = rng.randn(n + 1, vs).astype(np.float32)
+    q = rng.randn(n + 1, vs).astype(np.float32)
+    a = sd.speculative_tree_sample_host(
+        jax.random.PRNGKey(3), nodes, parents, p, q, 0.9, top_k=6
+    )
+    b = sd.speculative_tree_sample_host(
+        jax.random.PRNGKey(3), nodes, parents, p, q, 0.9, top_k=6
+    )
+    assert a == b
+
+
+def test_tree_sample_emits_only_nucleus_tokens():
+    """Accepted and residual tokens must all lie in the target's filtered
+    support — outside tokens have p' == 0 at every walk position."""
+    rng = np.random.RandomState(9)
+    vs, n, temp, top_p = 16, 5, 1.1, 0.6
+    parents = [-1, -1, 0, 1, 2]
+    p = rng.randn(n + 1, vs).astype(np.float32)
+    q = rng.randn(n + 1, vs).astype(np.float32)
+    nucleus = [
+        set(np.nonzero(np.isfinite(
+            sd._top_p_filter_host(p[j] / temp, top_p)
+        ))[0].tolist())
+        for j in range(n + 1)
+    ]
+    for i in range(40):
+        nodes = [
+            sd.sample_token_host(
+                jax.random.fold_in(jax.random.PRNGKey(300 + i), j),
+                q[0 if parents[j] < 0 else 1 + parents[j]], temp, top_p=top_p,
+            )
+            for j in range(n)
+        ]
+        committed, path, _ = sd.speculative_tree_sample_host(
+            jax.random.PRNGKey(400 + i), nodes, parents, p, q, temp,
+            top_p=top_p,
+        )
+        slot = 0
+        for j, tok in enumerate(committed):
+            assert tok in nucleus[slot], (i, j, tok)
+            if j < len(path):
+                slot = 1 + path[j]
+
+
+# ---------------------------------------------------------------------------
+# Distribution exactness: chain and tree SD == direct target sampling
+# ---------------------------------------------------------------------------
+#
+# Monte-Carlo harness over a tiny Markov target/draft pair: generate the
+# first TWO tokens many times through the speculative samplers (drafts drawn
+# i.i.d. from the draft transition row, exactly as the engine drafts) and
+# compare the empirical joint against the analytic target joint with both a
+# TV-distance gate and a chi-squared gate.  The draft model is deliberately
+# far from the target (the power check asserts it), so a biased rejection
+# rule — e.g. forgetting the residual renormalization, or reusing a key —
+# shifts the joint well past the thresholds.
+
+
+def _softmax_np(x):
+    e = np.exp(x - x.max(axis=-1, keepdims=True))
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def _joint2_ref(trans, last):
+    """Analytic 2-token joint: P(a, b) = softmax(T[last])[a]*softmax(T[a])[b]."""
+    p0 = _softmax_np(trans[last])
+    return p0[:, None] * _softmax_np(trans)
+
+
+def _chain_two_tokens(key, rng, trans_t, trans_d, last, dl=2):
+    """First two committed tokens through chain SD rounds (drafts i.i.d.
+    from the draft chain, verification via speculative_sample_host)."""
+    vs = trans_t.shape[0]
+    out, cur, r = [], last, 0
+    while len(out) < 2:
+        drafts, q_rows, p_rows, c = [], [], [trans_t[cur]], cur
+        for _ in range(dl):
+            t = int(rng.choice(vs, p=_softmax_np(trans_d[c])))
+            drafts.append(t)
+            q_rows.append(trans_d[c])
+            p_rows.append(trans_t[t])
+            c = t
+        committed, _ = sd.speculative_sample_host(
+            jax.random.fold_in(key, r), drafts, np.stack(p_rows),
+            np.stack(q_rows), dl, temperature=1.0,
+        )
+        out.extend(committed)
+        cur = out[-1]
+        r += 1
+    return out[0], out[1]
+
+
+def _tree_two_tokens(key, rng, trans_t, trans_d, last, depth=2, branches=2):
+    """First two committed tokens through tree SD rounds: `branches` root
+    children (i.i.d. WITH replacement from the draft row — what keeps the
+    walk exact), one grandchild each."""
+    vs = trans_t.shape[0]
+    out, cur, r = [], last, 0
+    while len(out) < 2:
+        nodes, parents = [], []
+
+        def tok_at(slot):
+            return cur if slot == 0 else nodes[slot - 1]
+
+        frontier = [-1]
+        for d in range(depth):
+            nxt = []
+            for par in frontier:
+                ctx = tok_at(0 if par < 0 else 1 + par)
+                qp = _softmax_np(trans_d[ctx])
+                for _ in range(branches if d == 0 else 1):
+                    nodes.append(int(rng.choice(vs, p=qp)))
+                    parents.append(par)
+                    nxt.append(len(nodes) - 1)
+            frontier = nxt
+        w = len(nodes) + 1
+        p_rows = np.stack([trans_t[tok_at(s)] for s in range(w)])
+        q_rows = np.stack([trans_d[tok_at(s)] for s in range(w)])
+        committed, _, _ = sd.speculative_tree_sample_host(
+            jax.random.fold_in(key, r), nodes, parents, p_rows, q_rows,
+            temperature=1.0,
+        )
+        out.extend(committed)
+        cur = out[-1]
+        r += 1
+    return out[0], out[1]
+
+
+def _assert_joint_matches(counts, want, n_trials):
+    emp = counts / n_trials
+    tv = 0.5 * float(np.abs(emp - want).sum())
+    assert tv < 0.11, f"TV {tv:.4f} vs target joint"
+    # chi-squared over well-populated cells, sparse cells pooled; the bound
+    # is mean + 4 sigma of the chi2(dof) null (~3e-5 false-positive rate)
+    exp = want.ravel() * n_trials
+    obs = counts.ravel()
+    big = exp >= 5.0
+    chi2 = float((((obs[big] - exp[big]) ** 2) / exp[big]).sum())
+    if bool((~big).any()):
+        o, e = float(obs[~big].sum()), float(exp[~big].sum())
+        chi2 += (o - e) ** 2 / max(e, 1e-9)
+        dof = int(big.sum())  # pooled cell adds 1, sum constraint removes 1
+    else:
+        dof = int(big.sum()) - 1
+    assert chi2 < dof + 4.0 * np.sqrt(2.0 * dof), (chi2, dof)
+
+
+@pytest.fixture(scope="module")
+def exactness_pair():
+    rng = np.random.RandomState(0)
+    vs = 6
+    trans_t = (1.2 * rng.randn(vs, vs)).astype(np.float32)
+    trans_d = (1.2 * rng.randn(vs, vs)).astype(np.float32)
+    want = _joint2_ref(trans_t, 0)
+    # power check: naively emitting DRAFT samples would fail the TV gate by
+    # a wide margin, so the gate really does constrain the rejection rule
+    tv_draft = 0.5 * float(np.abs(want - _joint2_ref(trans_d, 0)).sum())
+    assert tv_draft > 0.3, tv_draft
+    return trans_t, trans_d, want
+
+
+def test_chain_sd_two_token_joint_matches_target(exactness_pair):
+    trans_t, trans_d, want = exactness_pair
+    n_trials = 1500
+    rng = np.random.RandomState(1)
+    key = jax.random.PRNGKey(11)
+    counts = np.zeros_like(want)
+    for i in range(n_trials):
+        a, b = _chain_two_tokens(
+            jax.random.fold_in(key, i), rng, trans_t, trans_d, 0
+        )
+        counts[a, b] += 1.0
+    _assert_joint_matches(counts, want, n_trials)
+
+
+def test_tree_sd_two_token_joint_matches_target(exactness_pair):
+    trans_t, trans_d, want = exactness_pair
+    n_trials = 1500
+    rng = np.random.RandomState(2)
+    key = jax.random.PRNGKey(13)
+    counts = np.zeros_like(want)
+    for i in range(n_trials):
+        a, b = _tree_two_tokens(
+            jax.random.fold_in(key, i), rng, trans_t, trans_d, 0
+        )
+        counts[a, b] += 1.0
+    _assert_joint_matches(counts, want, n_trials)
+
+
+def test_tree_sample_first_token_marginal_under_filters():
+    """Single-round marginal with temperature + top-k active: the first
+    committed token follows the FILTERED target softmax exactly, whatever
+    the deeper tree looks like (3 root siblings + grandchildren here)."""
+    vs, temp, top_k = 8, 0.8, 4
+    rng0 = np.random.RandomState(3)
+    p_rows = rng0.randn(7, vs).astype(np.float32)
+    q_rows = rng0.randn(7, vs).astype(np.float32)
+    parents = [-1, -1, -1, 0, 1, 2]
+
+    def filtered(row):
+        return sd._softmax_host(
+            sd._top_k_filter_host(row[None], top_k) / temp
+        )[0]
+
+    want = filtered(p_rows[0])
+    n_trials = 1500
+    rng = np.random.RandomState(4)
+    key = jax.random.PRNGKey(17)
+    counts = np.zeros(vs)
+    for i in range(n_trials):
+        nodes = []
+        for j, par in enumerate(parents):
+            qf = filtered(q_rows[0 if par < 0 else 1 + par])
+            nodes.append(int(rng.choice(vs, p=qf)))
+        committed, _, _ = sd.speculative_tree_sample_host(
+            jax.random.fold_in(key, i), nodes, parents, p_rows, q_rows,
+            temp, top_k=top_k,
+        )
+        counts[committed[0]] += 1.0
+    tv = 0.5 * float(np.abs(counts / n_trials - want).sum())
+    assert tv < 0.05, tv
