@@ -78,6 +78,10 @@ obs = json.load(open("BENCH_serving.json")).get("observability")
 if obs:
     print("observability:", {k: round(v, 4) if isinstance(v, float) else v
                              for k, v in sorted(obs.items())})
+att = json.load(open("BENCH_serving.json")).get("attribution")
+if att:
+    print("device-time attribution (modeled vs measured, wdos arm):")
+    print(att["table"])
 EOF
 
 echo "== compressed-KV gate (int8 capacity win + acceptance bound) =="
@@ -138,7 +142,11 @@ EOF
 
 echo "== wdos round-timeline trace (Chrome-trace schema gate) =="
 # The bench's --trace-out must round-trip through the Chrome-trace schema
-# checker non-empty — the same JSON a developer drops into Perfetto.
+# checker non-empty — the same JSON a developer drops into Perfetto.  The
+# checker also enforces the device-track rules (thread-name metadata for
+# every tid, non-overlapping device spans); this stanza additionally
+# asserts the device track EXISTS and carries the fused wdos program,
+# with its modeled-vs-measured row landed in BENCH_serving.json.
 python - <<'EOF'
 import json
 from repro.serving import validate_chrome_trace
@@ -147,11 +155,29 @@ problems = validate_chrome_trace(trace)
 assert not problems, problems[:5]
 events = trace["traceEvents"]
 assert len(events) > 10, f"trace suspiciously small: {len(events)} events"
-tracks = {e["args"]["name"] for e in events if e["ph"] == "M"}
+meta = {e["tid"]: e["args"]["name"] for e in events if e["ph"] == "M"}
+tracks = set(meta.values())
 assert "engine" in tracks and any(t.startswith("row") for t in tracks), tracks
+assert "device" in tracks, f"no device track in {sorted(tracks)}"
+dev_tids = {tid for tid, name in meta.items() if name == "device"}
+dev_progs = {e["name"] for e in events
+             if e["ph"] == "X" and e["tid"] in dev_tids}
+assert "fused_wdos" in dev_progs, f"device track spans: {sorted(dev_progs)}"
+att = json.load(open("BENCH_serving.json"))["attribution"]["programs"]
+assert "fused_wdos" in att, sorted(att)
+assert att["fused_wdos"]["calls"] >= 1 and "utilization_pct" in att["fused_wdos"]
 print(f"TRACE_wdos.json OK: {len(events)} events across "
-      f"{len(tracks)} tracks {sorted(tracks)}")
+      f"{len(tracks)} tracks {sorted(tracks)}; device programs "
+      f"{sorted(dev_progs)}; attribution rows {sorted(att)}")
 EOF
+
+echo "== perf-regression sentinel (BENCH_history.jsonl trajectory gate) =="
+# First PROVE the gate works on synthetic trajectories (an injected -70%
+# collapse must exit 1; ±10% noise and first-run bootstrap must pass),
+# then gate the real record vs the median of recent runs and append it.
+python scripts/perf_sentinel.py --self-test
+python scripts/perf_sentinel.py --bench BENCH_serving.json \
+    --history BENCH_history.jsonl
 
 echo "== property-based suites (hypothesis-randomized oracles) =="
 # hypothesis is a first-class dev dependency (requirements-dev.txt): with

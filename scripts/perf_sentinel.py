@@ -1,0 +1,298 @@
+#!/usr/bin/env python
+"""Perf-regression sentinel over the serving benchmark trajectory.
+
+Each CI run appends the headline metrics of ``BENCH_serving.json`` to
+``BENCH_history.jsonl`` (one JSON object per line) and gates the CURRENT
+run against the median of the last ``--window`` recorded runs.  The
+median-of-recent rule with generous per-metric relative tolerances is
+deliberately noise-tolerant: CI runs on shared CPU runners where single
+runs jitter by tens of percent, so only a sustained collapse (current run
+far outside the recent median) fails the build — one slow neighbour on
+the runner does not.
+
+Headline metrics (extractor -> direction -> relative tolerance):
+
+* ``warm_tokens_per_s``   — ``paged_warm.tokens_per_s`` (higher is
+  better, 40% tolerance: pure wall-clock, noisiest).
+* ``wdos_rounds_to_drain``— ``par.wdos.rounds_to_drain`` (lower is
+  better, 34% tolerance: round counts are deterministic per seed but
+  move when the workload or scheduler changes).
+* ``tree_accepted_per_round`` — ``tree_spec.arms.tree.
+  accepted_per_request_round`` (higher is better, 25% tolerance).
+* ``ttft_p50_s``          — ``async_load`` wdos-side TTFT p50 at the
+  highest arrival rate (lower is better, 100% tolerance: open-loop
+  latency percentiles on 6 smoke requests are the jitteriest number in
+  the file).
+
+Metrics missing from the current bench record are SKIPPED, not failed —
+a bench invocation without ``--spec-mode both`` simply has no tree arm.
+With fewer than ``--min-runs`` prior history entries for a metric the
+gate BOOTSTRAPS (passes and records); the second run onward is gated.
+On regression the run is NOT appended — a collapsed run must not drag
+the baseline down with it — and the process exits 1 with a markdown
+diff table (``scripts/ci.sh`` fails on it).
+
+    python scripts/perf_sentinel.py --bench BENCH_serving.json \
+        --history BENCH_history.jsonl [--window 8] [--no-append]
+    python scripts/perf_sentinel.py --self-test
+"""
+import argparse
+import json
+import os
+import statistics
+import sys
+import tempfile
+import time
+
+
+def _path(*keys):
+    """Extractor for a nested dict path; None when absent/non-numeric."""
+    def get(rec):
+        cur = rec
+        for k in keys:
+            if not isinstance(cur, dict) or k not in cur:
+                return None
+            cur = cur[k]
+        return float(cur) if isinstance(cur, (int, float)) else None
+    return get
+
+
+def _ttft_p50(rec):
+    """wdos-side TTFT p50 at the highest arrival rate in async_load."""
+    side = rec.get("async_load", {}).get("wdos")
+    if not isinstance(side, dict):
+        return None
+    rates = []
+    for k in side:
+        try:
+            rates.append((float(k), k))
+        except (TypeError, ValueError):
+            continue
+    if not rates:
+        return None
+    entry = side[max(rates)[1]]
+    try:
+        return float(entry["ttft_s"]["p50"])
+    except (TypeError, KeyError, ValueError):
+        return None
+
+
+# (name, extractor, higher_is_better, relative tolerance vs the median)
+HEADLINE = (
+    ("warm_tokens_per_s", _path("paged_warm", "tokens_per_s"), True, 0.40),
+    ("wdos_rounds_to_drain", _path("par", "wdos", "rounds_to_drain"),
+     False, 0.34),
+    ("tree_accepted_per_round",
+     _path("tree_spec", "arms", "tree", "accepted_per_request_round"),
+     True, 0.25),
+    ("ttft_p50_s", _ttft_p50, False, 1.00),
+)
+
+
+def extract_headline(bench_record):
+    """Pull the headline metric dict out of a BENCH_serving.json record."""
+    return {name: fn(bench_record) for name, fn, _, _ in HEADLINE}
+
+
+def load_history(path):
+    """Read BENCH_history.jsonl; corrupt lines are skipped, not fatal."""
+    entries = []
+    if not os.path.exists(path):
+        return entries
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                e = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(e, dict) and isinstance(e.get("headline"), dict):
+                entries.append(e)
+    return entries
+
+
+def gate(history, headline, window=8, min_runs=2):
+    """Gate ``headline`` against the median of the last ``window`` history
+    entries per metric.  Returns (rows, failed): ``rows`` is one dict per
+    headline metric with status in {"ok", "REGRESSION", "bootstrap",
+    "skipped"}; ``failed`` is True iff any metric regressed."""
+    rows = []
+    failed = False
+    for name, _, higher, tol in HEADLINE:
+        cur = headline.get(name)
+        if cur is None:
+            rows.append({"metric": name, "status": "skipped"})
+            continue
+        recent = [
+            e["headline"][name]
+            for e in history[-window:]
+            if isinstance(e["headline"].get(name), (int, float))
+        ]
+        if len(recent) < min_runs:
+            rows.append({
+                "metric": name, "current": cur, "status": "bootstrap",
+                "runs": len(recent),
+            })
+            continue
+        base = statistics.median(recent)
+        if higher:
+            threshold = base * (1.0 - tol)
+            bad = cur < threshold
+        else:
+            threshold = base * (1.0 + tol)
+            bad = cur > threshold
+        failed = failed or bad
+        rows.append({
+            "metric": name, "current": cur, "baseline": base,
+            "runs": len(recent), "threshold": threshold,
+            "direction": "higher" if higher else "lower",
+            "status": "REGRESSION" if bad else "ok",
+        })
+    return rows, failed
+
+
+def render(rows):
+    """Markdown diff table for the gate result."""
+    def num(v):
+        return f"{v:.4g}" if isinstance(v, (int, float)) else "-"
+    lines = [
+        "| metric | current | baseline (median) | runs | threshold "
+        "| direction | status |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        status = r["status"]
+        mark = f"**{status}**" if status == "REGRESSION" else status
+        lines.append(
+            f"| {r['metric']} | {num(r.get('current'))} "
+            f"| {num(r.get('baseline'))} | {r.get('runs', '-')} "
+            f"| {num(r.get('threshold'))} | {r.get('direction', '-')} "
+            f"| {mark} |"
+        )
+    return "\n".join(lines)
+
+
+def append_history(path, headline, meta=None):
+    entry = {"t": time.time(), "headline": headline, "meta": meta or {}}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def check(bench_path, history_path, window=8, min_runs=2, append=True,
+          out=sys.stdout):
+    """Full sentinel pass: load, gate, print, append-on-pass.
+
+    Returns the process exit code (0 pass / 1 regression)."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    history = load_history(history_path)
+    headline = extract_headline(bench)
+    rows, failed = gate(history, headline, window=window, min_runs=min_runs)
+    print(render(rows), file=out)
+    if failed:
+        print(
+            f"perf_sentinel: REGRESSION vs median of last "
+            f"{min(len(history), window)} runs in {history_path} "
+            f"(run NOT appended)", file=out,
+        )
+        return 1
+    if append:
+        append_history(history_path, headline,
+                       meta=bench.get("meta", {}))
+        print(
+            f"perf_sentinel: ok ({sum(1 for r in rows if r['status'] == 'ok')}"
+            f" gated, {sum(1 for r in rows if r['status'] == 'bootstrap')}"
+            f" bootstrapped, {sum(1 for r in rows if r['status'] == 'skipped')}"
+            f" skipped) -> appended to {history_path}", file=out,
+        )
+    else:
+        print("perf_sentinel: ok (append disabled)", file=out)
+    return 0
+
+
+def _synthetic_bench(warm=100.0, rounds=6, tree=1.5, ttft=0.05):
+    return {
+        "meta": {"smoke": True},
+        "paged_warm": {"tokens_per_s": warm},
+        "par": {"wdos": {"rounds_to_drain": rounds}},
+        "tree_spec": {"arms": {"tree": {
+            "accepted_per_request_round": tree}}},
+        "async_load": {"wdos": {"8.0": {"ttft_s": {"p50": ttft}}}},
+    }
+
+
+def self_test():
+    """Prove the gate on synthetic trajectories: first run bootstraps,
+    ±10% noise passes, a collapse fails (and is not appended), and a
+    lower-is-better blowup fails too.  Exit 0 iff all hold."""
+    import io
+
+    with tempfile.TemporaryDirectory() as d:
+        bench = os.path.join(d, "bench.json")
+        hist = os.path.join(d, "hist.jsonl")
+
+        def run(rec):
+            with open(bench, "w") as f:
+                json.dump(rec, f)
+            buf = io.StringIO()
+            rc = check(bench, hist, out=buf)
+            return rc, buf.getvalue()
+
+        # 1. empty history bootstraps cleanly (and appends run #1)
+        rc, txt = run(_synthetic_bench())
+        assert rc == 0 and "bootstrap" in txt, f"bootstrap failed:\n{txt}"
+        # 2. second run still below min_runs=2 for gating -> bootstraps
+        rc, _ = run(_synthetic_bench(warm=95.0))
+        assert rc == 0
+        # 3. ±10% noise around the median is tolerated
+        for warm in (92.0, 108.0, 99.0):
+            rc, txt = run(_synthetic_bench(warm=warm))
+            assert rc == 0, f"noise flagged as regression:\n{txt}"
+        n_before = len(load_history(hist))
+        # 4. a collapse (higher-is-better metric at -70%) fails ...
+        rc, txt = run(_synthetic_bench(warm=30.0))
+        assert rc == 1 and "REGRESSION" in txt, f"collapse missed:\n{txt}"
+        # ... and the collapsed run was NOT appended to the baseline
+        assert len(load_history(hist)) == n_before, "regressed run appended"
+        # 5. lower-is-better blowup (rounds 6 -> 12, tol 34%) fails
+        rc, txt = run(_synthetic_bench(rounds=12))
+        assert rc == 1 and "wdos_rounds_to_drain" in txt
+        # 6. healthy run still passes after the failures above
+        rc, _ = run(_synthetic_bench(warm=101.0))
+        assert rc == 0
+        # 7. a bench without the tree arm skips it instead of failing
+        rec = _synthetic_bench()
+        del rec["tree_spec"]
+        rc, txt = run(rec)
+        assert rc == 0 and "skipped" in txt
+    print("perf_sentinel self-test: ok (bootstrap, noise, collapse, "
+          "lower-is-better, skip all behave)")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--bench", default="BENCH_serving.json",
+                    help="bench record to gate (BENCH_serving.json)")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="JSONL trajectory file (appended on pass)")
+    ap.add_argument("--window", type=int, default=8,
+                    help="gate vs the median of the last N runs")
+    ap.add_argument("--min-runs", type=int, default=2,
+                    help="bootstrap (pass) below this many prior runs")
+    ap.add_argument("--no-append", action="store_true",
+                    help="gate only; never write to --history")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the synthetic-trajectory proof and exit")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    return check(args.bench, args.history, window=args.window,
+                 min_runs=args.min_runs, append=not args.no_append)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

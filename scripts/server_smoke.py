@@ -49,6 +49,15 @@ CORE_SERIES = (
     "serving_tokens_emitted_total",
     "serving_http_requests_total",
     "serving_http_429_total",
+    # tree-speculation families: registered unconditionally (zero-valued
+    # under chain drafting, live under spec_mode="tree") so the scrape
+    # shape never depends on engine config.
+    "serving_tree_nodes_total",
+    "serving_tree_branches_total",
+    "serving_tree_accept_depth",
+    "serving_tree_compactions_total",
+    # flight-recorder anomaly counter (labelled by kind, all kinds at 0)
+    "serving_anomalies_total",
 )
 
 

@@ -41,6 +41,11 @@ share; pass ``Engine(..., trace=Tracer())`` to additionally record
 per-request span timelines exportable as Chrome-trace/Perfetto JSON
 (``tracing.py``).  Instrumentation is off-by-default-cheap and never
 adds host syncs — bit-identity is unaffected with tracing enabled.
+``EngineConfig.profile_every_n`` samples device-time attribution (each
+dispatch program bracketed + cost-stamped onto a "device" trace track),
+and every engine carries a ``flight_recorder.FlightRecorder`` — a
+bounded ring of per-round records with anomaly postmortems, served at
+``GET /debug/flight``.
 
 Internals (engine-owned, import from their modules if you must):
   paged_cache.PagedKVPool  — block-granular KV pages, free list, reservations
@@ -61,6 +66,7 @@ from repro.serving.api import (
     resolve_paged_attn_impl,
 )
 from repro.serving.async_engine import AsyncEngine, QueueFullError
+from repro.serving.flight_recorder import ANOMALY_KINDS, FlightRecorder
 from repro.serving.engine import (
     BatchConfig,
     Engine,
@@ -113,6 +119,8 @@ __all__ = [
     "NullTracer",
     "NULL_TRACER",
     "validate_chrome_trace",
+    "FlightRecorder",
+    "ANOMALY_KINDS",
     # deprecated run-to-drain shims (+ their config type)
     "serve_sd",
     "serve_apsd",

@@ -289,6 +289,13 @@ class AsyncEngine:
         """The engine's span tracer (NULL_TRACER unless one was passed)."""
         return self.engine.tracer
 
+    def flight_snapshot(self, dump: bool = False) -> dict:
+        """The engine's flight-recorder snapshot (GET /debug/flight).
+        Safe to call from the loop thread while the worker steps: the
+        recorder serializes reads against the worker's record() with its
+        own lock, so the view is internally consistent."""
+        return self.engine.flight_snapshot(dump=dump)
+
     # -- worker thread -------------------------------------------------------
 
     def _enqueue_cmd(self, cmd: tuple) -> None:

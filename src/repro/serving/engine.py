@@ -99,6 +99,7 @@ from repro.serving.api import (
     warn_deprecated_once,
 )
 from repro.serving.batcher import BatchConfig, ContinuousBatcher
+from repro.serving.flight_recorder import FlightRecorder
 from repro.serving.observability import (
     LATENCY_BUCKETS,
     RATIO_BUCKETS,
@@ -758,6 +759,26 @@ class Engine:
             self._now = lambda: time.perf_counter() - _t0
         self._init_metrics()
 
+        # sampled device-time profiling: every profile_every_n-th round,
+        # each dispatched program is bracketed with block_until_ready
+        # timing (the ONLY place the engine ever adds a device sync —
+        # timing never changes the math, so tokens stay bit-identical) and
+        # stamped once with its compile-time cost_analysis FLOPs/bytes.
+        self._profile_every = cfg.profile_every_n
+        self._profile_round = False
+        self._round_idx = 0
+        self._prog_cost: Dict[str, dict] = {}
+        self._prog_wall: Dict[str, float] = {}
+        self._prog_calls: Dict[str, int] = {}
+        # flight recorder: bounded ring of per-round records with anomaly
+        # triggers (serving/flight_recorder.py); fed at every round-wall
+        # site INCLUDING empty rounds (pool exhaustion shows up as rounds
+        # that admit and run nothing)
+        self.flight = FlightRecorder(
+            cfg.flight_ring, metrics=self.metrics, tracer=self.tracer,
+            dump_dir=cfg.flight_dump_dir,
+        )
+
         self._batcher = ContinuousBatcher(
             cfg, self._t_pool, self._d_pool,
             t_layers=target.cfg.n_layers, d_layers=draft.cfg.n_layers,
@@ -856,6 +877,32 @@ class Engine:
             "round_acceptance", "Per-round accepted/drafted fraction",
             buckets=RATIO_BUCKETS,
         )
+        # tree-speculation families (live under spec_mode="tree";
+        # registered unconditionally — and materialized at zero — so the
+        # catalog and the /metrics scrape are stable on chain engines)
+        self._m_tree_nodes = m.counter(
+            "tree_nodes_total",
+            "Draft-tree nodes proposed for verification (tree rounds)",
+        )
+        self._m_tree_branches = m.counter(
+            "tree_branches_total",
+            "Extra branches forked beyond a chain: fan-out minus one, "
+            "summed over branching nodes",
+        )
+        self._m_tree_depth = m.histogram(
+            "tree_accept_depth",
+            "Depth of the accepted root path per tree round (committed "
+            "draft tokens; the bonus token is not counted)",
+            buckets=(0.0, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0),
+        )
+        self._m_tree_compactions = m.counter(
+            "tree_compactions_total",
+            "Device compaction dispatches relocating an accepted "
+            "non-leftmost tree path's KV into chain order",
+        )
+        for fam in (self._m_tree_nodes, self._m_tree_branches,
+                    self._m_tree_compactions):
+            fam.inc(0)
         # prefix-cache families (registered unconditionally so the catalog
         # is stable; they stay at zero when EngineConfig.prefix_cache=False)
         self._m_prefix_hit_rate = m.gauge(
@@ -1028,6 +1075,111 @@ class Engine:
         """(target PoolStats, draft PoolStats) — page residency right now."""
         return self._t_pool.stats(), self._d_pool.stats()
 
+    # -- sampled device-time profiling ---------------------------------------
+
+    def _program_cost(self, program: str, fn, args) -> dict:
+        """One-time compile-time stamp per program name: XLA
+        ``cost_analysis()`` FLOPs / bytes accessed.  MUST run before the
+        program's first profiled dispatch — the step fns donate their
+        stores, so lowering from live args is only safe while the caller
+        still owns them.  Degrades to ``{}`` for callables without
+        ``.lower`` (the host-orchestrated prefill) or backends that don't
+        report cost analysis."""
+        cost = self._prog_cost.get(program)
+        if cost is None:
+            cost = {}
+            try:
+                analysis = fn.lower(*args).compile().cost_analysis()
+                if isinstance(analysis, (list, tuple)):
+                    analysis = analysis[0] if analysis else {}
+                cost = {
+                    "flops": float(analysis.get("flops", 0.0)),
+                    "bytes": float(analysis.get("bytes accessed", 0.0)),
+                }
+            except Exception:
+                pass
+            self._prog_cost[program] = cost
+        return cost
+
+    def _profiled(self, program: str, fn, *args):
+        """Run one dispatch.  On a profiled round (``profile_every_n``-th
+        step), bracket it with ``block_until_ready`` timing, accumulate
+        per-program wall/calls for ``profile_summary()``, and emit a span
+        on the tracer's "device" track carrying the program's compile-time
+        FLOPs/bytes stamp.  Off-round cost: one bool check."""
+        if not self._profile_round:
+            return fn(*args)
+        cost = self._program_cost(program, fn, args)
+        t0 = self._now()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t1 = self._now()
+        self._prog_wall[program] = self._prog_wall.get(program, 0.0) + (t1 - t0)
+        self._prog_calls[program] = self._prog_calls.get(program, 0) + 1
+        self.tracer.rec("device", program, t0, t1, cat="device", **cost)
+        return out
+
+    def profile_summary(self) -> Dict[str, dict]:
+        """Measured device-time attribution: per dispatched program, the
+        bracketed call count, summed wall seconds, and the one-time
+        cost_analysis stamp.  Empty unless ``profile_every_n > 0`` sampled
+        at least one round — ``benchmarks/roofline_report.attribution``
+        joins this against ``core/perfmodel.program_model``."""
+        out: Dict[str, dict] = {}
+        for prog, calls in self._prog_calls.items():
+            cost = self._prog_cost.get(prog) or {}
+            out[prog] = {
+                "calls": calls,
+                "wall_s": self._prog_wall.get(prog, 0.0),
+                "flops": cost.get("flops", 0.0),
+                "bytes": cost.get("bytes", 0.0),
+            }
+        return out
+
+    # -- flight-recorder feed ------------------------------------------------
+
+    def _flight_base(self) -> Tuple[float, float, int]:
+        """Counter values at round start, so the round record carries
+        per-round DELTAS (the emitted counter increments after the round
+        wall is taken, so drafted/accepted/admitted are the honest
+        per-round signals)."""
+        return (
+            self._m_drafted.value(),
+            self._m_accepted.value(),
+            self._batcher.admitted,
+        )
+
+    def _flight_round(self, base, t_step: float, t_end: float, rows: int,
+                      mode: str) -> None:
+        """Append one round record to the flight recorder (including empty
+        rounds: pool exhaustion and admission stalls MANIFEST as rounds
+        with queued work and zero rows)."""
+        if not self.flight.enabled:
+            return
+        d0, a0, adm0 = base
+        self.flight.record({
+            "round": self._batcher.step_count,
+            "mode": mode,
+            "rows": rows,
+            "wall_s": t_end - t_step,
+            "drafted": self._m_drafted.value() - d0,
+            "accepted": self._m_accepted.value() - a0,
+            "admitted": self._batcher.admitted - adm0,
+            "queued": self.queue_depth(),
+            "active": self.num_active(),
+            "free_pages": {
+                "target": self._t_pool.free_pages,
+                "draft": self._d_pool.free_pages,
+            },
+            "t": t_end,
+        })
+
+    def flight_snapshot(self, dump: bool = False) -> dict:
+        """The flight recorder's JSON-safe view (``GET /debug/flight``);
+        ``dump=True`` additionally captures the trace tail and writes a
+        postmortem file when a dump dir is configured."""
+        return self.flight.dump() if dump else self.flight.snapshot()
+
     # -- the stepwise round --------------------------------------------------
 
     def _kvq_mask(self, active):
@@ -1041,8 +1193,8 @@ class Engine:
             m[slot] = req.kv_kind == "int8"
         return jnp.asarray(m)
 
-    def _dispatch(self, step_fn, params, tokens, stores, table, lengths,
-                  kvq_dev, *extra):
+    def _dispatch(self, program, step_fn, params, tokens, stores, table,
+                  lengths, kvq_dev, *extra):
         """One logical batched forward over every storage kind.
 
         Single-kind engines run one dispatch.  Mixed engines run the step
@@ -1051,16 +1203,22 @@ class Engine:
         them), and a row only ever READS the store of its kind, so the
         wrong-kind dispatch leaves unread garbage — never corruption.
         ``extra`` forwards step-specific trailing operands (the tree
-        steps' win_pos / tree_mask)."""
+        steps' win_pos / tree_mask).  ``program`` names the dispatch for
+        the sampled device-time profiler (``_profiled`` is a passthrough
+        on unprofiled rounds)."""
         if kvq_dev is None:
             k0 = self._kinds[0]
-            logits, stores[k0] = step_fn(params, tokens, stores[k0], table,
-                                         lengths, *extra)
+            logits, stores[k0] = self._profiled(
+                program, step_fn, params, tokens, stores[k0], table,
+                lengths, *extra,
+            )
             return logits
         outs = {}
         for k in self._kinds:
-            outs[k], stores[k] = step_fn(params, tokens, stores[k], table,
-                                         lengths, *extra)
+            outs[k], stores[k] = self._profiled(
+                program, step_fn, params, tokens, stores[k], table,
+                lengths, *extra,
+            )
         return jnp.where(kvq_dev[:, None, None], outs["int8"], outs["none"])
 
     def _prefill_into(self, req: Request, model: ServingModel,
@@ -1175,11 +1333,16 @@ class Engine:
                 f"row{slot}", "admit", cat="lifecycle", rid=req.rid
             )
             kind = req.kv_kind
-            self._t_store[kind], t_kv = self._prefill_into(
+            # "prefill" brackets the whole host-orchestrated prefill (the
+            # forward + device scatter); its cost stamp degrades to {} —
+            # _prefill_into is not a single jitted program
+            self._t_store[kind], t_kv = self._profiled(
+                "prefill", self._prefill_into,
                 req, self.target, self._t_iface, req.t_seq,
                 self._t_store[kind], self._t_tables, slot, "target",
             )
-            self._d_store[kind], d_kv = self._prefill_into(
+            self._d_store[kind], d_kv = self._profiled(
+                "prefill", self._prefill_into,
                 req, self.draft, self._d_iface, req.d_seq,
                 self._d_store[kind], self._d_tables, slot, "draft",
             )
@@ -1215,6 +1378,11 @@ class Engine:
         tree-speculation round instead: top-k branch drafting into a
         fixed-width window, one causally-tree-masked verify dispatch, and
         the lossless multi-branch accept walk (core/speculative.py)."""
+        self._round_idx += 1
+        self._profile_round = (
+            self._profile_every > 0
+            and self._round_idx % self._profile_every == 0
+        )
         if self.cfg.spec_mode == "tree":
             if self.cfg.par_mode == "wdos":
                 return self._step_fused_tree()
@@ -1226,12 +1394,14 @@ class Engine:
     def _step_two_phase(self) -> List[RequestOutput]:
         cfg = self.cfg
         t_step = self._now()
+        fb = self._flight_base()
         self._admit()
         active = self._batcher.active()
         if not active:
             self._batcher.step_count += 1
             self._m_steps.inc()
             self._refresh_gauges()
+            self._flight_round(fb, t_step, self._now(), 0, "two_phase")
             return []
 
         dls = {slot: req.controller.draft_len() for slot, req in active}
@@ -1261,7 +1431,7 @@ class Engine:
         q_cols: List[np.ndarray] = []  # per-position draft logits (sampled rounds)
         for j in range(round_dl + 1):
             logits = self._dispatch(
-                self._d_step, self.draft.params, cur_dev[:, None],
+                "draft", self._d_step, self.draft.params, cur_dev[:, None],
                 self._d_store, d_table, d_len0 + j, kvq_dev,
             )
             if j < round_dl:
@@ -1298,7 +1468,7 @@ class Engine:
         window[:, 0] = cur
         window[:, 1:] = drafts
         v_logits = self._dispatch(
-            self._t_step, self.target.params, jnp.asarray(window),
+            "verify", self._t_step, self.target.params, jnp.asarray(window),
             self._t_store, t_table, t_len0, kvq_dev,
         )
         p_logits = np.asarray(v_logits)  # (B, round_dl+1, V)
@@ -1366,6 +1536,7 @@ class Engine:
             cat="step", par_mode="off", rows=len(active),
         )
         self._refresh_gauges()
+        self._flight_round(fb, t_step, t_end, len(active), "two_phase")
 
         return [self._output_for(req, t_end) for req in progressed]
 
@@ -1404,6 +1575,11 @@ class Engine:
         self._m_drafted.inc(drafted_n)
         self._m_accepted.inc(n_acc)
         self._m_round_accept.observe(n_acc / dl if dl else 0.0)
+        self._m_tree_nodes.inc(drafted_n)
+        # a chain of drafted_n nodes has drafted_n DISTINCT parents (each
+        # node its own); every duplicate parent is one extra forked branch
+        self._m_tree_branches.inc(drafted_n - len(set(parents)))
+        self._m_tree_depth.observe(n_acc)
         if self.tracer.enabled:
             self.tracer.instant(
                 f"row{slot}", "commit", cat="commit",
@@ -1438,8 +1614,17 @@ class Engine:
     def _compact_pools(self, moves_t, moves_d) -> None:
         """Flush queued tree-compaction moves: one fixed-width
         ``_compact_slots`` dispatch per (pool, kind) that has any, padded
-        with scratch-page self-copies so each compiles once."""
+        with scratch-page self-copies so each compiles once.  Each
+        dispatch counts in ``tree_compactions_total`` and the flush spans
+        the engine track (a tree round otherwise hides its KV relocation
+        cost in the step gap)."""
+        if not any(
+            src for mv in (moves_t, moves_d) for (src, _) in mv.values()
+        ):
+            return
+        t0 = self._now()
         cap = self.cfg.max_batch * self.cfg.tree_budget
+        n_dispatched = 0
         for moves, stores, pool in (
             (moves_t, self._t_store, self._t_pool),
             (moves_d, self._d_store, self._d_pool),
@@ -1452,9 +1637,17 @@ class Engine:
                 d = np.full((cap,), scratch, np.int64)
                 s[: len(src)] = src
                 d[: len(dst)] = dst
-                stores[k] = _compact_slots(
-                    stores[k], jnp.asarray(s), jnp.asarray(d)
+                stores[k] = self._profiled(
+                    "compaction", _compact_slots,
+                    stores[k], jnp.asarray(s), jnp.asarray(d),
                 )
+                self._m_tree_compactions.inc()
+                n_dispatched += 1
+        if self.tracer.enabled:
+            self.tracer.rec(
+                "engine", "compaction", t0, self._now(),
+                cat="phase", dispatches=n_dispatched,
+            )
 
     def _step_two_phase_tree(self) -> List[RequestOutput]:
         """Tree-speculation round, two-phase schedule: grow every active
@@ -1467,12 +1660,14 @@ class Engine:
         round of the same depth (round_depth + 1 draft + 1 verify)."""
         cfg = self.cfg
         t_step = self._now()
+        fb = self._flight_base()
         self._admit()
         active = self._batcher.active()
         if not active:
             self._batcher.step_count += 1
             self._m_steps.inc()
             self._refresh_gauges()
+            self._flight_round(fb, t_step, self._now(), 0, "two_phase_tree")
             return []
 
         w = cfg.tree_budget + 1
@@ -1514,7 +1709,7 @@ class Engine:
         for j in range(round_depth + 1):
             tok_dev, pos_dev, tm_dev = window_inputs()
             logits = self._dispatch(
-                self._d_tree_step, self.draft.params, tok_dev,
+                "tree_draft", self._d_tree_step, self.draft.params, tok_dev,
                 self._d_store, d_table, d_len0, kvq_dev, pos_dev, tm_dev,
             )
             if j < round_depth:
@@ -1524,20 +1719,20 @@ class Engine:
                         _sample_tree_level(req, cfg, l_np[slot])
         t_verify0 = self._now()
         self.tracer.rec(
-            "engine", "draft_phase", t_draft0, t_verify0,
-            cat="phase", rows=len(active), dl=round_depth,
+            "engine", "tree_draft", t_draft0, t_verify0,
+            cat="phase", rows=len(active), depth=round_depth, spec="tree",
         )
 
         # ---- verify phase: one tree-masked batched pass over full trees
         tok_dev, pos_dev, tm_dev = window_inputs()
         v_logits = self._dispatch(
-            self._t_tree_step, self.target.params, tok_dev,
+            "tree_verify", self._t_tree_step, self.target.params, tok_dev,
             self._t_store, t_table, t_len0, kvq_dev, pos_dev, tm_dev,
         )
         p_logits = np.asarray(v_logits)  # (B, W, V)
         self.tracer.rec(
-            "engine", "verify_phase", t_verify0, self._now(),
-            cat="phase", rows=len(active),
+            "engine", "tree_verify", t_verify0, self._now(),
+            cat="phase", rows=len(active), spec="tree",
         )
 
         # ---- per-request accept / commit / compaction
@@ -1572,6 +1767,7 @@ class Engine:
             cat="step", par_mode="off", rows=len(active),
         )
         self._refresh_gauges()
+        self._flight_round(fb, t_step, t_end, len(active), "two_phase_tree")
 
         return [self._output_for(req, t_end) for req in progressed]
 
@@ -1630,11 +1826,13 @@ class Engine:
         slots), so each round streams tokens for every active request."""
         cfg = self.cfg
         t_step = self._now()
+        fb = self._flight_base()
         self._admit()
         if not self._batcher.active():
             self._batcher.step_count += 1
             self._m_steps.inc()
             self._refresh_gauges()
+            self._flight_round(fb, t_step, self._now(), 0, "fused")
             return []
         wv = cfg.max_dl + 1  # fixed verify width: one compiled program
         horizon = cfg.max_dl + 2
@@ -1704,7 +1902,8 @@ class Engine:
                 vs, ds = {}, {}
                 for k in self._kinds:
                     (vs[k], ds[k], self._t_store[k],
-                     self._d_store[k]) = self._fused_step(
+                     self._d_store[k]) = self._profiled(
+                        "fused_wdos", self._fused_step,
                         self.target.params, self.draft.params,
                         v_tok_dev, d_tok_dev,
                         self._t_store[k], self._d_store[k],
@@ -1723,7 +1922,8 @@ class Engine:
                 d_len_dev, dm_dev = jnp.asarray(d_len), jnp.asarray(d_mask)
                 ds = {}
                 for k in self._kinds:
-                    ds[k], self._d_store[k] = self._draft_slot_step(
+                    ds[k], self._d_store[k] = self._profiled(
+                        "draft_slot", self._draft_slot_step,
                         self.draft.params, d_tok_dev, self._d_store[k],
                         d_table, d_len_dev, dm_dev,
                     )
@@ -1846,6 +2046,7 @@ class Engine:
             cat="step", par_mode="wdos", rows=len(touched),
         )
         self._refresh_gauges()
+        self._flight_round(fb, t_step, t_end, len(touched), "fused")
 
         return [self._output_for(req, t_end) for req in touched.values()]
 
@@ -1861,11 +2062,13 @@ class Engine:
         tokens are identical to the two-phase tree scheduler's."""
         cfg = self.cfg
         t_step = self._now()
+        fb = self._flight_base()
         self._admit()
         if not self._batcher.active():
             self._batcher.step_count += 1
             self._m_steps.inc()
             self._refresh_gauges()
+            self._flight_round(fb, t_step, self._now(), 0, "fused_tree")
             return []
         w = cfg.tree_budget + 1  # fixed window width, BOTH sides
         horizon = min(cfg.max_dl, cfg.tree_budget) + 2
@@ -1936,7 +2139,8 @@ class Engine:
                 vs, ds = {}, {}
                 for k in self._kinds:
                     (vs[k], ds[k], self._t_store[k],
-                     self._d_store[k]) = self._fused_tree_step(
+                     self._d_store[k]) = self._profiled(
+                        "fused_tree", self._fused_tree_step,
                         self.target.params, self.draft.params, *heads,
                         self._t_store[k], self._d_store[k], *tails,
                     )
@@ -1955,7 +2159,8 @@ class Engine:
                 )
                 ds = {}
                 for k in self._kinds:
-                    ds[k], self._d_store[k] = self._draft_tree_slot_step(
+                    ds[k], self._d_store[k] = self._profiled(
+                        "tree_draft_slot", self._draft_tree_slot_step,
                         self.draft.params, d_tok_dev, self._d_store[k],
                         *tails,
                     )
@@ -1982,16 +2187,17 @@ class Engine:
                 self.tracer.rec(
                     "engine", "fused_slot", slot_t0, slot_t1, cat="fused",
                     kind=kind, draft_rows=len(plan.draft_rows),
-                    verify_rows=len(plan.verify_rows),
+                    verify_rows=len(plan.verify_rows), spec="tree",
                 )
                 for slot in plan.draft_rows:
                     self.tracer.rec(
-                        f"row{slot}", "draft", slot_t0, slot_t1,
+                        f"row{slot}", "tree_draft", slot_t0, slot_t1,
                         cat="draft", rid=by_slot[slot].rid,
+                        depth=by_slot[slot].tree_depth,
                     )
                 for slot in plan.verify_rows:
                     self.tracer.rec(
-                        f"row{slot}", "verify", slot_t0, slot_t1,
+                        f"row{slot}", "tree_verify", slot_t0, slot_t1,
                         cat="verify", rid=by_slot[slot].rid,
                     )
 
@@ -2034,6 +2240,7 @@ class Engine:
             cat="step", par_mode="wdos", rows=len(touched),
         )
         self._refresh_gauges()
+        self._flight_round(fb, t_step, t_end, len(touched), "fused_tree")
 
         return [self._output_for(req, t_end) for req in touched.values()]
 

@@ -183,7 +183,9 @@ class CompletionServer:
 
     # -- connection handling -------------------------------------------------
 
-    _ROUTES = ("/healthz", "/stats", "/metrics", "/v1/completions")
+    _ROUTES = (
+        "/healthz", "/stats", "/metrics", "/debug/flight", "/v1/completions",
+    )
 
     def _count(self, route: str, status: int) -> None:
         self._m_http.labels(route=route, status=str(status)).inc()
@@ -202,20 +204,22 @@ class CompletionServer:
                     return  # client went away before sending a full request
                 except asyncio.LimitOverrunError:
                     raise _HTTPError(400, "headers too large")
-                route = path if path in self._ROUTES else "other"
+                # /debug/flight takes a ?dump=1 query; strip it for routing
+                bare = path.split("?", 1)[0]
+                route = bare if bare in self._ROUTES else "other"
                 self.requests_served += 1
                 self.engine.tracer.instant(
                     "http", "request", cat="http", method=method, route=route
                 )
-                if path == "/healthz" and method == "GET":
+                if bare == "/healthz" and method == "GET":
                     writer.write(_json_response(200, {"status": "ok"}))
                     self._count(route, 200)
-                elif path == "/stats" and method == "GET":
+                elif bare == "/stats" and method == "GET":
                     stats = self.engine.stats()
                     stats["requests_served"] = self.requests_served
                     writer.write(_json_response(200, stats))
                     self._count(route, 200)
-                elif path == "/metrics" and method == "GET":
+                elif bare == "/metrics" and method == "GET":
                     # count BEFORE rendering so the scrape sees itself —
                     # Prometheus convention, and it keeps the series
                     # non-empty from the very first scrape
@@ -224,11 +228,17 @@ class CompletionServer:
                         200, self.engine.metrics.render().encode(),
                         "text/plain; version=0.0.4",
                     ))
-                elif path == "/v1/completions" and method == "POST":
+                elif bare == "/debug/flight" and method == "GET":
+                    dump = "dump=1" in (path.split("?", 1) + [""])[1]
+                    writer.write(_json_response(
+                        200, self.engine.flight_snapshot(dump=dump)
+                    ))
+                    self._count(route, 200)
+                elif bare == "/v1/completions" and method == "POST":
                     await self._completion(reader, writer, body)
                     self._count(route, 200)
-                elif path in self._ROUTES:
-                    raise _HTTPError(405, f"{method} not allowed on {path}")
+                elif bare in self._ROUTES:
+                    raise _HTTPError(405, f"{method} not allowed on {bare}")
                 else:
                     raise _HTTPError(404, f"no route for {path}")
             except _HTTPError as e:

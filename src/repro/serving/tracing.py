@@ -39,7 +39,7 @@ import json
 import threading
 import time
 from contextlib import contextmanager
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 __all__ = ["Tracer", "NullTracer", "NULL_TRACER", "validate_chrome_trace"]
 
@@ -183,14 +183,28 @@ NULL_TRACER = NullTracer()
 def validate_chrome_trace(obj: dict) -> List[str]:
     """Schema check for an exported trace: returns a list of problems
     (empty = valid).  Used by the trace-export tests and the CI smoke so a
-    regression can never silently produce a file Perfetto rejects."""
+    regression can never silently produce a file Perfetto rejects.
+
+    Beyond the per-event field checks, two track-level rules:
+
+    * every non-metadata event's tid must be introduced by a
+      ``thread_name`` metadata event (Perfetto renders unnamed tids as
+      anonymous tracks — always a tracer bug here, since ``Tracer``
+      emits the M record at first use of a track);
+    * spans on a ``device*`` track must not overlap: the device executes
+      one bracketed dispatch at a time (``block_until_ready`` between
+      programs), so overlap means broken attribution.  Host tracks nest
+      spans (step ⊃ phase) and are exempt.  A 1 µs slack absorbs the
+      microsecond rounding + min-duration clamp of ``to_chrome_trace``.
+    """
     problems: List[str] = []
     if not isinstance(obj, dict) or "traceEvents" not in obj:
         return ["top level must be a dict with 'traceEvents'"]
     events = obj["traceEvents"]
     if not isinstance(events, list):
         return ["'traceEvents' must be a list"]
-    last_ts_by_tid: Dict[int, float] = {}
+    track_by_tid: Dict[int, str] = {}
+    device_spans: Dict[int, List[Tuple[float, float, int]]] = {}
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             problems.append(f"event {i}: not a dict")
@@ -203,12 +217,32 @@ def validate_chrome_trace(obj: dict) -> List[str]:
             if key not in ev:
                 problems.append(f"event {i}: missing {key!r}")
         if ph == "M":
+            if ev.get("name") == "thread_name":
+                track = (ev.get("args") or {}).get("name")
+                if isinstance(track, str) and "tid" in ev:
+                    track_by_tid[ev["tid"]] = track
             continue
+        tid = ev.get("tid")
+        if tid is not None and tid not in track_by_tid:
+            problems.append(
+                f"event {i}: tid {tid} has no thread_name metadata"
+            )
         ts = ev.get("ts")
         if not isinstance(ts, (int, float)) or ts < 0:
             problems.append(f"event {i}: bad ts {ts!r}")
             continue
-        if ph == "X" and not isinstance(ev.get("dur"), (int, float)):
+        dur = ev.get("dur")
+        if ph == "X" and not isinstance(dur, (int, float)):
             problems.append(f"event {i}: complete event missing dur")
-        last_ts_by_tid[ev.get("tid", -1)] = ts
+        elif ph == "X" and str(track_by_tid.get(tid, "")).startswith("device"):
+            device_spans.setdefault(tid, []).append((ts, ts + dur, i))
+    for tid, spans in device_spans.items():
+        spans.sort()
+        for (_, prev_end, prev_i), (ts, _, i) in zip(spans, spans[1:]):
+            if prev_end > ts + 1:  # 1 us slack for rounding/min-dur clamp
+                problems.append(
+                    f"device track tid {tid}: span at event {prev_i} "
+                    f"overlaps span at event {i} "
+                    f"(end {prev_end} > start {ts})"
+                )
     return problems

@@ -1,0 +1,126 @@
+"""Perf-regression sentinel (scripts/perf_sentinel.py) on synthetic
+trajectories: a genuine collapse is caught (exit 1, not appended), run
+noise inside the tolerances passes, the first runs bootstrap cleanly,
+and missing metrics are skipped rather than failed.  The script lives
+outside the package, so it is loaded by file path.
+"""
+import importlib.util
+import io
+import json
+import os
+
+import pytest
+
+_SENTINEL = os.path.join(
+    os.path.dirname(__file__), "..", "scripts", "perf_sentinel.py"
+)
+
+
+@pytest.fixture(scope="module")
+def ps():
+    spec = importlib.util.spec_from_file_location("perf_sentinel", _SENTINEL)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _bench(ps, **kw):
+    return ps._synthetic_bench(**kw)
+
+
+def _run(ps, tmp_path, rec, window=8):
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps(rec))
+    buf = io.StringIO()
+    rc = ps.check(str(bench), str(tmp_path / "hist.jsonl"),
+                  window=window, out=buf)
+    return rc, buf.getvalue()
+
+
+def test_extract_headline_paths(ps):
+    h = ps.extract_headline(_bench(ps, warm=123.0, rounds=7, tree=1.25,
+                                   ttft=0.033))
+    assert h == {
+        "warm_tokens_per_s": 123.0,
+        "wdos_rounds_to_drain": 7.0,
+        "tree_accepted_per_round": 1.25,
+        "ttft_p50_s": 0.033,
+    }
+    # ttft comes from the HIGHEST arrival rate on the wdos side
+    rec = _bench(ps)
+    rec["async_load"]["wdos"]["2.0"] = {"ttft_s": {"p50": 9.9}}
+    assert ps.extract_headline(rec)["ttft_p50_s"] == 0.05
+
+
+def test_bootstrap_then_gate(ps, tmp_path):
+    # runs 1 and 2 bootstrap (below min_runs prior entries) and append
+    for i in range(2):
+        rc, txt = _run(ps, tmp_path, _bench(ps))
+        assert rc == 0 and "bootstrap" in txt, txt
+    # run 3 is actually gated
+    rc, txt = _run(ps, tmp_path, _bench(ps))
+    assert rc == 0 and "| ok |" in txt
+
+
+def test_noise_tolerated(ps, tmp_path):
+    for warm in (100.0, 104.0, 96.0, 101.0):
+        rc, txt = _run(ps, tmp_path, _bench(ps, warm=warm))
+        assert rc == 0, txt
+    # -20% on a 40%-tolerance wall-clock metric is noise, not regression
+    rc, txt = _run(ps, tmp_path, _bench(ps, warm=80.0))
+    assert rc == 0, txt
+
+
+def test_regression_caught_and_not_appended(ps, tmp_path):
+    for _ in range(3):
+        assert _run(ps, tmp_path, _bench(ps))[0] == 0
+    hist = tmp_path / "hist.jsonl"
+    n_before = len(ps.load_history(str(hist)))
+    # warm tokens/s at -70% breaches the 40% tolerance
+    rc, txt = _run(ps, tmp_path, _bench(ps, warm=30.0))
+    assert rc == 1 and "REGRESSION" in txt and "warm_tokens_per_s" in txt
+    # the collapsed run must not drag the baseline down
+    assert len(ps.load_history(str(hist))) == n_before
+    # and a healthy run right after still passes
+    assert _run(ps, tmp_path, _bench(ps))[0] == 0
+
+
+def test_lower_is_better_direction(ps, tmp_path):
+    for _ in range(3):
+        assert _run(ps, tmp_path, _bench(ps, rounds=6))[0] == 0
+    # rounds-to-drain DOUBLING is a regression (tolerance 34%)...
+    rc, txt = _run(ps, tmp_path, _bench(ps, rounds=12))
+    assert rc == 1 and "wdos_rounds_to_drain" in txt
+    # ...while 6 -> 7 rounds is within tolerance
+    assert _run(ps, tmp_path, _bench(ps, rounds=7))[0] == 0
+    # same for TTFT: 100% tolerance means 2.5x fails, 1.5x passes
+    assert _run(ps, tmp_path, _bench(ps, ttft=0.125))[0] == 1
+    assert _run(ps, tmp_path, _bench(ps, ttft=0.075))[0] == 0
+
+
+def test_missing_metric_is_skipped(ps, tmp_path):
+    rec = _bench(ps)
+    del rec["tree_spec"]
+    del rec["async_load"]
+    rc, txt = _run(ps, tmp_path, rec)
+    assert rc == 0 and txt.count("skipped") >= 2
+    # history entries carry None for the missing metrics; later gated
+    # runs must not trip over them
+    for _ in range(3):
+        assert _run(ps, tmp_path, _bench(ps))[0] == 0
+
+
+def test_corrupt_history_lines_skipped(ps, tmp_path):
+    hist = tmp_path / "hist.jsonl"
+    hist.write_text('not json\n{"no": "headline"}\n'
+                    + json.dumps({"headline": {"warm_tokens_per_s": 100.0}})
+                    + "\n")
+    entries = ps.load_history(str(hist))
+    assert len(entries) == 1
+    rc, _ = _run(ps, tmp_path, _bench(ps))
+    assert rc == 0
+
+
+def test_self_test_passes(ps, capsys):
+    assert ps.self_test() == 0
+    assert "ok" in capsys.readouterr().out
